@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: timing, CSV/report emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "emit", "banner"]
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time (seconds) of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, value, unit: str = "", **extra) -> None:
+    """One CSV-ish result line: ``name,value,unit,k=v,...``"""
+    tail = "".join(f",{k}={v}" for k, v in extra.items())
+    print(f"RESULT,{name},{value},{unit}{tail}", flush=True)
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} ===", flush=True)

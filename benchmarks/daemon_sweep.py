@@ -1,0 +1,55 @@
+"""Placement-daemon analysis throughput — the paper's "constant time per
+key" claim, measured: keys/second for Algorithm 3 sweeps at growing key
+counts, pure-JAX vs the Pallas ownership_sweep kernel (interpret mode on
+CPU, so the Pallas numbers here validate semantics; MXU-free VPU tiling is
+what the kernel buys on real TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, emit, time_fn
+from repro.core.metadata import create_store
+from repro.core.placement import sweep
+from repro.kernels.ownership_sweep.ops import ownership_sweep
+
+
+def main(sizes=(1_000, 10_000, 100_000, 1_000_000), n_nodes: int = 16) -> None:
+    banner("daemon_sweep: Algorithm 3 analysis throughput")
+    for k in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(k % 2**31), 3)
+        counts = jax.random.randint(ks[0], (k, n_nodes), 0, 100).astype(jnp.int32)
+        hosts = jax.random.uniform(ks[1], (k, n_nodes)) > 0.8
+        store = create_store(k, n_nodes)._replace(
+            access_counts=counts,
+            hosts=hosts,
+            live=jnp.ones((k,), bool),
+        )
+        h = 1.0 / n_nodes
+
+        t_jax = time_fn(
+            lambda: jax.block_until_ready(sweep(store, h, 0)[0].owners), iters=5
+        )
+        emit("daemon_sweep_purejax", round(k / t_jax / 1e6, 3), "Mkeys/s", keys=k)
+
+        fcounts = counts.astype(jnp.float32)
+        live = jnp.ones((k,), bool)
+        last = jnp.zeros((k,), jnp.int32)
+        t_pl = time_fn(
+            lambda: jax.block_until_ready(
+                ownership_sweep(fcounts, hosts, live, last, 0, h=h)[0]
+            ),
+            iters=3,
+        )
+        emit(
+            "daemon_sweep_pallas_interp",
+            round(k / t_pl / 1e6, 3),
+            "Mkeys/s",
+            keys=k,
+            note="interpret-mode-on-CPU",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Figure 3 — Skewed (zipfian 90/10) Object Access Distribution.
+
+Same grid as Figure 2 but with the paper's skewed workload: 10% of data
+items receive 90% of traffic. Adds a beyond-paper affinity sweep showing how
+the Optimized scenario degrades as request sources for a key spread across
+nodes (the paper's DNS-affinity assumption weakening).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import banner, emit
+from repro.kvsim import (
+    ClusterConfig,
+    Scenario,
+    WorkloadConfig,
+    run_experiment,
+    run_scenario,
+)
+
+
+def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
+    banner("fig3: skewed (zipfian 90/10) object access (paper Figure 3)")
+    res = run_experiment(
+        read_fractions=(1.0, 0.9, 0.75, 0.5),
+        skewed=True,
+        iterations=iterations,
+        num_requests=num_requests,
+    )
+    for scenario, rows in res["scenarios"].items():
+        for row in rows:
+            emit(
+                "fig3_skewed",
+                round(row["throughput"], 2),
+                "ops/s",
+                scenario=scenario,
+                read_fraction=row["read_fraction"],
+                ci99=round(row["ci99"], 2),
+                hit_rate=round(row["hit_rate"], 4),
+            )
+    opt = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["optimized"]}
+    rem = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["remote"]}
+    loc = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["local"]}
+    for rf in opt:
+        emit(
+            "fig3_validation",
+            round(opt[rf] / rem[rf], 2),
+            "x_over_remote",
+            read_fraction=rf,
+            frac_of_local=round(opt[rf] / loc[rf], 3),
+        )
+
+    banner("fig3b: affinity sweep (beyond paper)")
+    cluster = ClusterConfig()
+    for affinity in (1.0, 0.95, 0.9, 0.8, 0.6, 1.0 / 3.0):
+        wl = WorkloadConfig(
+            num_requests=num_requests // 2, skewed=True, affinity=affinity
+        )
+        r = run_scenario(wl, cluster, Scenario.OPTIMIZED, seed=0)
+        emit(
+            "fig3b_affinity",
+            round(r.throughput_ops_s, 2),
+            "ops/s",
+            affinity=round(affinity, 3),
+            hit_rate=round(r.hit_rate, 4),
+            repl_moves=int(r.replication_moves),
+        )
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Aggregate the dry-run sweep (benchmarks/results/dryrun/*.json) into the
+§Roofline table: per (arch × shape × mesh) the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device memory."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import banner, emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            with open(path) as f:
+                out.append(json.load(f))
+        except (json.JSONDecodeError, OSError):
+            continue
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("skipped"):
+        return f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} SKIP ({r['skipped'][:40]}...)"
+    if not r.get("ok"):
+        return f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} FAILED {r.get('error', '')[:60]}"
+    t = r["roofline"]
+    mem = r["memory"]["peak_bytes_per_device"] / 1e9
+    return (
+        f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+        f"c={t['compute_s']:9.4f}s m={t['memory_s']:9.4f}s x={t['collective_s']:9.4f}s "
+        f"dom={t['dominant']:10s} useful={t.get('useful_flops_frac', 0):5.2f} "
+        f"roofline={t.get('roofline_frac', 0):7.4f} mem={mem:5.1f}GB"
+    )
+
+
+def main() -> None:
+    banner("roofline: (arch x shape x mesh) from the dry-run sweep")
+    rows = load_all()
+    if not rows:
+        print("no dry-run results yet — run benchmarks/dryrun_sweep.sh")
+        return
+    for r in rows:
+        print(fmt_row(r))
+        if r.get("ok") and not r.get("skipped"):
+            t = r["roofline"]
+            emit(
+                "roofline",
+                round(t.get("roofline_frac", 0.0), 5),
+                "frac",
+                arch=r["arch"],
+                shape=r["shape"],
+                mesh=r["mesh"],
+                dominant=t["dominant"],
+                compute_s=round(t["compute_s"], 5),
+                memory_s=round(t["memory_s"], 5),
+                collective_s=round(t["collective_s"], 5),
+                fits=r["memory"]["fits_16GB"],
+            )
+    ok = [r for r in rows if r.get("ok") and not r.get("skipped")]
+    fail = [r for r in rows if not r.get("ok")]
+    skip = [r for r in rows if r.get("skipped")]
+    print(f"\n{len(ok)} ok / {len(skip)} skipped / {len(fail)} failed of {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

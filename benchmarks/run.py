@@ -1,0 +1,55 @@
+"""Benchmark entry point: ``python -m benchmarks.run [names...]``.
+
+One module per paper table/figure + the beyond-paper integration benches:
+
+  fig2_uniform      paper Figure 2 (uniform access, Local/Remote/Optimized)
+  fig3_skewed       paper Figure 3 (zipfian 90/10) + affinity sweep
+  daemon_sweep      Algorithm 3 analysis throughput (pure JAX vs Pallas)
+  moe_placement     hot-expert replica cache on the reduced MoE
+  hot_embedding     hot-row cache hit rates + HBM bytes saved
+  serving_sessions  session-cache migration vs static placement
+  roofline          aggregate the dry-run sweep into the §Roofline table
+
+Every line of output in ``RESULT,name,value,unit,k=v`` form is machine
+collectable; EXPERIMENTS.md quotes them directly.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "fig2_uniform",
+    "fig3_skewed",
+    "daemon_sweep",
+    "moe_placement",
+    "hot_embedding",
+    "serving_sessions",
+    "roofline",
+]
+
+# CPU-friendly iteration counts for the figure benches (full fidelity is
+# iterations=5, num_requests=100_000 — the EXPERIMENTS.md numbers).
+FAST_KWARGS = {
+    "fig2_uniform": {"iterations": 3, "num_requests": 50_000},
+    "fig3_skewed": {"iterations": 3, "num_requests": 50_000},
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or MODULES
+    full = "--full" in names
+    names = [n for n in names if not n.startswith("--")]
+    if not names:
+        names = MODULES
+    t0 = time.time()
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        kwargs = {} if full else FAST_KWARGS.get(name, {})
+        mod.main(**kwargs)
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

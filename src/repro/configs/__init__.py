@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduced
+from repro.configs.registry import ARCH_IDS, get_config, get_shape, cells

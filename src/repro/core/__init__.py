@@ -1,0 +1,75 @@
+"""Core Redynis engine: traffic-aware dynamic repartitioning, in JAX.
+
+The paper's contribution as a composable library:
+
+  ownership   — ownership coefficient math (eqs. 1-3)
+  metadata    — the per-key metadata layer (paper §6.2), struct-of-arrays
+  placement   — Algorithm 3 sweep + the offline placement daemon
+  traffic     — access-statistics accumulators for ML-state objects
+  costmodel   — TPU replication economics (beyond-paper, reduces to Alg. 3)
+  repartition — plan → fused-collective enforcement with double buffering
+"""
+
+from repro.core.costmodel import TPU_V5E, HardwareModel, budget_plan, replication_gain
+from repro.core.metadata import (
+    MetadataStore,
+    create_store,
+    local_hit,
+    owner_of,
+    record_accesses,
+    record_new_keys,
+)
+from repro.core.ownership import (
+    eligible_hosts,
+    max_coefficient,
+    ownership_fraction,
+    validate_coefficient,
+)
+from repro.core.placement import PlacementDaemon, PlacementPlan, apply_plan, sweep
+from repro.core.repartition import (
+    CommitState,
+    Moves,
+    ReplicaCache,
+    create_cache,
+    plan_moves,
+    publish_and_fill,
+)
+from repro.core.traffic import (
+    TrafficStats,
+    create_stats,
+    decay_stats,
+    fold_counts,
+    fold_events,
+)
+
+__all__ = [
+    "TPU_V5E",
+    "HardwareModel",
+    "budget_plan",
+    "replication_gain",
+    "MetadataStore",
+    "create_store",
+    "local_hit",
+    "owner_of",
+    "record_accesses",
+    "record_new_keys",
+    "eligible_hosts",
+    "max_coefficient",
+    "ownership_fraction",
+    "validate_coefficient",
+    "PlacementDaemon",
+    "PlacementPlan",
+    "apply_plan",
+    "sweep",
+    "CommitState",
+    "Moves",
+    "ReplicaCache",
+    "create_cache",
+    "plan_moves",
+    "publish_and_fill",
+    "TrafficStats",
+    "create_stats",
+    "decay_stats",
+    "fold_counts",
+    "fold_events",
+]

@@ -1,0 +1,165 @@
+"""Traffic-aware MoE expert placement — Redynis integration #1 (flagship).
+
+Objects are (layer, expert) pairs, nodes are EP ranks (the mesh's model
+axis), traffic is the per-layer routing histogram the MoE layer emits every
+step. The daemon runs the paper's full pipeline:
+
+  1. fold routing counts into the [L·E, N] metadata (EMA-decayed),
+  2. sweep with the ownership coefficient (the Pallas ``ownership_sweep``
+     kernel — pure-JAX fallback off-TPU is the same oracle the tests pin),
+  3. budget the plan to R replica slots per layer (costmodel.budget_plan —
+     the paper's "minimal memory usage" assumption made explicit),
+  4. emit per-layer hot sets ``hot_ids [L, R]`` which the MoE layer consumes
+     — replica weights are gathered from live params inside the forward
+     pass, so placement changes commit at a step boundary without ever
+     blocking a step (the paper's non-blocking requirement).
+
+Zipfian expert traffic is near-uniform across EP ranks (every rank sees the
+same hot experts), so the ownership test typically qualifies *all* ranks for
+a hot expert — global replication — exactly the regime the H ≤ 1/n
+constraint (eq. 3) was designed for. The machinery still handles skewed
+per-rank traffic (e.g. domain-sharded data) for free, which the property
+tests exercise.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.ownership import validate_coefficient
+
+__all__ = ["ExpertPlacementState", "ExpertPlacement"]
+
+
+class ExpertPlacementState(NamedTuple):
+    counts: Array  # [L, E, N] f32 EMA traffic g((l,e), n)
+    hot_ids: Array  # [L, R] int32 current replica sets (-1 = empty slot)
+    step: Array  # [] int32 steps folded since start
+    sweeps: Array  # [] int32 sweeps performed
+    moved: Array  # [] f32 replica slots changed by the last sweep
+
+
+class ExpertPlacement:
+    """Host-side daemon driver; all math is jitted device code."""
+
+    def __init__(
+        self,
+        num_layers: int,
+        num_experts: int,
+        num_nodes: int,
+        slots: int,
+        *,
+        h: float | None = None,
+        decay: float = 0.98,
+        period: int = 50,
+        use_kernel: bool = True,
+    ) -> None:
+        if h is None or h <= 0:
+            h = 1.0 / num_nodes
+        validate_coefficient(h, num_nodes)
+        self.l, self.e, self.n = num_layers, num_experts, num_nodes
+        self.r = slots
+        self.h = h
+        self.decay = decay
+        self.period = period
+        self.use_kernel = use_kernel
+
+    def init_state(self) -> ExpertPlacementState:
+        # Start with an arbitrary warm set (experts 0..R-1) so the reduced
+        # cold capacity is never starved before the first sweep.
+        hot = jnp.broadcast_to(
+            jnp.arange(self.r, dtype=jnp.int32)[None, :], (self.l, self.r)
+        )
+        return ExpertPlacementState(
+            counts=jnp.zeros((self.l, self.e, self.n), jnp.float32),
+            hot_ids=hot,
+            step=jnp.zeros((), jnp.int32),
+            sweeps=jnp.zeros((), jnp.int32),
+            moved=jnp.zeros((), jnp.float32),
+        )
+
+    # -- step-time fold (cheap, inside or right after the train step) -------
+    def fold(
+        self, state: ExpertPlacementState, layer_counts: Array, group_nodes: Array
+    ) -> ExpertPlacementState:
+        """layer_counts [L, G, E] from the model; group_nodes [G] int32 maps
+        dispatch groups to EP ranks (launch layer knows the mesh layout)."""
+        onehot = jax.nn.one_hot(group_nodes, self.n, dtype=jnp.float32)  # [G, N]
+        delta = jnp.einsum("lge,gn->len", layer_counts, onehot)
+        return state._replace(counts=state.counts + delta, step=state.step + 1)
+
+    def due(self, step: int) -> bool:
+        return step > 0 and step % self.period == 0
+
+    # -- sweep (Algorithm 3 + replica budget), jitted ------------------------
+    @partial(jax.jit, static_argnums=(0,))
+    def sweep(self, state: ExpertPlacementState) -> ExpertPlacementState:
+        l, e, n, r = self.l, self.e, self.n, self.r
+        flat = state.counts.reshape(l * e, n)
+
+        if self.use_kernel:
+            from repro.kernels.ownership_sweep.ops import ownership_sweep
+
+            owners, _, _, _, f = ownership_sweep(
+                flat,
+                jnp.zeros((l * e, n), bool),
+                jnp.ones((l * e,), bool),
+                jnp.zeros((l * e,), jnp.int32),
+                0,
+                h=self.h,
+            )
+        else:
+            from repro.kernels.ownership_sweep.ref import sweep_ref
+
+            owners, _, _, _, f = sweep_ref(
+                flat,
+                jnp.zeros((l * e, n), bool),
+                jnp.ones((l * e,), bool),
+                jnp.zeros((l * e,), jnp.int32),
+                0,
+                h=self.h,
+            )
+
+        # Replication demand: an expert wants replicas where it qualifies.
+        # Budget: R slots per layer, hottest (by total traffic) first — the
+        # costmodel trim specialised to equal-sized objects.
+        qualify = jnp.any(owners, axis=-1).reshape(l, e)
+        total = jnp.sum(state.counts, axis=-1)  # [L, E]
+        score = jnp.where(qualify & (total > 0), total, -1.0)
+        _, top = jax.lax.top_k(score, r)  # [L, R]
+        valid = jnp.take_along_axis(score, top, axis=-1) > 0
+        new_hot = jnp.where(valid, top, -1).astype(jnp.int32)
+
+        # Keep the previous set on layers with no traffic at all (no churn
+        # on silence — same rule as placement.sweep).
+        layer_touched = jnp.sum(total, axis=-1, keepdims=True) > 0
+        new_hot = jnp.where(layer_touched, new_hot, state.hot_ids)
+
+        moved = jnp.sum(
+            jnp.all(new_hot[:, :, None] != state.hot_ids[:, None, :], axis=-1)
+        ).astype(jnp.float32)
+        return ExpertPlacementState(
+            counts=state.counts * self.decay,
+            hot_ids=new_hot,
+            step=state.step,
+            sweeps=state.sweeps + 1,
+            moved=moved,
+        )
+
+    # -- diagnostics ---------------------------------------------------------
+    def hit_rate(self, state: ExpertPlacementState) -> Array:
+        """Fraction of (EMA) traffic the current replica sets would serve."""
+        total = jnp.sum(state.counts, axis=(-1, -2))  # [L]
+        safe_ids = jnp.clip(state.hot_ids, 0, self.e - 1)
+        per_layer = jnp.sum(state.counts, axis=-1)  # [L, E]
+        hot_traffic = jnp.sum(
+            jnp.take_along_axis(per_layer, safe_ids, axis=-1)
+            * (state.hot_ids >= 0),
+            axis=-1,
+        )
+        return jnp.sum(hot_traffic) / jnp.maximum(jnp.sum(total), 1.0)

@@ -1,0 +1,147 @@
+"""Traffic-aware hot-row embedding cache — Redynis integration #2.
+
+Objects are vocabulary rows, nodes are data shards, traffic is token
+frequency (zipfian in natural text — the paper's skewed workload, verbatim).
+The daemon promotes the hottest rows with ``f ≥ H`` into a bounded replica
+cache; lookups consult the cache first (the Pallas ``hot_gather`` kernel
+keeps it VMEM-resident on TPU) and fall back to the vocab-sharded table +
+psum for misses.
+
+TPU adaptation note (DESIGN.md §2.3): the paper's "remote node" maps to the
+*memory hierarchy*, not just other chips — VMEM ⊂ HBM-local ⊂ HBM-remote.
+Hot hits skip the HBM row read; the cross-chip psum payload is unchanged
+(exactness forbids dropping rows), so the win shows up in the roofline
+memory term and in the hot_embedding benchmark's analytic HBM-bytes-saved,
+not in the collective term. Replica freshness during training is free: the
+hot table is gathered from the live embedding inside the forward pass, so
+the cache can never serve stale rows and gradients flow to the home copy.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.ownership import validate_coefficient
+from repro.dist import DistSpec, embed_lookup
+
+__all__ = ["HotEmbeddingState", "HotEmbedding", "embed_with_cache"]
+
+
+class HotEmbeddingState(NamedTuple):
+    counts: Array  # [V, N] f32 EMA token traffic per data shard
+    hot_ids: Array  # [R] int32 cached vocab rows (-1 = empty)
+    slot_map: Array  # [V] int32 row -> cache slot (-1 = cold)
+    sweeps: Array  # [] int32
+
+
+class HotEmbedding:
+    def __init__(
+        self,
+        vocab: int,
+        num_nodes: int,
+        rows: int,
+        *,
+        h: float | None = None,
+        decay: float = 0.98,
+        period: int = 50,
+    ) -> None:
+        if h is None or h <= 0:
+            h = 1.0 / num_nodes
+        validate_coefficient(h, num_nodes)
+        self.v, self.n, self.r = vocab, num_nodes, rows
+        self.h = h
+        self.decay = decay
+        self.period = period
+
+    def init_state(self) -> HotEmbeddingState:
+        return HotEmbeddingState(
+            counts=jnp.zeros((self.v, self.n), jnp.float32),
+            hot_ids=jnp.full((self.r,), -1, jnp.int32),
+            slot_map=jnp.full((self.v,), -1, jnp.int32),
+            sweeps=jnp.zeros((), jnp.int32),
+        )
+
+    @partial(jax.jit, static_argnums=(0,))
+    def fold(
+        self, state: HotEmbeddingState, tokens: Array, token_nodes: Array
+    ) -> HotEmbeddingState:
+        """tokens [B, S] and token_nodes [B] (data shard of each row)."""
+        b, s = tokens.shape
+        flat_tok = tokens.reshape(-1)
+        flat_node = jnp.repeat(token_nodes, s)
+        idx = flat_tok * self.n + flat_node
+        counts = state.counts.reshape(-1).at[idx].add(1.0, mode="drop")
+        return state._replace(counts=counts.reshape(self.v, self.n))
+
+    def due(self, step: int) -> bool:
+        return step > 0 and step % self.period == 0
+
+    @partial(jax.jit, static_argnums=(0,))
+    def sweep(self, state: HotEmbeddingState) -> HotEmbeddingState:
+        """Ownership test + top-R budget -> new cache contents."""
+        total = jnp.sum(state.counts, axis=-1)  # [V]
+        f = state.counts / jnp.maximum(total[:, None], 1.0)
+        qualify = jnp.any(f >= self.h, axis=-1) & (total > 0)
+        score = jnp.where(qualify, total, -1.0)
+        _, top = jax.lax.top_k(score, self.r)
+        valid = jnp.take_along_axis(score, top, axis=0) > 0
+        hot_ids = jnp.where(valid, top, -1).astype(jnp.int32)
+        slot_map = jnp.full((self.v,), -1, jnp.int32)
+        slot_map = slot_map.at[jnp.where(valid, top, self.v)].set(
+            jnp.arange(self.r, dtype=jnp.int32), mode="drop"
+        )
+        return HotEmbeddingState(
+            counts=state.counts * self.decay,
+            hot_ids=hot_ids,
+            slot_map=slot_map,
+            sweeps=state.sweeps + 1,
+        )
+
+    def hit_rate(self, state: HotEmbeddingState) -> Array:
+        total = jnp.sum(state.counts)
+        hot = jnp.sum(
+            jnp.sum(state.counts, -1)[jnp.clip(state.hot_ids, 0, self.v - 1)]
+            * (state.hot_ids >= 0)
+        )
+        return hot / jnp.maximum(total, 1.0)
+
+
+def embed_with_cache(
+    table: Array,  # [Vp, D] (vocab-sharded under pjit)
+    tokens: Array,  # [B, S] int32
+    state: HotEmbeddingState,
+    dist: Optional[DistSpec] = None,
+    use_kernel: bool = True,
+) -> tuple[Array, Array]:
+    """Two-level lookup. Returns (rows [B, S, D], hit [B, S] bool).
+
+    Hot rows come from the in-forward-gathered cache (VMEM via the Pallas
+    kernel); misses take the sharded cold path. Exact: hit rows equal the
+    cold path's answer bit-for-bit because the cache is gathered from the
+    live table.
+    """
+    b, s = tokens.shape
+    flat = tokens.reshape(-1)
+    safe_hot = jnp.clip(state.hot_ids, 0, table.shape[0] - 1)
+    hot_table = jnp.take(table, safe_hot, axis=0)  # [R, D] fresh every step
+
+    if use_kernel:
+        from repro.kernels.hot_gather.ops import hot_gather
+
+        rows_hot, hit = hot_gather(flat, state.slot_map, hot_table)
+    else:
+        slots = state.slot_map[flat]
+        hit = slots >= 0
+        rows_hot = jnp.where(
+            hit[:, None], jnp.take(hot_table, jnp.maximum(slots, 0), axis=0), 0
+        )
+
+    cold_tokens = jnp.where(hit, 0, flat).reshape(b, s)
+    rows_cold = embed_lookup(table, cold_tokens, dist).reshape(b * s, -1)
+    rows = jnp.where(hit[:, None], rows_hot.astype(rows_cold.dtype), rows_cold)
+    return rows.reshape(b, s, -1), hit.reshape(b, s)

@@ -1,0 +1,83 @@
+"""Ownership coefficient — the heart of Redynis (paper §6.1).
+
+For an object ``O`` and node ``x``::
+
+    g(O, x) = count(accesses on O by x)
+    f(O, x) = g(O, x) / g(O, all nodes)                      (eq. 1)
+
+Node ``x`` is entitled to a local replica of ``O`` iff ``f(O, x) - H >= 0``
+(eq. 2), under the starvation-avoidance constraint ``H - 1/n <= 0`` (eq. 3):
+with ``H <= 1/n`` the pigeonhole principle guarantees at least one node always
+qualifies (``max_x f(O, x) >= 1/n``), so a live key can never lose *all* of
+its replicas to the placement daemon.
+
+Everything here is pure, vectorised JAX over ``[K, N]`` count matrices
+(K objects × N nodes) so a full-cluster analysis pass is a single fused
+device computation — this is the paper's "constant time per key" claim,
+realised as O(K·N) total work with no graph traversal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = [
+    "validate_coefficient",
+    "max_coefficient",
+    "ownership_fraction",
+    "eligible_hosts",
+]
+
+
+def validate_coefficient(h: float, n_nodes: int) -> None:
+    """Enforce the paper's eq. 3 constraint ``H <= 1/n`` (host-side check)."""
+    if n_nodes <= 0:
+        raise ValueError(f"n_nodes must be positive, got {n_nodes}")
+    if not (0.0 < h <= 1.0 / n_nodes + 1e-12):
+        raise ValueError(
+            f"ownership coefficient H={h} violates 0 < H <= 1/n "
+            f"(n={n_nodes}, 1/n={1.0 / n_nodes:.6f}); see paper eq. 3"
+        )
+
+
+def max_coefficient(n_nodes: int) -> float:
+    """Largest admissible H for an ``n_nodes`` cluster (= 1/n)."""
+    return 1.0 / n_nodes
+
+
+def ownership_fraction(counts: Array) -> Array:
+    """Eq. 1: per-node access fraction ``f(O, x)``.
+
+    counts: ``[..., N]`` access counts ``g(O, x)``.
+    Returns ``f`` with the convention ``f = 0`` where the object has never
+    been accessed (total == 0) — callers keep the existing replica set in
+    that case rather than churning.
+    """
+    counts = counts.astype(jnp.float32)
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    return jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
+
+
+def eligible_hosts(counts: Array, h: Array | float) -> Array:
+    """Eq. 2 vectorised: boolean ``[..., N]`` mask of nodes with ``f >= H``.
+
+    A numeric starvation guard mirrors eq. 3's intent: if (through a
+    misconfigured H or float round-off) no node qualifies for an object that
+    *has* traffic, the argmax node is forced eligible so the object never
+    becomes unreachable.
+    """
+    f = ownership_fraction(counts)
+    mask = f >= jnp.asarray(h, dtype=f.dtype)
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    has_traffic = jnp.squeeze(total > 0, axis=-1)
+    none_qualify = has_traffic & ~jnp.any(mask, axis=-1)
+    argmax_hot = jnp.argmax(counts, axis=-1)
+    fallback = jax_one_hot_like(mask, argmax_hot)
+    return jnp.where(none_qualify[..., None], fallback, mask)
+
+
+def jax_one_hot_like(mask: Array, idx: Array) -> Array:
+    """Boolean one-hot along the last axis, same shape as ``mask``."""
+    n = mask.shape[-1]
+    return jnp.arange(n, dtype=idx.dtype) == idx[..., None]

@@ -1,0 +1,148 @@
+"""Placement daemon — the paper's Algorithm 3, vectorised.
+
+The paper's daemon loops over all keys, and per key:
+
+    1. expire:   if now > lastAccessed + expiry  -> delete key everywhere
+    2. analyse:  f(O, x) = hostAccesses[x] / totalAccesses
+                 f >= H  -> owner_hosts  ;  f < H -> delete_hosts
+    3. plan:     new_hosts      = owner_hosts  - current_hosts     (replicate)
+                 obsolete_hosts = current_hosts ∩ delete_hosts     (drop)
+    4. enforce:  update metadata + move data
+
+Here steps 1–3 are a single fused sweep over the ``[K, N]`` metadata arrays
+(`sweep`, pure JAX — a Pallas kernel with identical semantics lives in
+``repro.kernels.ownership_sweep`` for the TPU hot path), producing a
+:class:`PlacementPlan`. Step 4 is split out (`apply_plan`) so the enforcement
+can run *offline / non-blocking* exactly as the paper requires: the serving
+or training step keeps using the old replica map until the plan is committed
+at a step boundary (see ``repro/core/repartition.py`` double-buffering).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.metadata import MetadataStore
+from repro.core.ownership import eligible_hosts, validate_coefficient
+
+__all__ = ["PlacementPlan", "sweep", "apply_plan", "PlacementDaemon"]
+
+
+class PlacementPlan(NamedTuple):
+    """Output of one analysis pass (Algorithm 3 steps 1-3)."""
+
+    owners: Array  # [K, N] bool  -- post-sweep replica set (owner_hosts)
+    to_add: Array  # [K, N] bool  -- new_hosts      = owners - current
+    to_drop: Array  # [K, N] bool -- obsolete_hosts = current ∩ delete
+    expired: Array  # [K]   bool  -- keys past expiry (deleted everywhere)
+
+    def replication_bytes(self, object_bytes: Array | float) -> Array:
+        """Bytes the enforcement phase must move (adds × object size)."""
+        per_key = jnp.sum(self.to_add, axis=-1).astype(jnp.float32)
+        return jnp.sum(per_key * object_bytes)
+
+
+@partial(jax.jit, static_argnames=("expiry",))
+def sweep(
+    store: MetadataStore,
+    h: Array | float,
+    now: Array | int,
+    expiry: int | None = None,
+) -> tuple[PlacementPlan, MetadataStore]:
+    """One full-cluster analysis pass. Returns the plan and the metadata
+    store with the plan already reflected (hosts/live updated, counts of
+    expired keys cleared) — the *data* movement is the caller's step 4.
+
+    h:      ownership coefficient (validated against N by the daemon).
+    expiry: ticks after which an untouched key is purged; ``None`` disables
+            (static so the expiry branch compiles away when unused).
+    """
+    counts, hosts, live = store.access_counts, store.hosts, store.live
+
+    eligible = eligible_hosts(counts, h)  # eq. 2 over all K keys at once
+    touched = jnp.sum(counts, axis=-1) > 0
+    # Keys with no traffic keep their current placement (no churn on silence).
+    owners = jnp.where(touched[:, None], eligible, hosts)
+    owners = owners & live[:, None]
+
+    if expiry is not None:
+        expired = live & ((jnp.asarray(now, jnp.int32) - store.last_access) > expiry)
+    else:
+        expired = jnp.zeros_like(live)
+    owners = owners & ~expired[:, None]
+
+    plan = PlacementPlan(
+        owners=owners,
+        to_add=owners & ~hosts,
+        to_drop=hosts & ~owners,
+        expired=expired,
+    )
+    new_store = store._replace(
+        hosts=owners,
+        live=live & ~expired,
+        access_counts=jnp.where(expired[:, None], 0, counts),
+    )
+    return plan, new_store
+
+
+def apply_plan(values_present: Array, plan: PlacementPlan) -> Array:
+    """Enforce a plan on a ``[K, N]`` presence mask of actual value replicas
+    (the data layer's view). Kept separate from `sweep` so enforcement can be
+    deferred / overlapped; see repartition.py for the tensor-payload version.
+    """
+    present = values_present | plan.to_add
+    present = present & ~plan.to_drop & ~plan.expired[:, None]
+    return present
+
+
+class PlacementDaemon:
+    """Periodic offline repartitioner (paper §5.1 'Placement Daemon').
+
+    Host-side driver: holds H (validated against the cluster size), the decay
+    and expiry policy, and runs `sweep` every ``period`` ticks. It is
+    deliberately *stateless between sweeps* apart from the metadata store it
+    is handed — mirroring the paper's daemon, which only reads the metadata
+    layer and enforces changes.
+    """
+
+    def __init__(
+        self,
+        num_nodes: int,
+        h: float | None = None,
+        expiry: int | None = None,
+        period: int = 1,
+        decay: float = 1.0,
+    ) -> None:
+        if h is None:
+            h = 1.0 / num_nodes
+        validate_coefficient(h, num_nodes)
+        if not (0.0 < decay <= 1.0):
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.num_nodes = num_nodes
+        self.h = h
+        self.expiry = expiry
+        self.period = period
+        self.decay = decay
+
+    def due(self, tick: int) -> bool:
+        return tick % self.period == 0
+
+    def step(
+        self, store: MetadataStore, now: Array | int
+    ) -> tuple[PlacementPlan, MetadataStore]:
+        plan, store = sweep(store, self.h, now, self.expiry)
+        if self.decay < 1.0:
+            # Beyond-paper: exponential decay keeps the heuristics reactive to
+            # traffic *shifts* (the paper's raw counters saturate — an object
+            # hot yesterday and cold today keeps stale ownership for a long
+            # time). Applied post-sweep so each sweep sees fresh-ish counts.
+            decayed = jnp.floor(
+                store.access_counts.astype(jnp.float32) * self.decay
+            ).astype(jnp.int32)
+            store = store._replace(access_counts=decayed)
+        return plan, store

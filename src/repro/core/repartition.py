@@ -1,0 +1,183 @@
+"""Repartition execution — turning a PlacementPlan into scheduled data moves.
+
+The paper's daemon "enforces changes to the key-value store instances" with
+per-key RPCs. On a TPU mesh the payloads are tensors and the transport is a
+collective, so enforcement becomes: publish the objects that gained replicas
+this sweep with ONE fused all-gather over the owning mesh axis, then have
+each rank copy the slots it now owns into its local replica cache.
+
+Two properties the paper requires are preserved:
+
+  * **non-blocking** — the plan is computed offline (sweep) and committed at
+    a step boundary; until commit, consumers read the previous replica map
+    (double buffering — ``CommitState`` below).
+  * **bounded memory** — the replica cache has a fixed slot count; the cost
+    model (budget_plan) guarantees the plan fits before commit.
+
+The functions are written to be used either inside ``shard_map`` (axis_name
+set, real collectives) or host-side in the simulator (axis_name None).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.placement import PlacementPlan
+
+__all__ = [
+    "ReplicaCache",
+    "create_cache",
+    "plan_moves",
+    "publish_and_fill",
+    "CommitState",
+]
+
+
+class ReplicaCache(NamedTuple):
+    """Fixed-capacity per-rank replica store for K-object state.
+
+    ids:  [C] int32 — object id held in each slot (-1 = empty)
+    data: [C, ...]  — payloads
+    """
+
+    ids: Array
+    data: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[0]
+
+    def lookup(self, object_id: Array) -> Array:
+        """Slot index holding ``object_id`` or -1 — O(C) compare, C is small."""
+        hit = self.ids == object_id[..., None]
+        return jnp.where(jnp.any(hit, -1), jnp.argmax(hit, -1), -1).astype(jnp.int32)
+
+
+def create_cache(capacity: int, payload_shape: tuple, dtype=jnp.float32) -> ReplicaCache:
+    return ReplicaCache(
+        ids=jnp.full((capacity,), -1, jnp.int32),
+        data=jnp.zeros((capacity, *payload_shape), dtype),
+    )
+
+
+class Moves(NamedTuple):
+    """Static-shape move schedule for one sweep (padded to max_moves)."""
+
+    publish_ids: Array  # [M] int32 object ids this sweep publishes (-1 pad)
+    slot_ids: Array  # [N, C] int32 desired cache contents per rank (-1 empty)
+    moved_bytes: Array  # [] float32 total bytes the fused all-gather carries
+
+
+def plan_moves(
+    plan: PlacementPlan,
+    home: Array,  # [K] int32 home rank of each object
+    cache_capacity: int,
+    max_moves: int,
+    object_bytes: Array | float,
+) -> Moves:
+    """Compile a PlacementPlan into a static-shape move schedule.
+
+    Replicas beyond the home shard live in caches; the desired cache contents
+    of rank ``n`` are the objects with ``owners[k, n] & (home[k] != n)``,
+    hottest-first, truncated to capacity (the budgeted plan already fits).
+    Newly published objects are those appearing in any rank's adds.
+    """
+    k, n = plan.owners.shape
+    arange_k = jnp.arange(k, dtype=jnp.int32)
+
+    want = plan.owners & (home[:, None] != jnp.arange(n)[None, :])  # [K, N]
+    # Per-rank desired slots: stable top-capacity by object id (deterministic).
+    def slots_for(col: Array) -> Array:
+        ids = jnp.where(col, arange_k, k)  # k sorts last
+        order = jnp.sort(ids)[:cache_capacity]
+        return jnp.where(order < k, order, -1).astype(jnp.int32)
+
+    slot_ids = jax.vmap(slots_for, in_axes=1, out_axes=0)(want)  # [N, C]
+
+    added_any = jnp.any(plan.to_add, axis=-1)  # [K]
+    pub = jnp.where(added_any, arange_k, k)
+    pub = jnp.sort(pub)[:max_moves]
+    publish_ids = jnp.where(pub < k, pub, -1).astype(jnp.int32)
+
+    nbytes = jnp.sum(
+        jnp.where(added_any, jnp.broadcast_to(jnp.asarray(object_bytes, jnp.float32), (k,)), 0.0)
+    )
+    return Moves(publish_ids=publish_ids, slot_ids=slot_ids, moved_bytes=nbytes)
+
+
+def publish_and_fill(
+    cache: ReplicaCache,
+    moves: Moves,
+    local_objects: Array,  # [K_local, ...] this rank's home shard
+    local_ids: Array,  # [K_local] global object ids of the home shard
+    rank: Array | int,
+    axis_name: str | None = None,
+) -> ReplicaCache:
+    """Execute one sweep's moves: every rank contributes the published objects
+    it homes (zeros elsewhere), a single all-reduce materialises the publish
+    buffer everywhere, and each rank refreshes its cache slots.
+
+    With ``axis_name=None`` (simulator / single process) the publish buffer is
+    built directly — semantics identical, no collective.
+    """
+    m = moves.publish_ids.shape[0]
+    payload_shape = local_objects.shape[1:]
+
+    # Gather my contribution: for each publish slot, my local copy if I home it.
+    eq = moves.publish_ids[:, None] == local_ids[None, :]  # [M, K_local]
+    have = jnp.any(eq, axis=-1)
+    src = jnp.argmax(eq, axis=-1)
+    contrib = jnp.where(
+        have.reshape(m, *([1] * len(payload_shape))),
+        local_objects[src],
+        jnp.zeros((m, *payload_shape), local_objects.dtype),
+    )
+    if axis_name is not None:
+        # Exactly one rank homes each object -> sum == broadcast. One fused
+        # collective for the whole sweep (the paper's per-key RPCs, batched).
+        publish = jax.lax.psum(contrib, axis_name)
+    else:
+        publish = contrib
+
+    # Refresh cache: slots whose desired object was just published get new
+    # data; others keep old contents if still desired, else empty.
+    desired = moves.slot_ids[rank] if moves.slot_ids.ndim == 2 else moves.slot_ids
+    c = cache.capacity
+    pub_hit = desired[:, None] == moves.publish_ids[None, :]  # [C, M]
+    from_pub = jnp.any(pub_hit, axis=-1) & (desired >= 0)
+    pub_src = jnp.argmax(pub_hit, axis=-1)
+
+    old_hit = desired[:, None] == cache.ids[None, :]  # [C, C]
+    from_old = jnp.any(old_hit, axis=-1) & (desired >= 0) & ~from_pub
+    old_src = jnp.argmax(old_hit, axis=-1)
+
+    exp = lambda v: v.reshape(c, *([1] * len(payload_shape)))
+    data = jnp.where(
+        exp(from_pub),
+        publish[pub_src],
+        jnp.where(exp(from_old), cache.data[old_src], 0),
+    ).astype(cache.data.dtype)
+    ids = jnp.where(from_pub | from_old, desired, -1).astype(jnp.int32)
+    return ReplicaCache(ids=ids, data=data)
+
+
+class CommitState(NamedTuple):
+    """Double-buffered replica map: consumers read ``active`` while the daemon
+    prepares ``staged``; ``commit`` flips at a step boundary (non-blocking)."""
+
+    active: ReplicaCache
+    staged: ReplicaCache
+
+    @staticmethod
+    def create(cache: ReplicaCache) -> "CommitState":
+        return CommitState(active=cache, staged=cache)
+
+    def stage(self, new: ReplicaCache) -> "CommitState":
+        return self._replace(staged=new)
+
+    def commit(self) -> "CommitState":
+        return CommitState(active=self.staged, staged=self.staged)

@@ -1,0 +1,136 @@
+"""Pallas flash attention (TPU): causal/windowed GQA, online softmax.
+
+Layout: q [BH, S, Dh] (batch×q-heads fused), k/v [BKH, T, Dh] (batch×kv
+heads). Grid (BH, S/Bq, T/Bk); the kv-block axis is the innermost
+("arbitrary") dimension so the (acc, m, l) VMEM scratch carries across it.
+GQA is pure indexing: the k/v BlockSpec index_map sends q-head ``h`` to kv
+head ``h // group`` — kv blocks are never materialised per-q-head.
+
+Block shapes are the VMEM working set: q (Bq, Dh) + k,v (Bk, Dh) + acc
+(Bq, Dh) fp32 + scores (Bq, Bk) fp32. Bq = Bk = 128 and Dh ∈ {64..256}
+keeps this « 1 MB — far under VMEM — while every matmul is 128-aligned for
+the MXU. Causal/window masking is positional (block-level skips are a
+compile-time grid choice, handled in ops.py by trimming the kv grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF, compiler_params, pl, vmem_scratch
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def flash_attention_kernel(
+    q_ref,  # [Bq, Dh]
+    k_ref,  # [Bk, Dh]
+    v_ref,  # [Bk, Dh]
+    o_ref,  # [Bq, Dh]
+    acc_ref,  # VMEM scratch [Bq, Dh] f32
+    m_ref,  # VMEM scratch [Bq, 1] f32
+    l_ref,  # VMEM scratch [Bq, 1] f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    j = pl.program_id(1)  # q block
+    kk = pl.program_id(2)  # kv block
+
+    @pl.when(kk == 0)
+    def init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = j * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= (q_pos - k_pos) < window
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [Bq, 1]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def finish():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q: jax.Array,  # [BH, S, Dh]
+    k: jax.Array,  # [BKH, T, Dh]
+    v: jax.Array,
+    *,
+    group: int,  # q heads per kv head
+    heads: int,  # q heads per batch element
+    kv_heads: int,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, dh = q.shape
+    t = k.shape[1]
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    nq, nk = s // bq, t // bk
+    scale = dh**-0.5
+
+    def kv_index(i, j, kk):
+        b, h = i // heads, i % heads
+        return (b * kv_heads + h // group, kk, 0)
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        scale=scale, causal=causal, window=window, bq=bq, bk=bk, nk=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((None, bk, dh), kv_index),
+            pl.BlockSpec((None, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            vmem_scratch((bq, dh), jnp.float32),
+            vmem_scratch((bq, 1), jnp.float32),
+            vmem_scratch((bq, 1), jnp.float32),
+        ],
+        compiler_params=compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

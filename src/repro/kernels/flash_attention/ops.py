@@ -1,0 +1,49 @@
+"""jit'd public wrapper: model-layout in/out, kernel-layout inside.
+
+``flash_attention(q, k, v)`` takes the model layout [B, S, H, Dh] /
+[B, T, KH, Dh] and returns [B, S, H, Dh]. Causal runs trim the kv grid to
+the blocks at or below the diagonal per q-block? No — the grid is shared
+across q-blocks, so the trim is global: kv blocks beyond the last q
+position contribute nothing and are dropped when T > S (cross/window
+cases); intra-diagonal skipping stays positional masking (a Mosaic grid
+with per-q-block kv extents is the recorded follow-up optimisation).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, S, H, Dh]
+    k: jax.Array,  # [B, T, KH, Dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    b, s, h, dh = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    o = flash_attention_call(
+        qf, kf, vf,
+        group=h // kh, heads=h, kv_heads=kh,
+        causal=causal, window=window, bq=bq, bk=bk, interpret=interpret,
+    )
+    return o.reshape(b, h, s, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the flash attention kernel (exact masked softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,  # [BH, S, Dh]
+    k: jax.Array,  # [BKH, T, Dh]
+    v: jax.Array,
+    *,
+    group: int,
+    heads: int,
+    kv_heads: int,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    bh, s, dh = q.shape
+    b = bh // heads
+    t = k.shape[1]
+    qg = q.reshape(b, kv_heads, group, s, dh).astype(jnp.float32)
+    kk = k.reshape(b, kv_heads, t, dh).astype(jnp.float32)
+    vv = v.reshape(b, kv_heads, t, dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kk) * (dh**-0.5)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= (q_pos - k_pos) < window
+    scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, vv)
+    return out.reshape(bh, s, dh).astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Pallas flash decode (TPU): one query token against a long KV cache.
+
+Decode attention is memory-bound: the whole cache streams through once per
+step and the compute is a [G, Dh] × [Dh, Bk] matvec-batch. Layout:
+q [B*KH, G, Dh] (G = q heads per kv head), cache k/v [B*KH, T, Dh]. Grid
+(B*KH, T/Bk) with the kv axis innermost — (acc, m, l) scratch carries the
+online softmax across cache blocks, and each k/v block is read exactly
+once from HBM (the roofline-optimal schedule for this op).
+
+Cache-length masking comes from a [B] lengths vector delivered per grid row
+as a (1,1) SMEM-style block — positions ≥ length contribute nothing, so
+ring-buffer caches (sliding window) mask correctly too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF, compiler_params, pl, vmem_scratch
+
+__all__ = ["flash_decode_kernel", "flash_decode_call"]
+
+DEFAULT_BK = 512
+
+
+def flash_decode_kernel(
+    len_ref,  # [1] int32 — valid cache entries for this sequence
+    q_ref,  # [G, Dh]
+    k_ref,  # [Bk, Dh]
+    v_ref,  # [Bk, Dh]
+    o_ref,  # [G, Dh]
+    acc_ref,  # VMEM [G, Dh] f32
+    m_ref,  # VMEM [G, 1] f32
+    l_ref,  # VMEM [G, 1] f32
+    *,
+    scale: float,
+    bk: int,
+    nk: int,
+    g: int,
+):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    ok = k_pos < length
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [G, Bk]
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def finish():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_call(
+    q: jax.Array,  # [BKH, G, Dh]
+    k: jax.Array,  # [BKH, T, Dh]
+    v: jax.Array,
+    lengths: jax.Array,  # [B] int32
+    *,
+    kv_heads: int,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    bkh, g, dh = q.shape
+    t = k.shape[1]
+    bk = min(bk, t)
+    assert t % bk == 0, (t, bk)
+    nk = t // bk
+    kernel = functools.partial(
+        flash_decode_kernel, scale=dh**-0.5, bk=bk, nk=nk, g=g
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bkh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, kk: (i // kv_heads,)),
+            pl.BlockSpec((None, g, dh), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((None, bk, dh), lambda i, kk: (i, kk, 0)),
+            pl.BlockSpec((None, bk, dh), lambda i, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, g, dh), lambda i, kk: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bkh, g, dh), q.dtype),
+        scratch_shapes=[
+            vmem_scratch((g, dh), jnp.float32),
+            vmem_scratch((g, 1), jnp.float32),
+            vmem_scratch((g, 1), jnp.float32),
+        ],
+        compiler_params=compiler_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k, v)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for flash decode: model layout [B, H, Dh] + [B, T, KH, Dh]."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.flash_decode.kernel import flash_decode_call
+
+__all__ = ["flash_decode"]
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def flash_decode(
+    q: jax.Array,  # [B, H, Dh]
+    k_cache: jax.Array,  # [B, T, KH, Dh]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B] int32
+    *,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = interpret_default()
+    b, h, dh = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qf = q.reshape(b, kh, g, dh).reshape(b * kh, g, dh)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    o = flash_decode_call(
+        qf, kf, vf, lengths.astype(jnp.int32),
+        kv_heads=kh, bk=bk, interpret=interpret,
+    )
+    return o.reshape(b, kh * g, dh)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash decode (= models.attention.decode_attention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+__all__ = ["decode_ref"]
+
+
+def decode_ref(
+    q: jax.Array,  # [B, H, Dh]
+    k_cache: jax.Array,  # [B, T, KH, Dh]
+    v_cache: jax.Array,
+    lengths: jax.Array,  # [B]
+) -> jax.Array:
+    kh = k_cache.shape[2]
+    b, h, d = q.shape
+    qg = q.reshape(b, kh, h // kh, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache.astype(jnp.float32)) * (d**-0.5)
+    t = k_cache.shape[1]
+    valid = jnp.arange(t)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

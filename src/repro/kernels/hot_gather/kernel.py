@@ -1,0 +1,92 @@
+"""Pallas hot-row gather (TPU): the Redynis replica cache as a VMEM table.
+
+The paper brings values "closer to the frequent source of requests". On a
+TPU chip the request source is the compute unit and the distance ladder is
+VREG ⊂ VMEM ⊂ HBM ⊂ remote-chip-over-ICI. This kernel implements the first
+hop of a two-level embedding lookup:
+
+  slot_map [V] (int32, ~1 MB even at V = 256k) and the hot table's column
+  tile [R, TD] are pinned in VMEM; each token's row is served from VMEM
+  when its slot is populated (hit), and flagged as a miss otherwise. The
+  cold/miss path (sharded HBM table + psum) runs outside, on the miss set.
+
+Grid (T/TT, D/TD): token tiles × embedding-column tiles. The per-token row
+fetch is a serial fori over the tile (a gather has no MXU shape), but each
+fetch is a [TD]-wide VMEM read — the VPU load is the only cost, which is
+the point: hot traffic never touches HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import compiler_params, pl
+
+__all__ = ["hot_gather_kernel", "hot_gather_call"]
+
+DEFAULT_TT = 256
+DEFAULT_TD = 512
+
+
+def hot_gather_kernel(
+    tokens_ref,  # [TT, 1] i32
+    slot_map_ref,  # [V, 1] i32 — vocab row -> hot slot (-1 = cold)
+    table_ref,  # [R, TD] hot rows (this column tile)
+    out_ref,  # [TT, TD]
+    hit_ref,  # [TT, 1] i8
+    *,
+    tt: int,
+):
+    def body(i, _):
+        tok = tokens_ref[i, 0]
+        slot = slot_map_ref[tok, 0]
+        safe = jnp.maximum(slot, 0)
+        row = table_ref[pl.dslice(safe, 1), :]  # [1, TD] VMEM read
+        hit = slot >= 0
+        out_ref[pl.dslice(i, 1), :] = jnp.where(hit, row, jnp.zeros_like(row))
+        hit_ref[pl.dslice(i, 1), :] = hit.astype(jnp.int8).reshape(1, 1)
+        return 0
+
+    jax.lax.fori_loop(0, tt, body, 0)
+
+
+def hot_gather_call(
+    tokens: jax.Array,  # [T] i32
+    slot_map: jax.Array,  # [V] i32
+    hot_table: jax.Array,  # [R, D]
+    *,
+    tt: int = DEFAULT_TT,
+    td: int = DEFAULT_TD,
+    interpret: bool = True,
+):
+    t = tokens.shape[0]
+    v = slot_map.shape[0]
+    r, d = hot_table.shape
+    tt = min(tt, t)
+    td = min(td, d)
+    assert t % tt == 0 and d % td == 0, (t, tt, d, td)
+    grid = (t // tt, d // td)
+    kernel = functools.partial(hot_gather_kernel, tt=tt)
+    out, hit = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((v, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, td), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tt, td), lambda i, j: (i, j)),
+            pl.BlockSpec((tt, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), hot_table.dtype),
+            jax.ShapeDtypeStruct((t, 1), jnp.int8),
+        ],
+        compiler_params=compiler_params(("parallel", "parallel")),
+        interpret=interpret,
+    )(tokens.astype(jnp.int32).reshape(t, 1), slot_map.astype(jnp.int32).reshape(v, 1), hot_table)
+    return out, hit[:, 0]

@@ -1,0 +1,72 @@
+"""jit'd wrapper for the hot-row gather (pads T to the token tile).
+
+The kernel is wrapped in a custom VJP: the backward pass is the transpose
+scatter-add of the cotangent rows into the hit slots, so gradients flow
+through the cache to the live embedding table (replica writes propagate to
+the home copy — the paper's write-serialization concern, solved by autodiff).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.hot_gather.kernel import DEFAULT_TD, DEFAULT_TT, hot_gather_call
+
+__all__ = ["hot_gather"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _hot_gather(tokens, slot_map, hot_table, tt: int, td: int, interpret: bool):
+    t = tokens.shape[0]
+    pad = (-t) % tt
+    if pad:
+        tokens = jnp.pad(tokens, (0, pad))
+    rows, hit = hot_gather_call(
+        tokens, slot_map, hot_table, tt=tt, td=td, interpret=interpret
+    )
+    return rows[:t], hit[:t].astype(bool)
+
+
+def _fwd(tokens, slot_map, hot_table, tt, td, interpret):
+    out = _hot_gather(tokens, slot_map, hot_table, tt, td, interpret)
+    rows, hit = out
+    slots = slot_map[tokens]
+    return out, (slots, hit, hot_table)
+
+
+def _bwd(tt, td, interpret, res, cts):
+    slots, hit, hot_table = res
+    g_rows, _ = cts  # hit is boolean — no cotangent
+    r = hot_table.shape[0]
+    dest = jnp.where(hit, slots, r)  # misses dropped
+    g_table = (
+        jnp.zeros(hot_table.shape, jnp.float32)
+        .at[dest]
+        .add(g_rows.astype(jnp.float32), mode="drop")
+        .astype(hot_table.dtype)
+    )
+    return None, None, g_table
+
+
+_hot_gather.defvjp(_fwd, _bwd)
+
+
+@partial(jax.jit, static_argnames=("tt", "td", "interpret"))
+def hot_gather(
+    tokens: jax.Array,  # [T] int32
+    slot_map: jax.Array,  # [V] int32 (-1 = cold)
+    hot_table: jax.Array,  # [R, D]
+    *,
+    tt: int = DEFAULT_TT,
+    td: int = DEFAULT_TD,
+    interpret: bool | None = None,
+):
+    """Returns (rows [T, D] — zeros on miss, hit [T] bool)."""
+    if interpret is None:
+        interpret = interpret_default()
+    tt = min(tt, tokens.shape[0])
+    return _hot_gather(tokens, slot_map, hot_table, tt, td, interpret)

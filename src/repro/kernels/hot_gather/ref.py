@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the hot-row gather."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["hot_gather_ref"]
+
+
+def hot_gather_ref(tokens: jax.Array, slot_map: jax.Array, hot_table: jax.Array):
+    slots = slot_map[tokens]
+    hit = slots >= 0
+    rows = jnp.take(hot_table, jnp.maximum(slots, 0), axis=0)
+    rows = jnp.where(hit[:, None], rows, 0).astype(hot_table.dtype)
+    return rows, hit

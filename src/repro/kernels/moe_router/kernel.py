@@ -1,0 +1,89 @@
+"""Pallas MoE router (TPU): fused softmax → top-k → traffic histogram.
+
+This is the Redynis hook made free: the per-expert routing counts the
+placement daemon feeds on are accumulated *inside* the routing kernel — the
+paper's "web service logs usage heuristics per request" with zero extra HBM
+passes (the logits tile is already in VMEM).
+
+Grid over token tiles [TT, E]; top-k by k rounds of max+mask (k ≤ 8,
+unrolled — E ≤ 64 so each round is one VPU reduction over lanes). Outputs:
+renormalised gates [TT, K], expert ids [TT, K], and a per-tile histogram
+[1, E] that the wrapper sums into the [E] traffic vector.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF, compiler_params, pl
+
+__all__ = ["moe_router_kernel", "moe_router_call"]
+
+DEFAULT_TT = 1024
+
+
+def moe_router_kernel(
+    logits_ref,  # [TT, E] f32
+    gates_ref,  # out [TT, K] f32
+    idx_ref,  # out [TT, K] i32
+    counts_ref,  # out [1, E] f32 (per-tile partial histogram)
+    *,
+    k: int,
+    e: int,
+    tt: int,
+):
+    logits = logits_ref[...].astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+
+    iota_e = jax.lax.broadcasted_iota(jnp.int32, (tt, e), 1)
+    masked = probs
+    vals, ids, hist = [], [], jnp.zeros((1, e), jnp.float32)
+    for _ in range(k):  # static unroll: k rounds of max + mask
+        v = jnp.max(masked, axis=-1)
+        a = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+        sel = iota_e == a[:, None]
+        masked = jnp.where(sel, NEG_INF, masked)
+        vals.append(v)
+        ids.append(a)
+        hist = hist + jnp.sum(sel.astype(jnp.float32), axis=0, keepdims=True)
+
+    vals = jnp.stack(vals, axis=-1)  # [TT, K]
+    gates_ref[...] = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+    idx_ref[...] = jnp.stack(ids, axis=-1)
+    counts_ref[...] = hist
+
+
+def moe_router_call(
+    logits: jax.Array,  # [T, E] f32
+    *,
+    k: int,
+    tt: int = DEFAULT_TT,
+    interpret: bool = True,
+):
+    t, e = logits.shape
+    tt = min(tt, t)
+    assert t % tt == 0, (t, tt)
+    nt = t // tt
+    kernel = functools.partial(moe_router_kernel, k=k, e=e, tt=tt)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((tt, e), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tt, k), lambda i: (i, 0)),
+            pl.BlockSpec((tt, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((nt, e), jnp.float32),
+        ],
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret,
+    )(logits.astype(jnp.float32))

@@ -1,0 +1,47 @@
+"""jit'd wrapper: pads T to the tile size, sums the partial histograms."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import NEG_INF, interpret_default
+from repro.kernels.moe_router.kernel import DEFAULT_TT, moe_router_call
+
+__all__ = ["moe_router"]
+
+
+@partial(jax.jit, static_argnames=("k", "tt", "interpret"))
+def moe_router(
+    logits: jax.Array,  # [T, E]
+    *,
+    k: int,
+    tt: int = DEFAULT_TT,
+    interpret: bool | None = None,
+):
+    """Returns (gates [T,K] f32, idx [T,K] i32, counts [E] f32)."""
+    if interpret is None:
+        interpret = interpret_default()
+    t, e = logits.shape
+    tt = min(tt, t)
+    pad = (-t) % tt
+    if pad:
+        # Padding rows route deterministically to expert 0 with NEG_INF
+        # logits elsewhere; their histogram contribution is subtracted.
+        logits = jnp.pad(logits, ((0, pad), (0, 0)), constant_values=NEG_INF)
+        logits = logits.at[t:, 0].set(0.0)
+    gates, idx, hist = moe_router_call(logits, k=k, tt=tt, interpret=interpret)
+    counts = jnp.sum(hist, axis=0)
+    if pad:
+        counts = counts.at[0].add(-float(pad))
+        # Padded rows picked expert 0 first then arbitrary maxed-out slots;
+        # remove their k-1 residual assignments too.
+        resid = jnp.zeros_like(counts)
+        for j in range(1, k):
+            resid = resid + jnp.sum(
+                jax.nn.one_hot(idx[t:, j], e, dtype=jnp.float32), axis=0
+            )
+        counts = counts - resid
+    return gates[:t], idx[:t], counts

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: matches repro.models.moe._top_k_gates + count fold."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["router_ref"]
+
+
+def router_ref(logits: jax.Array, k: int):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)
+    gates = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+    e = logits.shape[-1]
+    counts = jnp.zeros((e,), jnp.float32)
+    for j in range(k):
+        counts = counts + jnp.sum(jax.nn.one_hot(idx[..., j], e, dtype=jnp.float32), 0)
+    return gates, idx.astype(jnp.int32), counts

@@ -1,0 +1,50 @@
+"""jit'd wrapper: bool in/out, K padded to the tile size transparently."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.ownership_sweep.kernel import DEFAULT_TK, ownership_sweep_call
+
+__all__ = ["ownership_sweep"]
+
+
+@partial(jax.jit, static_argnames=("h", "expiry", "tk", "interpret"))
+def ownership_sweep(
+    counts: jax.Array,  # [K, N]
+    hosts: jax.Array,  # [K, N] bool
+    live: jax.Array,  # [K] bool
+    last_access: jax.Array,  # [K] int32
+    now,
+    *,
+    h: float,
+    expiry: int = 0,
+    tk: int = DEFAULT_TK,
+    interpret: bool | None = None,
+):
+    """Returns (owners, to_add, to_drop, expired, f) — bool/bool/bool/bool/f32."""
+    if interpret is None:
+        interpret = interpret_default()
+    k, n = counts.shape
+    tk = min(tk, k)
+    pad = (-k) % tk
+    if pad:
+        zpad = lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)] * (a.ndim - 1))
+        counts, hosts = zpad(counts), zpad(hosts)
+        live, last_access = zpad(live), zpad(last_access)
+    owners, add, drop, expired, f = ownership_sweep_call(
+        counts, hosts, live, last_access, now,
+        h=h, expiry=expiry, tk=tk, interpret=interpret,
+    )
+    trim = lambda a: a[:k]
+    return (
+        trim(owners).astype(bool),
+        trim(add).astype(bool),
+        trim(drop).astype(bool),
+        trim(expired)[:, 0].astype(bool),
+        trim(f),
+    )

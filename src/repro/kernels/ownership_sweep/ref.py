@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: repro.core.placement.sweep restricted to the analysis
+phase — identical semantics, arrays instead of a MetadataStore."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ownership import eligible_hosts
+
+__all__ = ["sweep_ref"]
+
+
+def sweep_ref(counts, hosts, live, last_access, now, *, h: float, expiry: int = 0):
+    counts = counts.astype(jnp.float32)
+    hosts = hosts.astype(bool)
+    live = live.astype(bool)
+    elig = eligible_hosts(counts, h)
+    touched = jnp.sum(counts, axis=-1) > 0
+    owners = jnp.where(touched[:, None], elig, hosts)
+    if expiry > 0:
+        expired = live & ((jnp.asarray(now, jnp.int32) - last_access) > expiry)
+    else:
+        expired = jnp.zeros_like(live)
+    owners = owners & live[:, None] & ~expired[:, None]
+    total = jnp.sum(counts, axis=-1, keepdims=True)
+    f = jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
+    return owners, owners & ~hosts, hosts & ~owners, expired, f

@@ -1,0 +1,24 @@
+"""Faithful reproduction of the paper's testbed (§8) as a trace-driven simulator.
+
+3 nodes × {RedynisService, Redis data instance, Redis metadata instance} +
+one master propagator for write serialization + the RedynisDaemon — with the
+paper's latency model: 100 ms simulated remote penalty, 0 ms local (§8.2).
+
+The simulator runs the *same* core engine (metadata/ownership/placement) that
+the ML integrations use; only the latency bookkeeping is simulation-specific.
+"""
+
+from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
+from repro.kvsim.cluster import ClusterConfig, Scenario
+from repro.kvsim.simulate import SimResult, run_scenario, run_experiment
+
+__all__ = [
+    "Trace",
+    "WorkloadConfig",
+    "generate_trace",
+    "ClusterConfig",
+    "Scenario",
+    "SimResult",
+    "run_scenario",
+    "run_experiment",
+]

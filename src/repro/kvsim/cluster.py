@@ -1,0 +1,72 @@
+"""Cluster latency model + the experimental scenarios (paper §9).
+
+  * LOCAL      — the paper's "theoretically ideal scenario": every request
+                 (read or write) is served by the local key-value store.
+  * REMOTE     — no local replicas ever; every op pays the remote RTT.
+  * OPTIMIZED  — Redynis: reads consult the replica map maintained by the
+                 placement daemon; usage statistics are logged per access and
+                 the daemon replicates/purges on the fly.
+  * REPLICATED — beyond-paper 4th bar: the "naive global replication of all
+                 keys" the paper's hypothesis argues against (§9/§10). Reads
+                 are local, but every write pays master relay + broadcast —
+                 the cost LOCAL's idealisation hides.
+
+Latency model (paper §8.2): remote request penalty 100 ms, local penalty 0.
+Service time is the YCSB-side per-op cost; the paper does not state it, so it
+is a calibration constant chosen to land the LOCAL:REMOTE throughput ratio
+near the paper's reported ~10x (see EXPERIMENTS.md §Repro-assumptions).
+
+Write path (Algorithm 2): a write at node x for a key whose replica set is
+{x} commits locally; otherwise it is relayed to the master propagator
+(one RTT if x != master) which posts the value to every owner host
+(one parallel RTT if any owner is remote from the master).
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = ["ClusterConfig", "Scenario", "read_latency", "write_latency"]
+
+
+class Scenario(enum.Enum):
+    LOCAL = "local"
+    REMOTE = "remote"
+    OPTIMIZED = "optimized"
+    REPLICATED = "replicated"
+
+
+class ClusterConfig(NamedTuple):
+    num_nodes: int = 3  # paper: 3-node testbed
+    remote_ms: float = 100.0  # paper: simulated geo-distributed RTT
+    local_ms: float = 0.0
+    service_ms: float = 10.0  # per-op service cost (calibration constant)
+    master: int = 0  # master propagator (write serializer)
+    value_bytes: float = 1024.0  # size(value) >> size(key), paper §4
+    key_bytes: float = 16.0
+
+
+def read_latency(cfg: ClusterConfig, hit: Array) -> Array:
+    """Per-request read latency: service + RTT on local miss (Algorithm 1)."""
+    return cfg.service_ms + jnp.where(hit, cfg.local_ms, cfg.remote_ms)
+
+
+def write_latency(
+    cfg: ClusterConfig,
+    node: Array,
+    sole_local_owner: Array,
+    any_owner_remote_from_master: Array,
+) -> Array:
+    """Per-request write latency (Algorithm 2).
+
+    sole_local_owner: replica set == {requesting node} -> commit locally.
+    Otherwise: relay to master (RTT if requester != master) + master posts to
+    owner hosts (RTT if any owner is not the master itself).
+    """
+    relay = jnp.where(node == cfg.master, 0.0, cfg.remote_ms)
+    post = jnp.where(any_owner_remote_from_master, cfg.remote_ms, 0.0)
+    return cfg.service_ms + jnp.where(sole_local_owner, 0.0, relay + post)

@@ -1,0 +1,211 @@
+"""Trace-driven simulation of the paper's experiment (§8–§9).
+
+Reproduces the three scenarios of Figure 2/3 — Local / Remote / Optimized —
+on YCSB-style traces (``workload.py``) with the paper's latency model
+(``cluster.py``). The OPTIMIZED scenario runs the *actual* core engine
+(metadata layer + ownership coefficient + placement daemon), not a model of
+it: requests fold accesses into a :class:`repro.core.MetadataStore` and the
+:class:`repro.core.PlacementDaemon` sweeps between request chunks, exactly
+like the paper's offline RedynisDaemon.
+
+Execution model
+---------------
+The trace is processed in chunks of ``daemon_interval`` requests. Within a
+chunk every request sees the replica map *frozen at chunk start* — this is
+the paper's non-blocking property: in-flight requests are never stalled by
+the daemon; they observe the previous placement until the sweep commits.
+Metadata updates (access logging) fold in continuously, as in Algorithm 1.
+
+Throughput model
+----------------
+Nodes serve their request streams concurrently (the paper's three
+application servers). Per-node busy time = Σ latency of requests arriving at
+that node; makespan = max over nodes; throughput = R / makespan. The paper
+does not state the YCSB per-op service cost; ``ClusterConfig.service_ms`` is
+the calibration constant (documented in EXPERIMENTS.md §Repro-assumptions).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.metadata import MetadataStore, create_store, record_accesses
+from repro.core.placement import PlacementDaemon
+from repro.kvsim.cluster import ClusterConfig, Scenario, read_latency, write_latency
+from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
+
+__all__ = ["SimResult", "run_scenario", "run_experiment", "confidence_interval_99"]
+
+
+class SimResult(NamedTuple):
+    """Aggregate metrics for one scenario run (one seed)."""
+
+    throughput_ops_s: float
+    hit_rate: float
+    mean_latency_ms: float
+    node_busy_ms: np.ndarray  # [N]
+    replication_moves: float  # replicas created by the daemon
+    deletion_moves: float  # replicas dropped by the daemon
+
+
+def _initial_hosts(trace: Trace, num_keys: int, num_nodes: int, scenario: Scenario) -> Array:
+    """Starting replica map per scenario (paper §9 scenario definitions)."""
+    if scenario in (Scenario.LOCAL, Scenario.REPLICATED):
+        return jnp.ones((num_keys, num_nodes), dtype=bool)
+    # REMOTE / OPTIMIZED: each key starts on a single node that is *not* its
+    # natural request source ("requests ... served not available on the local
+    # key-value store"), so both start from the worst-case placement.
+    home = (trace.natural_node + 1) % num_nodes
+    return jax.nn.one_hot(home, num_nodes, dtype=bool)
+
+
+@partial(jax.jit, static_argnames=("cluster", "scenario"))
+def _chunk_latency(
+    hosts: Array,  # [K, N] frozen replica map
+    keys: Array,  # [B]
+    nodes: Array,  # [B]
+    is_read: Array,  # [B]
+    cluster: ClusterConfig,
+    scenario: Scenario,
+) -> tuple[Array, Array]:
+    """Per-request latency + hit flags for one chunk under a frozen map."""
+    if scenario is Scenario.LOCAL:
+        # The paper's "theoretically ideal scenario": everything local.
+        hit = jnp.ones_like(is_read)
+        return jnp.full(keys.shape, cluster.service_ms, jnp.float32), hit & is_read
+    if scenario is Scenario.REMOTE:
+        hit = jnp.zeros_like(is_read)  # every request pays the RTT
+    else:
+        hit = hosts[keys, nodes]
+    r_lat = read_latency(cluster, hit)
+
+    owner_count = jnp.sum(hosts[keys], axis=-1)
+    sole_local = hit & (owner_count == 1)
+    if scenario is Scenario.REMOTE:
+        sole_local = jnp.zeros_like(sole_local)
+    owners_not_master = hosts[keys].at[:, cluster.master].set(False)
+    any_remote_from_master = jnp.any(owners_not_master, axis=-1)
+    w_lat = write_latency(cluster, nodes, sole_local, any_remote_from_master)
+
+    lat = jnp.where(is_read, r_lat, w_lat)
+    return lat, hit & is_read
+
+
+def run_scenario(
+    workload: WorkloadConfig,
+    cluster: ClusterConfig,
+    scenario: Scenario,
+    seed: int = 0,
+    daemon_interval: int = 1000,
+    ownership_coefficient: float | None = None,
+    expiry_ticks: int | None = None,
+) -> SimResult:
+    """Simulate one scenario over one generated trace."""
+    trace = generate_trace(workload, seed)
+    k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
+    hosts = _initial_hosts(trace, k, n, scenario)
+
+    daemon = PlacementDaemon(
+        num_nodes=n,
+        h=ownership_coefficient,
+        expiry=expiry_ticks,
+    )
+    store = create_store(k, n)
+    # Seed the metadata layer with the initial placement (Algorithm 1's
+    # "metadata == null -> generate metadata object" happened at load time).
+    store = store._replace(
+        hosts=hosts,
+        live=jnp.ones((k,), dtype=bool),
+        home=jnp.argmax(hosts, axis=-1).astype(jnp.int32),
+    )
+
+    total_lat = np.zeros((n,), dtype=np.float64)
+    hits = 0.0
+    reads = 0.0
+    lat_sum = 0.0
+    repl_moves = 0.0
+    drop_moves = 0.0
+
+    num_chunks = (r + daemon_interval - 1) // daemon_interval
+    for c in range(num_chunks):
+        lo, hi = c * daemon_interval, min((c + 1) * daemon_interval, r)
+        keys = trace.keys[lo:hi]
+        nodes = trace.nodes[lo:hi]
+        is_read = trace.is_read[lo:hi]
+
+        lat, read_hits = _chunk_latency(
+            store.hosts, keys, nodes, is_read, cluster, scenario
+        )
+        busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
+        total_lat += np.asarray(busy, dtype=np.float64)
+        lat_sum += float(jnp.sum(lat))
+        hits += float(jnp.sum(read_hits))
+        reads += float(jnp.sum(is_read))
+
+        if scenario is Scenario.OPTIMIZED:
+            # Algorithm 1 bookkeeping: log usage heuristics per request.
+            store = record_accesses(store, keys, nodes, now=c)
+            if daemon.due(c):
+                plan, store = daemon.step(store, now=c)
+                repl_moves += float(jnp.sum(plan.to_add))
+                drop_moves += float(jnp.sum(plan.to_drop))
+
+    makespan_ms = float(total_lat.max())
+    return SimResult(
+        throughput_ops_s=r / (makespan_ms / 1000.0),
+        hit_rate=hits / max(reads, 1.0),
+        mean_latency_ms=lat_sum / r,
+        node_busy_ms=total_lat,
+        replication_moves=repl_moves,
+        deletion_moves=drop_moves,
+    )
+
+
+def confidence_interval_99(samples: np.ndarray) -> tuple[float, float]:
+    """Mean ± 99% CI half-width (normal approx — matches the paper's error
+    bars over repeated iterations)."""
+    mean = float(np.mean(samples))
+    if len(samples) < 2:
+        return mean, 0.0
+    sem = float(np.std(samples, ddof=1) / np.sqrt(len(samples)))
+    return mean, 2.576 * sem
+
+
+def run_experiment(
+    read_fractions: tuple[float, ...] = (1.0, 0.9, 0.75, 0.5),
+    skewed: bool = False,
+    iterations: int = 5,
+    num_requests: int = 100_000,
+    **workload_kwargs,
+) -> dict:
+    """Paper Figure 2/3: all three scenarios × read ratios, with 99% CIs."""
+    cluster = ClusterConfig()
+    out: dict = {"skewed": skewed, "read_fractions": list(read_fractions), "scenarios": {}}
+    for scenario in Scenario:
+        rows = []
+        for rf in read_fractions:
+            wl = WorkloadConfig(
+                num_requests=num_requests,
+                read_fraction=rf,
+                skewed=skewed,
+                **workload_kwargs,
+            )
+            samples = np.array(
+                [
+                    run_scenario(wl, cluster, scenario, seed=it).throughput_ops_s
+                    for it in range(iterations)
+                ]
+            )
+            mean, ci = confidence_interval_99(samples)
+            hit = run_scenario(wl, cluster, scenario, seed=0).hit_rate
+            rows.append(
+                {"read_fraction": rf, "throughput": mean, "ci99": ci, "hit_rate": hit}
+            )
+        out["scenarios"][scenario.value] = rows
+    return out

@@ -1,0 +1,391 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the first two lines below pin 512 placeholder host devices BEFORE any jax
+initialisation, so ``make_production_mesh`` can build the 16×16 and 2×16×16
+meshes. Smoke tests/benches never import this module and keep 1 device.
+
+Per cell this script:
+  1. builds the model + abstract params/opt-state/batch (ShapeDtypeStructs,
+     zero allocation),
+  2. jits the cell's step — train_step (loss+grad+AdamW update), prefill,
+     or serve_step (one-token decode against a full-length cache) — with
+     explicit in_shardings from launch/sharding.py,
+  3. ``.lower().compile()`` under the mesh — any sharding mismatch,
+     compile-time OOM or unsupported collective fails the cell,
+  4. records memory_analysis / cost_analysis / the §Roofline terms parsed
+     from the compiled HLO into a JSON blob for EXPERIMENTS.md.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, cells, get_config, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import analyze_hlo, roofline_terms  # noqa: E402
+from repro.launch.sharding import (  # noqa: E402
+    batch_shardings,
+    make_dist,
+    opt_shardings,
+    param_shardings,
+    state_shardings,
+)
+from repro.models.model import build  # noqa: E402
+from repro.train.optim import OptConfig, OptState, apply_updates  # noqa: E402
+
+# Grad-accumulation microbatch count per arch for the train_4k cell — keeps
+# per-chip live activations inside v5e HBM (validated via memory_analysis).
+TRAIN_MICROBATCHES = {
+    "yi-9b": 8,
+    "qwen3-1.7b": 4,
+    "llama3.2-3b": 4,
+    "mistral-large-123b": 16,
+    "rwkv6-1.6b": 4,
+    "llava-next-34b": 16,
+    "recurrentgemma-2b": 4,
+    "whisper-base": 2,
+    "deepseek-moe-16b": 4,
+    "granite-moe-1b-a400m": 2,
+}
+
+
+def _abstract_opt(params_sds) -> OptState:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return OptState(
+        m=jax.tree.map(f32, params_sds),
+        v=jax.tree.map(f32, params_sds),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def analytic_memory_per_chip(model, shape, mesh, kind: str, micro: int = 1) -> dict:
+    """TPU-native per-chip memory estimate (bf16 params/activations, fp32
+    optimizer) — the CPU backend's memory_analysis is inflated by its
+    bf16->f32 promotion pass, so we report both and judge fit on this one.
+    """
+    import numpy as np
+    from repro.launch.sharding import param_rules
+    from repro.models.params import ParamSpec
+
+    cfg = model.cfg
+    rules = param_rules(cfg, mesh)
+    axis_size = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+    def leaf_bytes(spec: ParamSpec) -> float:
+        n = float(np.prod(spec.shape))
+        shards = 1
+        for ax in spec.axes:
+            mesh_ax = rules.get(ax) if ax else None
+            if mesh_ax:
+                shards *= axis_size.get(mesh_ax, 1)
+        return n * np.dtype(spec.dtype).itemsize / shards
+
+    leaves = jax.tree.leaves(
+        model.param_specs(), is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    params_b = sum(leaf_bytes(s) for s in leaves)
+    params_n = sum(
+        float(np.prod(s.shape))
+        / np.prod([axis_size.get(rules.get(a) or "", 1) for a in s.axes if a])
+        for s in leaves
+    )
+    out = {"params_bytes": params_b}
+    d = cfg.d_model
+    chips = mesh.devices.size
+    data_sh = axis_size.get("data", 1) * axis_size.get("pod", 1)
+    if kind == "train":
+        out["opt_bytes"] = params_n * 12  # m+v fp32 + grad fp32
+        tokens_chip = shape.global_batch * shape.seq_len / micro / data_sh
+        layers = cfg.num_layers + (cfg.encoder_layers or 0)
+        # remat saves one [tokens, d] input per layer + ~4x working set
+        out["act_bytes"] = tokens_chip * d * 2 * (layers + 4 * 3)
+        out["logit_chunk_bytes"] = (
+            shape.global_batch * shape.seq_len / max(cfg.xent_chunks, 1) / data_sh
+            * cfg.padded_vocab / max(axis_size.get("model", 1), 1) * 4
+        )
+    elif kind == "prefill":
+        tokens_chip = shape.global_batch * shape.seq_len / data_sh
+        out["act_bytes"] = tokens_chip * d * 2 * 6
+        kh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        m = axis_size.get("model", 1)
+        kv_div = m if (kh % m == 0 or shape.seq_len % m == 0) else 1
+        out["cache_bytes"] = (
+            cfg.num_layers * tokens_chip * kh * dh * 2 * 2 / kv_div
+        )
+    else:  # decode
+        state = model.init_state(shape.global_batch, shape.seq_len, abstract=True)
+        from repro.launch.sharding import state_shardings
+
+        shardings = state_shardings(model, mesh, state)
+        total = 0.0
+        for leaf, sh in zip(jax.tree.leaves(state), jax.tree.leaves(shardings)):
+            n = float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            shards = 1
+            for entry in sh.spec:
+                if entry is None:
+                    continue
+                for ax in entry if isinstance(entry, tuple) else (entry,):
+                    shards *= axis_size.get(ax, 1)
+            total += n / shards
+        out["state_bytes"] = total
+    out["total_bytes"] = sum(v for v in out.values())
+    out["fits_16GB"] = out["total_bytes"] < 16e9
+    return out
+
+
+def model_flops_per_chip(model, shape, mesh, kind: str) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference), per chip."""
+    n = model.active_params()
+    chips = mesh.devices.size
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / chips
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / chips
+    return 2.0 * n * shape.global_batch / chips  # decode: one token per seq
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    layout: str | None = None,
+    quant: bool = False,
+    micro: int = 0,
+):
+    """Returns (jitted_fn, abstract_args) for one cell."""
+    cfg = get_config(arch)
+    if layout:
+        cfg = dataclasses.replace(cfg, layout=layout)
+    if os.environ.get("DRYRUN_REMAT"):
+        cfg = dataclasses.replace(cfg, remat=os.environ["DRYRUN_REMAT"])
+    if os.environ.get("DRYRUN_OVERRIDES"):
+        import json as _json
+
+        cfg = dataclasses.replace(cfg, **_json.loads(os.environ["DRYRUN_OVERRIDES"]))
+    shape = get_shape(shape_name)
+    model = build(cfg)
+    dist = make_dist(mesh, cfg.layout)
+    p_sh = param_shardings(model, mesh)
+    p_sds = model.abstract_params()
+    if quant:  # int8-served weights (decode cells only)
+        from repro.launch.sharding import quantized_param_shardings
+
+        assert shape.kind == "decode", "--quant targets serve_step cells"
+        p_sh, p_sds = quantized_param_shardings(model, mesh, p_sds)
+    repl = NamedSharding(mesh, P())
+
+    hot_args, hot_sh = (), ()
+    if cfg.num_experts and cfg.hot_expert_slots:
+        hot_args = (
+            jax.ShapeDtypeStruct((cfg.num_layers, cfg.hot_expert_slots), jnp.int32),
+        )
+        hot_sh = (repl,)
+
+    if shape.kind == "train":
+        micro = micro or TRAIN_MICROBATCHES.get(arch, 1)
+        o_sds = _abstract_opt(p_sds)
+        o_sh = opt_shardings(model, mesh, o_sds)
+        b_sds = model.input_specs(shape)
+        b_sh = batch_shardings(model, mesh, b_sds)
+        opt_cfg = OptConfig()
+
+        def train_step(params, opt_state, batch, *hot):
+            hot_ids = hot[0] if hot else None
+
+            def loss_fn(p, mb):
+                return model.loss(p, mb, dist, hot_ids=hot_ids)
+
+            if micro > 1:
+                mb_batch = jax.tree.map(
+                    lambda x: x.reshape(micro, x.shape[0] // micro, *x.shape[1:]),
+                    batch,
+                )
+
+                def body(acc, mb):
+                    (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                    return (
+                        jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc[0], g),
+                        acc[1] + l,
+                    ), None
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), _ = jax.lax.scan(body, (g0, 0.0), mb_batch)
+                grads = jax.tree.map(lambda g: g / micro, grads)
+                loss = loss / micro
+            else:
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch
+                )
+            params2, opt2, _ = apply_updates(opt_cfg, params, grads, opt_state)
+            return params2, opt2, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, b_sh) + hot_sh,
+            donate_argnums=(0, 1),
+        )
+        return fn, (p_sds, o_sds, b_sds) + hot_args
+
+    if shape.kind == "prefill":
+        b_sds = model.input_specs(shape)
+        b_sh = batch_shardings(model, mesh, b_sds)
+
+        def prefill(params, batch, *hot):
+            hot_ids = hot[0] if hot else None
+            return model.prefill(params, batch, dist, hot_ids=hot_ids)
+
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh) + hot_sh)
+        return fn, (p_sds, b_sds) + hot_args
+
+    # decode: serve_step — one token against a seq_len cache
+    s_sds = model.init_state(shape.global_batch, shape.seq_len, abstract=True)
+    s_sh = state_shardings(model, mesh, s_sds)
+    t_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    bspec = make_dist(mesh).batch
+    if shape.global_batch % make_dist(mesh).batch_size:
+        bspec = None
+    t_sh = NamedSharding(mesh, P(bspec))
+
+    def serve_step(params, state, tokens, *hot):
+        hot_ids = hot[0] if hot else None
+        return model.decode_step(params, state, tokens, dist, hot_ids=hot_ids)
+
+    fn = jax.jit(
+        serve_step, in_shardings=(p_sh, s_sh, t_sh) + hot_sh, donate_argnums=(1,)
+    )
+    return fn, (p_sds, s_sds, t_sds) + hot_args
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    layout: str | None = None,
+    quant: bool = False,
+    micro: int = 0,
+) -> dict:
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build(get_config(arch))
+    t0 = time.time()
+    fn, args = build_cell(arch, shape_name, mesh, layout, quant, micro)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    ana = analyze_hlo(hlo)
+    mf = model_flops_per_chip(model, shape, mesh, shape.kind)
+    terms = roofline_terms(ana, mf)
+    chips = mesh.devices.size
+    peak_bytes = (
+        mem.argument_size_in_bytes
+        + mem.temp_size_in_bytes
+        + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "chips": chips,
+        "params": model.num_params(),
+        "active_params": model.active_params(),
+        "ok": True,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "args_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": peak_bytes,
+            "fits_16GB": peak_bytes < 16e9,
+        },
+        # TPU-native estimate (the CPU backend's f32-promotion pass inflates
+        # peak_bytes_per_device by up to 2x for bf16 models; see DESIGN.md).
+        "analytic_memory": analytic_memory_per_chip(
+            model, shape, mesh, shape.kind,
+            TRAIN_MICROBATCHES.get(arch, 1) if shape.kind == "train" else 1,
+        ),
+        "xla_cost_analysis": {
+            k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost
+        },
+        "roofline": terms,
+        "hlo_stats": {
+            "dot_ops": ana.dot_count,
+            "collective_ops": ana.collective_count,
+            "while_trip_counts": ana.while_trip_counts,
+        },
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--layout", default="", help="override cfg.layout (tp|fsdp|serve)")
+    ap.add_argument("--quant", action="store_true", help="int8-served weights (decode)")
+    ap.add_argument("--micro", type=int, default=0, help="override train microbatches")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    if args.shape not in cells(args.arch):
+        res = {
+            "arch": args.arch,
+            "shape": args.shape,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "ok": True,
+            "skipped": "long_500k requires sub-quadratic attention "
+            "(full-attention arch; see DESIGN.md shape-cell skips)",
+        }
+    else:
+        try:
+            res = run_cell(
+                args.arch, args.shape, args.multi_pod, args.layout or None,
+                args.quant, args.micro,
+            )
+            if args.layout:
+                res["layout"] = args.layout
+            if args.quant:
+                res["quant"] = True
+        except Exception as e:  # a failing cell is a bug we must surface
+            res = {
+                "arch": args.arch,
+                "shape": args.shape,
+                "mesh": "2x16x16" if args.multi_pod else "16x16",
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+    blob = json.dumps(res, indent=1, default=float)
+    print(blob)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(blob)
+    if not res.get("ok"):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls this; smoke tests never call it and see 1 device.
+
+Mesh shapes (TPU v5e, 256 chips/pod):
+  single-pod: (16, 16)    axes (data, model)
+  multi-pod:  (2, 16, 16) axes (pod, data, model)
+
+Axis roles: ``data`` = FSDP + batch, ``model`` = TP/EP/vocab/sequence,
+``pod`` = pure data parallelism across pods (params replicated per pod,
+gradients all-reduced over the slow inter-pod links — where the gradient
+compression of train/compress.py applies).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "mesh_num_nodes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests use small ones on forced host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def mesh_num_nodes(mesh: Mesh, axis: str = "model") -> int:
+    """Redynis 'node' count for a mesh (EP ranks along the model axis)."""
+    return int(mesh.shape[axis])

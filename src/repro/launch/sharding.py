@@ -1,0 +1,239 @@
+"""Sharding rules: logical parameter axes -> mesh axes, per architecture.
+
+Parallelism layout (16 data × 16 model per pod; pods are pure DP):
+
+  params       FSDP: 'embed' dim over data; TP: heads/mlp/experts/state
+               over model; vocab over model (embedding + LM head + sharded
+               xent — logits are never all-gathered).
+  activations  batch over (pod, data); attention heads over model (uneven
+               head counts padded by GSPMD — waste shows up in the
+               MODEL_FLOPS/HLO_FLOPS roofline ratio and is documented);
+               MoE dispatch groups over (data, model) so the dispatch
+               einsum lowers to one all-to-all on the model (EP) axis.
+  decode       KV cache: batch over data, sequence over model (flash-decode
+               partial-softmax combines via psum); recurrent state: width
+               over model.
+
+Divisibility: mesh-sharded PARAM dims must divide exactly (pjit boundary
+rule), so archs whose head count is not a multiple of 16 (llama3.2 24H,
+llava 56H, recurrentgemma 10H, whisper 8H) shard head_dim instead — always
+64/128/256 — and leave heads unsharded in params while the activation
+constraint still splits heads (unevenly, padded) across the model axis.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import DistSpec
+from repro.models.model import Model
+from repro.models.params import partition_specs
+
+__all__ = [
+    "make_dist",
+    "param_rules",
+    "param_shardings",
+    "batch_shardings",
+    "state_shardings",
+    "opt_shardings",
+    "MODEL_AXIS_SIZE",
+]
+
+MODEL_AXIS_SIZE = 16
+
+
+def make_dist(mesh: Mesh, layout: str = "tp") -> DistSpec:
+    axes = mesh.axis_names
+    if layout == "fsdp":
+        # ZeRO-3: the batch spreads over every axis (no tensor parallelism
+        # for the blocks — DistSpec.tensor_parallel is False because the
+        # model axis is consumed by the batch), but the model axis still
+        # carries the vocab sharding for the loss path: without it the
+        # embedding-gradient matmul replicates on every chip (refuted
+        # hypothesis A1 in EXPERIMENTS.md §Perf).
+        batch_axes = tuple(a for a in ("pod", "data", "model") if a in axes)
+        model_axis = "model" if "model" in axes else None
+        return DistSpec(mesh=mesh, batch_axes=batch_axes, model_axis=model_axis)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    model_axis = "model" if "model" in axes else None
+    return DistSpec(mesh=mesh, batch_axes=batch_axes, model_axis=model_axis)
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """Logical axis -> mesh axis map for this arch on this mesh.
+
+    Three layouts (cfg.layout — the §Perf hillclimb knob):
+      tp    — FSDP('embed'→data) × TP(heads/mlp/experts/vocab→model)
+      fsdp  — params fully sharded over (data, model) on 'embed'; no TP
+      serve — TP only; params replicated over data (weights-stationary
+              decode: no per-step FSDP all-gathers)
+    """
+    m = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    d_axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+
+    if cfg.layout == "fsdp":
+        if d_axes and cfg.d_model % _axes_size(mesh, d_axes) == 0:
+            emb = d_axes
+        elif "data" in mesh.axis_names and cfg.d_model % int(mesh.shape["data"]) == 0:
+            emb = "data"
+        else:
+            emb = None
+        return {
+            "layers": None,
+            "vocab": "model" if "model" in mesh.axis_names else None,
+            "embed_rep": None,
+            "embed": emb,
+            "heads": None,
+            "head_dim": None,
+            "kv_heads": None,
+            "mlp": None,
+            "experts": None,
+            "expert_mlp": None,
+            "state": None,
+        }
+
+    heads_ok = cfg.num_heads % m == 0
+    rules = {
+        "layers": None,
+        "vocab": "model",
+        "embed_rep": None,
+        "embed": None if cfg.layout == "serve" else "data",
+        "heads": "model" if heads_ok else None,
+        "head_dim": None if heads_ok else "model",
+        # MHA archs (kv == m·k) shard kv heads; GQA kv counts (1-8) < 16
+        # stay replicated and the decode cache shards its sequence instead.
+        "kv_heads": "model" if cfg.num_kv_heads % m == 0 else None,
+        "mlp": "model" if cfg.d_ff % m == 0 else None,
+        "experts": "model" if cfg.num_experts and cfg.num_experts % m == 0 else None,
+        "expert_mlp": None,
+        "state": "model" if (cfg.lru_width or cfg.d_model) % m == 0 else None,
+    }
+    if "data" not in mesh.axis_names:
+        rules["embed"] = None
+    if "model" not in mesh.axis_names:
+        for k, v in rules.items():
+            if v == "model":
+                rules[k] = None
+    return rules
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def param_shardings(model: Model, mesh: Mesh):
+    """NamedSharding tree matching the param tree."""
+    rules = param_rules(model.cfg, mesh)
+    specs = partition_specs(model.param_specs(), rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def quantized_param_shardings(model: Model, mesh: Mesh, abstract_params):
+    """Shardings for an int8-quantized param tree (repro.quant): quantized
+    leaves become {"q": <weight sharding>, "s": <same minus last dim>}."""
+    from repro.quant import abstract_quantize_tree
+
+    p_sh = param_shardings(model, mesh)
+    q_sds = abstract_quantize_tree(abstract_params)
+
+    def f(sh, sds):
+        if isinstance(sds, dict) and set(sds.keys()) == {"q", "s"}:
+            spec = list(sh.spec) + [None] * (len(sds["q"].shape) - len(sh.spec))
+            return {
+                "q": sh,
+                "s": NamedSharding(mesh, P(*spec[:-1], None)),
+            }
+        return sh
+
+    is_q = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+    sh_tree = jax.tree.map(
+        f, p_sh, q_sds, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    return sh_tree, q_sds
+
+
+def opt_shardings(model: Model, mesh: Mesh, opt_state_template):
+    """Optimizer m/v follow the param specs; step is replicated."""
+    ps = param_shardings(model, mesh)
+    return type(opt_state_template)(
+        m=ps, v=ps, step=NamedSharding(mesh, P())
+    )
+
+
+def batch_shardings(model: Model, mesh: Mesh, batch_specs: dict):
+    """Batch dim over (pod, data); everything else replicated. Batches too
+    small to split (long_500k has global_batch=1) stay replicated — the
+    cell is latency-bound by design and the model axis still splits state."""
+    dist = make_dist(mesh, model.cfg.layout)
+    out = {}
+    for k, sds in batch_specs.items():
+        spec = [None] * len(sds.shape)
+        if sds.shape and sds.shape[0] % max(dist.batch_size, 1) == 0:
+            spec[0] = dist.batch
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def state_shardings(model: Model, mesh: Mesh, state_template):
+    """Decode-state shardings per family (see module docstring)."""
+    dist = make_dist(mesh, model.cfg.layout)
+    mdl = dist.model_axis
+    cfg = model.cfg
+    m = int(mesh.shape[mdl]) if mdl else 1
+    bs = max(dist.batch_size, 1)
+
+    def bspec(nbatch: int):
+        return dist.batch if nbatch % bs == 0 else None
+
+    def kv_cache_spec(leaf):
+        # [L, B, T, KH, Dh]: batch over data; kv-heads over model when they
+        # divide (MHA — fully local decode attention), else sequence over
+        # model (flash-decode partial-softmax psum combine).
+        if leaf.ndim == 5:
+            t, kh = leaf.shape[2], leaf.shape[3]
+            if kh % m == 0:
+                return P(None, bspec(leaf.shape[1]), None, mdl, None)
+            return P(None, bspec(leaf.shape[1]), mdl if t % m == 0 else None, None, None)
+        if leaf.ndim == 1:  # lengths [B]
+            return P(bspec(leaf.shape[0]))
+        return P(*([None] * leaf.ndim))
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        spec_tree = jax.tree.map(kv_cache_spec, state_template)
+    elif fam == "ssm":
+
+        def rwkv_spec(leaf):
+            if leaf.ndim == 3:  # x_tm/x_cm [L, B, D]
+                return P(None, bspec(leaf.shape[1]), mdl if leaf.shape[2] % m == 0 else None)
+            if leaf.ndim == 5:  # wkv [L, B, H, dk, dv]
+                return P(None, bspec(leaf.shape[1]), mdl if leaf.shape[2] % m == 0 else None, None, None)
+            return P(*([None] * leaf.ndim))
+
+        spec_tree = jax.tree.map(rwkv_spec, state_template)
+    elif fam == "hybrid":
+
+        def rglru_spec(leaf):
+            if leaf.ndim == 3:  # conv [B, 3, W]
+                return P(bspec(leaf.shape[0]), None, mdl if leaf.shape[2] % m == 0 else None)
+            if leaf.ndim == 2:  # h [B, W]
+                return P(bspec(leaf.shape[0]), mdl if leaf.shape[1] % m == 0 else None)
+            if leaf.ndim == 4:  # window kv [B, W, KH, Dh]
+                return P(bspec(leaf.shape[0]), mdl if leaf.shape[1] % m == 0 else None, None, None)
+            if leaf.ndim == 1:
+                return P(bspec(leaf.shape[0]))
+            return P(*([None] * leaf.ndim))
+
+        spec_tree = jax.tree.map(rglru_spec, state_template)
+    elif fam == "audio":
+        spec_tree = jax.tree.map(kv_cache_spec, state_template)
+    else:
+        raise ValueError(fam)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)

@@ -1,0 +1,84 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--full]``.
+
+Default runs the REDUCED config end-to-end on local devices (CPU demo /
+smoke); ``--full`` uses the assigned architecture at full size (requires a
+real TPU slice — on this container it would only make sense via the
+dry-run, see launch/dryrun.py). The Redynis daemons (expert placement +
+hot-row embedding) run inside the loop whenever the arch enables them.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import build
+from repro.train.optim import OptConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-moe-16b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--full", action="store_true", help="full-size config")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    model = build(cfg)
+    print(
+        f"arch={cfg.name} family={cfg.family} params={model.num_params()/1e6:.1f}M "
+        f"active={model.active_params()/1e6:.1f}M devices={jax.device_count()}"
+    )
+
+    trainer = Trainer(
+        model,
+        TrainConfig(
+            opt=OptConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5 + 1),
+                          total_steps=args.steps),
+            microbatches=args.microbatches,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+        ),
+        num_nodes=max(jax.device_count(), 1),
+    )
+    pipe = Pipeline(
+        DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=args.seq,
+            global_batch=args.batch,
+            seed=args.seed,
+        )
+    )
+    state = (
+        trainer.restore(jax.random.PRNGKey(args.seed))
+        if args.checkpoint_dir
+        else trainer.init_state(jax.random.PRNGKey(args.seed))
+    )
+    state, hist = trainer.run(state, pipe, args.steps)
+    print(
+        f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+        f"over {len(hist)} steps"
+    )
+    if state.expert_placement is not None:
+        hr = float(trainer.expert_daemon.hit_rate(state.expert_placement))
+        print(f"expert replica hit rate (EMA traffic): {hr:.3f}")
+    if state.hot_embed is not None:
+        hr = float(trainer.embed_daemon.hit_rate(state.hot_embed))
+        print(f"hot-row embedding hit rate (EMA traffic): {hr:.3f}")
+
+
+if __name__ == "__main__":
+    main()

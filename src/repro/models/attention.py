@@ -1,0 +1,208 @@
+"""Attention: GQA projections + three interchangeable inner implementations.
+
+  * ``dense``      — full masked scores; simplest, O(S^2) memory. Smoke tests
+                     and short sequences.
+  * ``blockwise``  — flash-style exact attention in pure JAX: outer unrolled
+                     loop over query chunks (static slice bounds), inner scan
+                     over key chunks with online softmax. O(chunk^2) memory,
+                     and — unlike a masked dense pass — performs only the
+                     ~S^2/2 causal FLOPs (the outer loop's kv range stops at
+                     the diagonal; window attention stops at the window edge).
+                     This is the XLA analogue of the Pallas flash kernel in
+                     ``repro.kernels.flash_attention`` and serves as the
+                     shape- compatible stand-in on the dry-run path (Mosaic
+                     is TPU-only).
+  * ``decode``     — one-token query against a (possibly sequence-sharded)
+                     KV cache; masked by cache length.
+
+GQA is computed grouped (``[B, S, KH, G, Dh]`` vs ``[B, T, KH, Dh]``) —
+KV heads are never materialised ``G``-fold.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+NEG_INF = -1e30
+
+__all__ = ["dense_attention", "blockwise_attention", "decode_attention"]
+
+
+def _split_groups(q: Array, num_kv: int) -> Array:
+    """[B, S, H, D] -> [B, S, KH, G, D]"""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def _merge_groups(x: Array) -> Array:
+    """[B, S, KH, G, D] -> [B, S, H, D]"""
+    b, s, kh, g, d = x.shape
+    return x.reshape(b, s, kh * g, d)
+
+
+def _mask(
+    q_pos: Array, k_pos: Array, causal: bool, window: int, kv_len: int = 0
+) -> Array:
+    """[Sq, Sk] bool — True = attend. Causal / sliding-window / kv padding."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_len:
+        ok &= k_pos[None, :] < kv_len
+    return ok
+
+
+def dense_attention(
+    q: Array,  # [B, Sq, H, D]
+    k: Array,  # [B, Sk, KH, D]
+    v: Array,  # [B, Sk, KH, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> Array:
+    """Full masked attention (fp32 softmax). q_offset: q's global position of
+    index 0 relative to k (cross-attention uses causal=False, offset=0)."""
+    kh = k.shape[2]
+    qg = _split_groups(q, kh)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k, preferred_element_type=jnp.float32)
+    q_pos = jnp.arange(q.shape[1]) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, k_pos, causal, window)
+    s = jnp.where(m[None, None, None], s * scale, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return _merge_groups(out)
+
+
+def _block(qg, kc, vc, q_pos, k_pos, carry, causal, window, scale, kv_len=0):
+    """One (q-chunk, k-chunk) online-softmax step.
+
+    qg [B, C, KH, G, D]; kc/vc [B, C, KH, D]; carry = (acc, m, l)."""
+    acc, m, l = carry
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, kc, preferred_element_type=jnp.float32)
+    s = s * scale
+    ok = _mask(q_pos, k_pos, causal, window, kv_len)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+    acc = acc * alpha[..., None] + pv
+    return acc, m_new, l
+
+
+def blockwise_attention(
+    q: Array,  # [B, S, H, D]
+    k: Array,  # [B, T, KH, D]
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> Array:
+    """Exact flash-style attention; see module docstring. ``chunk`` must
+    divide the query length; the kv length is padded up internally and the
+    padding masked (cross-attention memories are rarely chunk-aligned)."""
+    b, sq, h, d = q.shape
+    t = k.shape[1]
+    kh = k.shape[2]
+    chunk = min(chunk, sq, t)
+    q_pad = (-sq) % chunk
+    if q_pad:  # encoder memories (e.g. 1500 frames) are rarely aligned
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        sq_padded = sq + q_pad
+    else:
+        sq_padded = sq
+    kv_len = 0
+    if t % chunk:
+        kv_len = t  # real length, for masking
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nq, nk = sq_padded // chunk, t // chunk
+    sq = sq_padded
+    scale = d**-0.5
+    g = h // kh
+
+    out_chunks = []
+    for i in range(nq):
+        q_lo = i * chunk
+        q_pos = jnp.arange(chunk) + q_lo + q_offset
+        qg = _split_groups(q[:, q_lo : q_lo + chunk], kh)
+        # Static kv chunk range: stop at the causal diagonal, start at the
+        # window edge — skipped chunks cost zero FLOPs.
+        hi = nk if not causal else min(nk, (q_lo + q_offset + chunk + chunk - 1) // chunk)
+        lo = 0 if not window else max(0, (q_lo + q_offset - window + 1) // chunk)
+        acc = jnp.zeros((b, kh, g, chunk, d), jnp.float32)
+        m = jnp.full((b, kh, g, chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kh, g, chunk), jnp.float32)
+        n_blocks = hi - lo
+        if n_blocks > 1:
+            # All-but-diagonal chunks via scan (bounded HLO size).
+            ks = k[:, lo * chunk : (hi - 1) * chunk].reshape(b, n_blocks - 1, chunk, kh, d)
+            vs = v[:, lo * chunk : (hi - 1) * chunk].reshape(b, n_blocks - 1, chunk, kh, d)
+            idx = jnp.arange(lo, hi - 1)
+
+            def body(carry, xs):
+                kc, vc, j = xs
+                k_pos = jnp.arange(chunk) + j * chunk
+                return (
+                    _block(
+                        qg, kc, vc, q_pos, k_pos, carry, causal, window, scale, kv_len
+                    ),
+                    None,
+                )
+
+            (acc, m, l), _ = jax.lax.scan(
+                body,
+                (acc, m, l),
+                (ks.swapaxes(0, 1), vs.swapaxes(0, 1), idx),
+            )
+        # Diagonal (or final) chunk — masked.
+        jlast = hi - 1
+        k_pos = jnp.arange(chunk) + jlast * chunk
+        kc = k[:, jlast * chunk : (jlast + 1) * chunk]
+        vc = v[:, jlast * chunk : (jlast + 1) * chunk]
+        acc, m, l = _block(
+            qg, kc, vc, q_pos, k_pos, (acc, m, l), causal, window, scale, kv_len
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out_chunks.append(
+            _merge_groups(out.transpose(0, 3, 1, 2, 4)).astype(q.dtype)
+        )  # [B, C, H, D]
+    result = jnp.concatenate(out_chunks, axis=1)
+    return result[:, : sq - q_pad] if q_pad else result
+
+
+def decode_attention(
+    q: Array,  # [B, H, D] — one new token per sequence
+    k_cache: Array,  # [B, T, KH, D]
+    v_cache: Array,  # [B, T, KH, D]
+    length: Array,  # [B] int32 — valid cache entries (including new token)
+) -> Array:
+    """Single-position attention over a KV cache, masked to ``length``.
+
+    Pure jnp — with the cache sequence-sharded over the model axis, XLA's
+    SPMD partitioner turns the masked softmax + contraction into partial
+    reductions combined with small all-reduces (see launch/sharding.py)."""
+    kh = k_cache.shape[2]
+    b, h, d = q.shape
+    qg = q.reshape(b, kh, h // kh, d)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * (d**-0.5)
+    t = k_cache.shape[1]
+    valid = jnp.arange(t)[None] < length[:, None]  # [B, T]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, d)

@@ -1,0 +1,185 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, F, D] (F = 1500 for 30 s of
+audio). Encoder: bidirectional self-attention + GELU MLP; decoder: causal
+self-attention + cross-attention over the encoder memory + GELU MLP; both
+pre-LayerNorm, sinusoidal positions (parameter-free — the real model's
+learned table is a deviation noted in DESIGN.md).
+
+Decode state = decoder self-attention KV cache + the cross-attention K/V
+projected once from the encoder memory at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import DistSpec
+from repro.models.layers import apply_norm, norm_specs
+from repro.models import transformer as tfm
+
+__all__ = [
+    "EncDecState",
+    "encdec_specs",
+    "init_encdec_state",
+    "sinusoid",
+    "encode",
+    "decode_prefill",
+    "encdec_decode_step",
+]
+
+
+class EncDecState(NamedTuple):
+    self_k: Array  # [Ld, B, T, KH, Dh]
+    self_v: Array
+    cross_k: Array  # [Ld, B, F, KH, Dh]
+    cross_v: Array
+    length: Array  # [B]
+
+
+def init_encdec_state(cfg, batch: int, cache_len: int, abstract: bool = False):
+    kh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    l, f = cfg.num_layers, cfg.num_frames
+    mk = (
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+        if abstract
+        else (lambda s, d: jnp.zeros(s, d))
+    )
+    return EncDecState(
+        self_k=mk((l, batch, cache_len, kh, dh), jnp.bfloat16),
+        self_v=mk((l, batch, cache_len, kh, dh), jnp.bfloat16),
+        cross_k=mk((l, batch, f, kh, dh), jnp.bfloat16),
+        cross_v=mk((l, batch, f, kh, dh), jnp.bfloat16),
+        length=mk((batch,), jnp.int32),
+    )
+
+
+def encdec_specs(cfg) -> dict:
+    enc_prefix = ((cfg.encoder_layers, "layers"),)
+    dec_prefix = ((cfg.num_layers, "layers"),)
+    return {
+        "encoder": {
+            "attn": tfm.attn_specs(cfg, enc_prefix),
+            "mlp": tfm.mlp_specs(cfg, enc_prefix),
+            "ln_post": norm_specs(cfg.d_model, cfg.norm),
+        },
+        "decoder": {
+            "attn": tfm.attn_specs(cfg, dec_prefix),
+            "cross": tfm.attn_specs(cfg, dec_prefix),
+            "mlp": tfm.mlp_specs(cfg, dec_prefix),
+        },
+    }
+
+
+def sinusoid(length: int, d: int) -> Array:
+    """Parameter-free sinusoidal position table [length, d] (fp32)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoid_at(positions: Array, d: int) -> Array:
+    """Sinusoidal embedding at dynamic positions [B] -> [B, d]."""
+    pos = positions.astype(jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params: dict, frames: Array, cfg, dist: Optional[DistSpec] = None) -> Array:
+    """frames [B, F, D] (stub embeddings) -> encoder memory [B, F, D]."""
+    b, f, d = frames.shape
+    h = frames + sinusoid(f, d).astype(frames.dtype)[None]
+    positions = jnp.arange(f)
+    enc = params["encoder"]
+
+    def body(carry, layer):
+        x = carry
+        x, _ = tfm.attn_full(
+            layer["attn"], x, cfg, dist, positions, 0, cfg.attn_chunk, causal=False
+        )
+        x, _ = tfm.mlp_apply(layer["mlp"], x, cfg, dist)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, {"attn": enc["attn"], "mlp": enc["mlp"]})
+    return apply_norm(enc["ln_post"], h, cfg.norm)
+
+
+def decode_prefill(
+    params: dict,
+    tokens_embedded: Array,  # [B, S, D] (+ positions already added)
+    memory: Array,  # [B, F, D] encoder output
+    cfg,
+    dist: Optional[DistSpec] = None,
+) -> tuple[Array, tuple[Array, Array], tuple[Array, Array]]:
+    """Full decoder pass. Returns (hidden, (self_k, self_v), (cross_k, cross_v))."""
+    b, s, d = tokens_embedded.shape
+    positions = jnp.arange(s)
+    dec = params["decoder"]
+
+    def body(carry, layer):
+        x = carry
+        x, (k, v) = tfm.attn_full(
+            layer["attn"], x, cfg, dist, positions, 0, cfg.attn_chunk, causal=True
+        )
+        ck, cv = tfm.cross_attn_kv(layer["cross"], memory, cfg)
+        x = tfm.cross_attn(layer["cross"], x, (ck, cv), cfg, dist)
+        x, _ = tfm.mlp_apply(layer["mlp"], x, cfg, dist)
+        return x, (k, v, ck, cv)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, (k, v, ck, cv) = jax.lax.scan(body, tokens_embedded, dec)
+    return h, (k, v), (ck, cv)
+
+
+def encdec_decode_step(
+    params: dict,
+    x: Array,  # [B, D] embedded new token (position added by caller)
+    state: EncDecState,
+    cfg,
+    dist: Optional[DistSpec] = None,
+) -> tuple[Array, EncDecState]:
+    """Self-attn cache travels in the scan carry and is updated in place
+    (one row per layer); cross K/V are read-only scan xs."""
+    dec = params["decoder"]
+    b = x.shape[0]
+    pos = state.length.astype(jnp.int32)
+    bi = jnp.arange(b)
+    layer_idx = jnp.arange(cfg.num_layers)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        layer, li, ck, cv = xs
+        p = layer["attn"]
+        xn = apply_norm(p["ln"], x[:, None, :], cfg.norm)
+        q, k, v = tfm._project_qkv(p, xn, cfg)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        k_all = k_all.at[li, bi, pos].set(k.astype(k_all.dtype))
+        v_all = v_all.at[li, bi, pos].set(v.astype(v_all.dtype))
+        kc = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
+        from repro.models.attention import decode_attention
+
+        o = decode_attention(q, kc, vc, state.length + 1)
+        x = x + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+        y = tfm.cross_attn(layer["cross"], x[:, None, :], (ck, cv), cfg, dist)
+        y, _ = tfm.mlp_apply(layer["mlp"], y, cfg, dist)
+        return (y[:, 0], k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body,
+        (x, state.self_k, state.self_v),
+        (dec, layer_idx, state.cross_k, state.cross_v),
+    )
+    return x, state._replace(self_k=k, self_v=v, length=state.length + 1)

@@ -1,0 +1,116 @@
+"""Shared neural-net layers: norms, RoPE, MLPs (pure functions over params).
+
+Conventions:
+  * activations ``[B, S, D]`` bf16 (cfg.dtype); norm/softmax math in fp32.
+  * every layer is ``f(params_subtree, x) -> y`` — no classes, no state.
+  * ParamSpec builders (``*_specs``) sit next to the apply functions so the
+    declaration and use of every parameter are adjacent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.models.params import ParamSpec, dense_init, ones_init, zeros_init
+
+__all__ = [
+    "rmsnorm",
+    "layernorm",
+    "norm_specs",
+    "apply_norm",
+    "rope",
+    "swiglu_specs",
+    "swiglu",
+    "gelu_mlp_specs",
+    "gelu_mlp",
+]
+
+
+def rmsnorm(scale: Array, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(scale: Array, bias: Array, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_specs(d: int, kind: str, prefix_axes: tuple = ()) -> dict:
+    """``kind``: 'rmsnorm' | 'layernorm'. prefix_axes stacks (e.g. layers)."""
+    shape = tuple(s for s, _ in prefix_axes) + (d,)
+    axes = tuple(a for _, a in prefix_axes) + (None,)
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec(shape, axes, ones_init, jnp.float32)}
+    return {
+        "scale": ParamSpec(shape, axes, ones_init, jnp.float32),
+        "bias": ParamSpec(shape, axes, zeros_init, jnp.float32),
+    }
+
+
+def apply_norm(p: dict, x: Array, kind: str) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(p["scale"], x)
+    return layernorm(p["scale"], p["bias"], x)
+
+
+def rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """Rotary embedding. x ``[..., S, ..., D]`` with positions ``[S]`` or
+    ``[B, S]`` broadcastable to x's sequence dim; x layout ``[B, S, H, D]``."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [S, half] or [B,S,half]
+    if ang.ndim == 2:  # [S, half] -> broadcast over batch and heads
+        ang = ang[None, :, None, :]
+    else:  # [B, S, half]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def swiglu_specs(d_model: int, d_ff: int, prefix_axes: tuple = ()) -> dict:
+    ps = tuple(s for s, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    return {
+        "w_gate": ParamSpec(ps + (d_model, d_ff), pa + ("embed", "mlp"), dense_init(d_model)),
+        "w_up": ParamSpec(ps + (d_model, d_ff), pa + ("embed", "mlp"), dense_init(d_model)),
+        "w_down": ParamSpec(ps + (d_ff, d_model), pa + ("mlp", "embed"), dense_init(d_ff)),
+    }
+
+
+def swiglu(p: dict, x: Array) -> Array:
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bsf,fd->bsd", hidden, p["w_down"])
+
+
+def gelu_mlp_specs(d_model: int, d_ff: int, prefix_axes: tuple = ()) -> dict:
+    ps = tuple(s for s, _ in prefix_axes)
+    pa = tuple(a for _, a in prefix_axes)
+    return {
+        "w_in": ParamSpec(ps + (d_model, d_ff), pa + ("embed", "mlp"), dense_init(d_model)),
+        "b_in": ParamSpec(ps + (d_ff,), pa + ("mlp",), zeros_init),
+        "w_out": ParamSpec(ps + (d_ff, d_model), pa + ("mlp", "embed"), dense_init(d_ff)),
+        "b_out": ParamSpec(ps + (d_model,), pa + ("embed",), zeros_init),
+    }
+
+
+def gelu_mlp(p: dict, x: Array) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"].astype(x.dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"].astype(x.dtype)

@@ -1,0 +1,340 @@
+"""Unified model assembly: one ``Model`` facade over the five block families.
+
+``build(cfg)`` returns a :class:`Model` whose methods are pure functions
+(suitable for jit/pjit) dispatching on ``cfg.family``:
+
+  dense | moe | vlm  -> decoder-only transformer stack (GQA; MoE FFN when
+                        cfg.num_experts; vlm prepends stub patch embeddings)
+  ssm                -> RWKV-6 stack (attention-free)
+  hybrid             -> RecurrentGemma stack (RG-LRU + local attention)
+  audio              -> Whisper encoder-decoder (stub frame embeddings)
+
+Interface (shapes per the assignment's cells):
+
+  loss(params, batch, dist, hot_ids)        — train_step objective
+  prefill(params, batch, dist, cache_len)   — full-sequence, builds state
+  decode_step(params, state, tokens, dist)  — serve_step: one new token
+  init_state(batch, cache_len, abstract)    — decode-state pytree / SDS tree
+  input_specs(shape)                        — ShapeDtypeStruct batch stand-ins
+
+Every embedding/unembedding goes through ``repro.dist`` so vocab sharding
+never all-gathers a table, and MoE layers emit the routing histograms the
+Redynis placement daemon feeds on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import DistSpec, embed_lookup, softmax_xent, unembed_logits
+from repro.models import encdec, rglru, rwkv6
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, norm_specs
+from repro.models.params import (
+    ParamSpec,
+    abstract_params,
+    count_params,
+    embed_init,
+    init_params,
+)
+
+__all__ = ["Model", "build"]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._specs = self._build_specs()
+
+    # ------------------------------------------------------------- params
+    def _build_specs(self) -> dict:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.padded_vocab
+        specs: dict[str, Any] = {
+            "embed": ParamSpec((v, d), ("vocab", "embed_rep"), embed_init(0.02)),
+            "ln_f": norm_specs(d, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            specs["head"] = ParamSpec((v, d), ("vocab", "embed_rep"), embed_init(0.02))
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            specs["blocks"] = tfm.stacked_block_specs(cfg)
+        elif fam == "ssm":
+            specs["blocks"] = rwkv6.rwkv_block_specs(cfg)
+        elif fam == "hybrid":
+            specs["blocks"] = rglru.rglru_block_specs(cfg)
+        elif fam == "audio":
+            specs["blocks"] = encdec.encdec_specs(cfg)
+        else:
+            raise ValueError(f"unknown family {fam!r}")
+        return specs
+
+    def param_specs(self) -> dict:
+        return self._specs
+
+    def init(self, rng: Array) -> dict:
+        return init_params(self._specs, rng)
+
+    def abstract_params(self) -> dict:
+        return abstract_params(self._specs)
+
+    def num_params(self) -> int:
+        return count_params(self._specs)
+
+    def active_params(self) -> int:
+        """Parameters touched per token (MoE: shared + top_k of routed)."""
+        cfg = self.cfg
+        total = self.num_params()
+        if not cfg.num_experts:
+            return total
+        expert = 3 * cfg.d_model * cfg.d_ff  # one routed expert's FFN
+        routed_all = cfg.num_layers * cfg.num_experts * expert
+        routed_active = cfg.num_layers * cfg.top_k * expert
+        return total - routed_all + routed_active
+
+    # ------------------------------------------------------------- embed
+    def _head_table(self, params: dict) -> Array:
+        return params["embed"] if self.cfg.tie_embeddings else params["head"]
+
+    def embed_tokens(
+        self,
+        params: dict,
+        tokens: Array,
+        dist: Optional[DistSpec],
+        hot_embed=None,  # HotEmbeddingState — Redynis hot-row cache
+    ) -> Array:
+        if hot_embed is not None and self.cfg.hot_embed_rows:
+            from repro.core.hot_embedding import embed_with_cache
+
+            h, _ = embed_with_cache(params["embed"], tokens, hot_embed, dist)
+            h = h.astype(jnp.bfloat16)
+        else:
+            h = embed_lookup(params["embed"], tokens, dist).astype(jnp.bfloat16)
+        if self.cfg.pos == "sinusoidal":
+            s, d = tokens.shape[-1], self.cfg.d_model
+            h = h + encdec.sinusoid(s, d).astype(h.dtype)[None]
+        return h
+
+    # ------------------------------------------------------------- train
+    def loss(
+        self,
+        params: dict,
+        batch: dict,
+        dist: Optional[DistSpec] = None,
+        hot_ids: Array | None = None,
+        hot_embed=None,
+    ) -> tuple[Array, dict]:
+        """Mean next-token xent (+ MoE aux). Returns (loss, metrics)."""
+        cfg = self.cfg
+        tokens, targets = batch["tokens"], batch["targets"]
+        h = self.embed_tokens(params, tokens, dist, hot_embed)
+        moe_stats = None
+
+        if cfg.family in ("dense", "moe"):
+            h, _, moe_stats = tfm.run_decoder(
+                params["blocks"], h, cfg, dist,
+                mode="train", window=cfg.window, attn_chunk=cfg.attn_chunk,
+                hot_ids=hot_ids,
+            )
+        elif cfg.family == "vlm":
+            p = batch["patches"].astype(h.dtype)  # [B, P, D] stub frontend
+            h = jnp.concatenate([p, h], axis=1)
+            h, _, moe_stats = tfm.run_decoder(
+                params["blocks"], h, cfg, dist,
+                mode="train", window=cfg.window, attn_chunk=cfg.attn_chunk,
+                hot_ids=hot_ids,
+            )
+            h = h[:, batch["patches"].shape[1] :]
+        elif cfg.family == "ssm":
+            h, _ = rwkv6.rwkv_forward(params["blocks"], h, cfg, dist)
+        elif cfg.family == "hybrid":
+            h, _ = rglru.rglru_forward(params["blocks"], h, cfg, dist)
+        elif cfg.family == "audio":
+            memory = encdec.encode(params["blocks"], batch["frames"].astype(h.dtype), cfg, dist)
+            h, _, _ = encdec.decode_prefill(params["blocks"], h, memory, cfg, dist)
+        else:
+            raise ValueError(cfg.family)
+
+        h = apply_norm(params["ln_f"], h, cfg.norm)
+        mask = targets >= 0
+        xent = softmax_xent(
+            h,
+            self._head_table(params),
+            jnp.where(mask, targets, 0),
+            dist,
+            mask=mask,
+            num_chunks=cfg.xent_chunks,
+            vocab_size=cfg.vocab_size,
+        )
+        metrics: dict[str, Any] = {"xent": xent}
+        loss = xent
+        if moe_stats is not None:
+            loss = loss + cfg.moe_aux_weight * moe_stats["aux"]
+            metrics.update(
+                moe_counts=moe_stats["counts"],
+                moe_aux=moe_stats["aux"],
+                moe_dropped=moe_stats["dropped"],
+                moe_hot_frac=moe_stats["hot_frac"],
+            )
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------- serve
+    def init_state(self, batch: int, cache_len: int, abstract: bool = False):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            sds = tfm.init_cache_specs(cfg, batch, cache_len)
+            if abstract:
+                return sds
+            return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+        if cfg.family == "ssm":
+            return rwkv6.init_rwkv_state(cfg, batch, abstract)
+        if cfg.family == "hybrid":
+            return rglru.init_rglru_state(cfg, batch, abstract)
+        if cfg.family == "audio":
+            return encdec.init_encdec_state(cfg, batch, cache_len, abstract)
+        raise ValueError(cfg.family)
+
+    def prefill(
+        self,
+        params: dict,
+        batch: dict,
+        dist: Optional[DistSpec] = None,
+        cache_len: int | None = None,
+        hot_ids: Array | None = None,
+    ):
+        """Full-sequence pass building decode state. Returns (logits, state).
+
+        ``cache_len`` pads the KV cache beyond the prompt for generation.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache_len = cache_len or s
+        h = self.embed_tokens(params, tokens, dist)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.family == "vlm":
+                h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+            h, cache, _ = tfm.run_decoder(
+                params["blocks"], h, cfg, dist,
+                mode="prefill", window=cfg.window, attn_chunk=cfg.attn_chunk,
+                hot_ids=hot_ids,
+            )
+            if cache_len > cache.k.shape[2]:
+                pad = cache_len - cache.k.shape[2]
+                padw = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                cache = cache._replace(
+                    k=jnp.pad(cache.k, padw), v=jnp.pad(cache.v, padw)
+                )
+            state = cache
+        elif cfg.family == "ssm":
+            h, state = rwkv6.rwkv_forward(params["blocks"], h, cfg, dist)
+        elif cfg.family == "hybrid":
+            h, state = rglru.rglru_forward(
+                params["blocks"], h, cfg, dist, collect_cache=True
+            )
+        elif cfg.family == "audio":
+            memory = encdec.encode(params["blocks"], batch["frames"].astype(h.dtype), cfg, dist)
+            h, (sk, sv), (ck, cv) = encdec.decode_prefill(params["blocks"], h, memory, cfg, dist)
+            if cache_len > s:
+                pad = ((0, 0), (0, 0), (0, cache_len - s), (0, 0), (0, 0))
+                sk, sv = jnp.pad(sk, pad), jnp.pad(sv, pad)
+            state = encdec.EncDecState(
+                self_k=sk, self_v=sv, cross_k=ck, cross_v=cv,
+                length=jnp.full((b,), s, jnp.int32),
+            )
+        else:
+            raise ValueError(cfg.family)
+
+        h_last = apply_norm(params["ln_f"], h[:, -1:], cfg.norm)[:, 0]
+        logits = unembed_logits(h_last, self._head_table(params), dist, self.cfg.vocab_size)
+        return logits, state
+
+    def decode_step(
+        self,
+        params: dict,
+        state,
+        tokens: Array,  # [B] int32 — the most recent token per sequence
+        dist: Optional[DistSpec] = None,
+        hot_ids: Array | None = None,
+    ):
+        """serve_step: one new token against the decode state."""
+        cfg = self.cfg
+        from repro.quant import dequant_leaf, is_quantized
+
+        if any(is_quantized(params.get(k)) for k in ("embed", "head")):
+            # top-level tables dequantize once (small when sharded); block
+            # weights stay int8 and dequantize per layer inside the scan.
+            params = {
+                k: (dequant_leaf(v) if k != "blocks" and is_quantized(v) else v)
+                for k, v in params.items()
+            }
+        h = embed_lookup(params["embed"], tokens[:, None], dist)[:, 0]
+        h = h.astype(jnp.bfloat16)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.pos == "sinusoidal":
+                h = h + encdec.sinusoid_at(state.length, cfg.d_model).astype(h.dtype)
+            h, state, _ = tfm.run_decode_step(
+                params["blocks"], h, state, cfg, dist,
+                window=cfg.window, hot_ids=hot_ids,
+            )
+        elif cfg.family == "ssm":
+            h, state = rwkv6.rwkv_decode_step(params["blocks"], h, cfg, state, dist)
+        elif cfg.family == "hybrid":
+            h, state = rglru.rglru_decode_step(params["blocks"], h, cfg, state, dist)
+        elif cfg.family == "audio":
+            h = h + encdec.sinusoid_at(state.length, cfg.d_model).astype(h.dtype)
+            h, state = encdec.encdec_decode_step(params["blocks"], h, state, cfg, dist)
+        else:
+            raise ValueError(cfg.family)
+
+        h = apply_norm(params["ln_f"], h[:, None, :], cfg.norm)[:, 0]
+        logits = unembed_logits(h, self._head_table(params), dist, cfg.vocab_size)
+        return logits, state
+
+    # ------------------------------------------------------------- shapes
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for one batch of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+        emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+        if shape.kind == "decode":
+            return {"tokens": tok(b)}
+        if cfg.family == "vlm":
+            p = cfg.num_patches
+            st = max(s - p, 1)
+            out = {"tokens": tok(b, st), "patches": emb(b, p, cfg.d_model)}
+        elif cfg.family == "audio":
+            out = {
+                "tokens": tok(b, s),
+                "frames": emb(b, cfg.num_frames, cfg.d_model),
+            }
+        else:
+            out = {"tokens": tok(b, s)}
+        if shape.kind == "train":
+            out["targets"] = jax.ShapeDtypeStruct(out["tokens"].shape, jnp.int32)
+        return out
+
+    def make_batch(self, shape: ShapeConfig, rng: Array) -> dict:
+        """Materialise a synthetic batch matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for k, sds in specs.items():
+            rng, sub = jax.random.split(rng)
+            if sds.dtype == jnp.int32:
+                out[k] = jax.random.randint(sub, sds.shape, 0, self.cfg.vocab_size)
+            else:
+                out[k] = jax.random.normal(sub, sds.shape, jnp.float32).astype(sds.dtype)
+        return out
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

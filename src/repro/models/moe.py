@@ -1,0 +1,348 @@
+"""Mixture-of-Experts FFN with the Redynis hot-expert replica path.
+
+Baseline (paper-agnostic): GShard-style capacity routing. Tokens are split
+into groups of ``cfg.moe_group_size``; the group dim is sharded over *both*
+the data and model mesh axes, experts over the model axis, so the dispatch
+einsum ``gsec,gsd->egcd`` lowers to exactly one all-to-all over the model
+(EP) axis — the "remote request" of the paper's cost model.
+
+Redynis path (``hot_ids`` provided): the placement daemon promotes experts
+whose ownership fraction exceeds H into a replica set of R slots. Replica
+weights are *gathered from the live params inside the forward pass*
+(``w[hot_ids]``) — so replicas are never stale during training and autodiff
+routes replica gradients back to the home copy for free. Tokens routed to a
+hot expert dispatch into a local (group-sharded) buffer and never touch the
+all-to-all; the cold path runs with a reduced static capacity, shrinking the
+all-to-all payload — the TPU translation of "maximize hits on the local
+store". Token dropping on capacity overflow is standard MoE semantics; the
+drop rate is reported in the stats and bounded by the benchmarks.
+
+Emitted stats (the Redynis traffic feed):
+  counts  [G, E] — tokens each group routed to each expert (g(O, x))
+  aux     []     — switch-style load-balance loss
+  dropped []     — fraction of (token, slot) assignments dropped
+  hot_frac []    — fraction of assignments served by the replica cache
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import DistSpec, constrain
+from repro.models.layers import swiglu, swiglu_specs
+from repro.models.params import ParamSpec, dense_init
+
+__all__ = ["moe_specs", "moe_apply", "cold_capacity", "hot_capacity"]
+
+
+def moe_specs(cfg, prefix: tuple) -> dict:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ps = tuple(s for s, _ in prefix)
+    pa = tuple(a for _, a in prefix)
+    specs = {
+        "router": ParamSpec(ps + (d, e), pa + ("embed", "experts"), dense_init(d), jnp.float32),
+        "w_gate": ParamSpec(ps + (e, d, f), pa + ("experts", "embed", "expert_mlp"), dense_init(d)),
+        "w_up": ParamSpec(ps + (e, d, f), pa + ("experts", "embed", "expert_mlp"), dense_init(d)),
+        "w_down": ParamSpec(ps + (e, f, d), pa + ("experts", "expert_mlp", "embed"), dense_init(f)),
+    }
+    if cfg.num_shared_experts:
+        specs["shared"] = swiglu_specs(d, f * cfg.num_shared_experts, prefix)
+    return specs
+
+
+def _round4(x: int) -> int:
+    return max(4, 4 * math.ceil(x / 4))
+
+
+def cold_capacity(cfg, group: int) -> int:
+    """Static per-expert capacity for the all-to-all (cold) path."""
+    scale = cfg.moe_cold_capacity if cfg.hot_expert_slots else 1.0
+    return _round4(
+        math.ceil(group * cfg.top_k / cfg.num_experts * cfg.moe_capacity_factor * scale)
+    )
+
+
+def hot_capacity(cfg, group: int) -> int:
+    """Static per-replica-slot capacity for the local (hot) path."""
+    return _round4(math.ceil(group * cfg.top_k * cfg.moe_hot_capacity / cfg.hot_expert_slots))
+
+
+def _top_k_gates(logits: Array, k: int) -> tuple[Array, Array]:
+    """softmax -> top-k -> renormalised gates. logits [G, S, E] fp32."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, k)  # [G, S, K]
+    gates = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _dispatch_combine(
+    idx: Array,  # [G, S] expert/slot choice for ONE top-k slot
+    gate: Array,  # [G, S] gate value for this slot
+    active: Array,  # [G, S] bool — route this assignment here at all
+    prior: Array,  # [G, E'] tokens already placed per target
+    n_targets: int,
+    capacity: int,
+    dtype,
+) -> tuple[Array, Array, Array, Array]:
+    """One GShard dispatch slot: position-in-target via cumsum, capacity mask.
+
+    Returns (dispatch [G,S,E',C], combine [G,S,E',C], new_prior, kept [G,S]).
+    """
+    oh = jax.nn.one_hot(idx, n_targets, dtype=jnp.float32) * active[..., None]
+    pos = jnp.cumsum(oh, axis=1) - oh + prior[:, None, :]  # [G, S, E']
+    pos_tok = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)  # [G, S]
+    keep = active & (pos_tok < capacity)
+    slot_oh = jax.nn.one_hot(pos_tok, capacity, dtype=jnp.float32)
+    disp = (oh * keep[..., None].astype(jnp.float32))[..., None] * slot_oh[..., None, :]
+    comb = gate[..., None, None].astype(jnp.float32) * disp
+    return disp.astype(dtype), comb.astype(dtype), prior + jnp.sum(oh, axis=1), keep
+
+
+def sort_dispatch(
+    xg: Array,  # [G, S, D]
+    idx: Array,  # [G, S, K] expert choice per slot
+    gates: Array,  # [G, S, K]
+    active: Array,  # [G, S, K] bool
+    e: int,
+    capacity: int,
+) -> tuple[Array, Array, Array, Array]:
+    """Sort-based dispatch (moe_impl='sort'): no [G,S,E,C] one-hot matmuls.
+
+    Flattens (token, slot) assignments per group, sorts by expert id, takes
+    position-in-expert from the sorted order, and scatters token rows into
+    the [E, C, D] buffers / gathers them back. O(S·K log S·K) integer work +
+    pure gather/scatter data movement instead of the 2·S·E·C·D dispatch and
+    combine matmuls — the FLOPs win measured as §Perf B5.
+
+    Returns (expert_in [E, G, C, D], src_tok [G, S*K], dest [G, S*K],
+    keep_gates [G, S*K]) — combine is a segment-sum back over the same maps.
+    """
+    g, s, k = idx.shape
+    d = xg.shape[-1]
+    flat_e = jnp.where(active, idx, e).reshape(g, s * k)  # inactive sorts last
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # [G, S*K]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    # position within expert = rank - first-rank-of-this-expert
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    pos = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        starts, jnp.minimum(sorted_e, e - 1), axis=1
+    )
+    keep = (sorted_e < e) & (pos < capacity)
+    dest = jnp.where(keep, sorted_e * capacity + pos, e * capacity)  # drop slot
+    src_tok = order // k  # token index of each sorted assignment
+
+    rows = jnp.take_along_axis(
+        xg, src_tok[..., None], axis=1
+    )  # [G, S*K, D] gather
+    buf = jnp.zeros((g, e * capacity + 1, d), xg.dtype)
+    buf = jax.vmap(lambda b, dd, r: b.at[dd].add(r))(buf, dest, rows)
+    expert_in = (
+        buf[:, : e * capacity].reshape(g, e, capacity, d).transpose(1, 0, 2, 3)
+    )
+    sorted_gates = jnp.take_along_axis(gates.reshape(g, s * k), order, axis=1)
+    keep_gates = jnp.where(keep, sorted_gates, 0.0)
+    return expert_in, src_tok, dest, keep_gates
+
+
+def sort_combine(
+    expert_out: Array,  # [E, G, C, D] (already gate-scaled)
+    src_tok: Array,  # [G, S*K]
+    dest: Array,  # [G, S*K]
+    s: int,
+) -> Array:
+    """Gather expert outputs back to token rows and segment-sum per token."""
+    e, g, c, d = expert_out.shape
+    flat = expert_out.transpose(1, 0, 2, 3).reshape(g, e * c, d)
+    flat = jnp.concatenate([flat, jnp.zeros((g, 1, d), flat.dtype)], axis=1)
+    contrib = jnp.take_along_axis(flat, dest[..., None], axis=1)  # [G, S*K, D]
+    y = jnp.zeros((g, s, d), flat.dtype)
+    return jax.vmap(lambda yy, t, cb: yy.at[t].add(cb))(y, src_tok, contrib)
+
+
+def _expert_ffn(
+    w_gate: Array, w_up: Array, w_down: Array, x: Array, spec: str, e: str
+) -> Array:
+    """Batched swiglu over an explicit expert layout.
+
+    spec 'egcd', e 'e' — cold path: x [E, G, C, D], weights [E, D, F]
+    spec 'grcd', e 'r' — hot path:  x [G, R, C, D], weights [R, D, F]
+    """
+    up_spec = f"{spec},{e}df->{spec[:-1]}f"
+    down_spec = f"{spec[:-1]}f,{e}fd->{spec}"
+    g = jnp.einsum(up_spec, x, w_gate)
+    u = jnp.einsum(up_spec, x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum(down_spec, h, w_down)
+
+
+def moe_apply(
+    p: dict,
+    x: Array,  # [B, S, D]
+    cfg,
+    dist: Optional[DistSpec] = None,
+    hot_ids: Array | None = None,  # [R] int32 expert ids in the replica cache (-1 empty)
+) -> tuple[Array, dict]:
+    """MoE FFN. See module docstring. Returns (y, stats)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    tokens = b * s
+    group = min(cfg.moe_group_size, tokens)
+    while tokens % group:
+        group -= 1
+    g = tokens // group
+    xg = x.reshape(g, group, d)
+    # Group dim sharded over the batch (data) axes only; activations stay
+    # replicated over the model axis, so the dispatch einsum is fully LOCAL
+    # (each EP rank masks out its own experts' tokens) and the combine is
+    # one [G_local, S, D] psum over the model axis — the same collective a
+    # dense TP FFN pays. (§Perf B2: the earlier G-over-(data×model)
+    # sharding triggered GSPMD "involuntary full rematerialization" on the
+    # backward reshard — 4.9 TB/chip/step of fallback all-gathers.)
+    g_spec = None
+    if dist is not None and dist.mesh is not None:
+        if dist.batch_size > 1 and g % dist.batch_size == 0:
+            g_spec = dist.batch
+        if g_spec is not None:
+            xg = constrain(xg, dist, g_spec, None, None)
+        elif g == 1:
+            xg = constrain(xg, dist, None, dist.batch, None)
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xg, p["router"], preferred_element_type=jnp.float32
+    )
+    gates, idx = _top_k_gates(logits, k)  # [G, S, K]
+
+    counts = jnp.zeros((g, e), jnp.float32)
+    for j in range(k):
+        counts = counts + jnp.sum(jax.nn.one_hot(idx[..., j], e, dtype=jnp.float32), axis=1)
+    # Switch-style load-balance aux: E * sum_e frac_tokens_e * mean_prob_e.
+    frac_tok = counts / jnp.maximum(jnp.sum(counts, -1, keepdims=True), 1.0)
+    mean_prob = jnp.mean(jax.nn.softmax(logits, -1), axis=1)
+    aux = e * jnp.mean(jnp.sum(frac_tok * mean_prob, axis=-1))
+
+    use_hot = hot_ids is not None and cfg.hot_expert_slots > 0
+    r = cfg.hot_expert_slots if use_hot else 0
+
+    if use_hot:
+        # Which assignments hit the replica cache, and which slot.
+        hit = idx[..., None] == hot_ids[None, None, None, :]  # [G, S, K, R]
+        is_hot = jnp.any(hit, axis=-1) & (idx >= 0)
+        hot_slot = jnp.argmax(hit, axis=-1)  # [G, S, K]
+    else:
+        is_hot = jnp.zeros(idx.shape, bool)
+        hot_slot = jnp.zeros(idx.shape, jnp.int32)
+
+    c_cold = cold_capacity(cfg, group)
+    kept_total = jnp.zeros((), jnp.float32)
+
+    # ---- cold path: capacity dispatch + all-to-all over the EP axis ----
+    def _ep_constrain(t):
+        if dist is not None and dist.mesh is not None and dist.tensor_parallel:
+            gdim = (
+                dist.batch
+                if (g_spec is not None and g % dist.batch_size == 0)
+                else None
+            )
+            return constrain(t, dist, dist.model_axis, gdim, None, None)
+        return t
+
+    if cfg.moe_impl == "sort":
+        # §Perf B5: argsort routing — no [G,S,E,C] one-hot matmuls at all.
+        expert_in, src_tok, dest, keep_gates = sort_dispatch(
+            xg, idx, gates, ~is_hot, e, c_cold
+        )
+        expert_in = _ep_constrain(expert_in)
+        expert_out = _expert_ffn(
+            p["w_gate"], p["w_up"], p["w_down"], expert_in, "egcd", "e"
+        )
+        # gate scaling on the expert side (same trick as the einsum path)
+        gate_buf = jnp.zeros((g, e * c_cold + 1), jnp.float32)
+        gate_buf = jax.vmap(lambda b, dd, kg: b.at[dd].add(kg))(
+            gate_buf, dest, keep_gates.astype(jnp.float32)
+        )
+        gate_ec = (
+            gate_buf[:, : e * c_cold].reshape(g, e, c_cold).transpose(1, 0, 2)
+        )
+        expert_out = expert_out * gate_ec[..., None].astype(expert_out.dtype)
+        y = sort_combine(expert_out, src_tok, dest, group)
+        kept_total = kept_total + jnp.sum(
+            (jax.lax.stop_gradient(keep_gates) > 0).astype(jnp.float32)
+        )
+    else:
+        # The dispatch tensor is a one-hot routing mask — structurally zero
+        # gradient — so it is stop_gradient'ed and the gate scaling moves
+        # to the (small) expert side as gate_ec [E, G, C]. Without this,
+        # autodiff materialises a [G, S, E, C] f32 cotangent for the
+        # combine whose resharding GSPMD can only do by full replication
+        # ("involuntary full rematerialization") — measured at ~3 TB/chip/
+        # step on the deepseek train cell before the rewrite (§Perf B1).
+        disp = jnp.zeros((g, group, e, c_cold), xg.dtype)
+        gate_ec = jnp.zeros((e, g, c_cold), jnp.float32)
+        prior = jnp.zeros((g, e), jnp.float32)
+        for j in range(k):
+            dj, cj, prior, kept = _dispatch_combine(
+                idx[..., j], gates[..., j], ~is_hot[..., j], prior, e, c_cold, xg.dtype
+            )
+            disp = disp + dj
+            gate_ec = gate_ec + jnp.einsum(
+                "gsec,gs->egc",
+                jax.lax.stop_gradient(dj).astype(jnp.float32),
+                gates[..., j].astype(jnp.float32),
+            )
+            kept_total = kept_total + jnp.sum(kept)
+        disp = jax.lax.stop_gradient(disp)
+
+        expert_in = jnp.einsum("gsec,gsd->egcd", disp, xg)  # a2a happens here
+        expert_in = _ep_constrain(expert_in)
+        expert_out = _expert_ffn(
+            p["w_gate"], p["w_up"], p["w_down"], expert_in, "egcd", "e"
+        )
+        expert_out = expert_out * gate_ec[..., None].astype(expert_out.dtype)
+        y = jnp.einsum("gsec,egcd->gsd", disp, expert_out)  # and back
+
+    # ---- hot path: local dispatch against in-forward-gathered replicas ----
+    hot_kept = jnp.zeros((), jnp.float32)
+    if use_hot:
+        c_hot = hot_capacity(cfg, group)
+        safe_ids = jnp.clip(hot_ids, 0, e - 1)
+        hw_gate = jnp.take(p["w_gate"], safe_ids, axis=0)  # [R, D, F] replicated
+        hw_up = jnp.take(p["w_up"], safe_ids, axis=0)
+        hw_down = jnp.take(p["w_down"], safe_ids, axis=0)
+
+        hdisp = jnp.zeros((g, group, r, c_hot), xg.dtype)
+        hgate = jnp.zeros((g, r, c_hot), jnp.float32)
+        hprior = jnp.zeros((g, r), jnp.float32)
+        for j in range(k):
+            dj, cj, hprior, kept = _dispatch_combine(
+                hot_slot[..., j], gates[..., j], is_hot[..., j], hprior, r, c_hot, xg.dtype
+            )
+            hdisp = hdisp + dj
+            hgate = hgate + jnp.einsum(
+                "gsrc,gs->grc",
+                jax.lax.stop_gradient(dj).astype(jnp.float32),
+                gates[..., j].astype(jnp.float32),
+            )
+            hot_kept = hot_kept + jnp.sum(kept)
+        hdisp = jax.lax.stop_gradient(hdisp)
+        hot_in = jnp.einsum("gsrc,gsd->grcd", hdisp, xg)  # g-sharded: NO collective
+        hot_out = _expert_ffn(hw_gate, hw_up, hw_down, hot_in, "grcd", "r")
+        hot_out = hot_out * hgate[..., None].astype(hot_out.dtype)
+        y = y + jnp.einsum("gsrc,grcd->gsd", hdisp, hot_out)
+        kept_total = kept_total + hot_kept
+
+    if cfg.num_shared_experts:
+        y = y + swiglu(p["shared"], xg)
+
+    n_assign = jnp.asarray(g * group * k, jnp.float32)
+    stats = {
+        "counts": counts,
+        "aux": aux,
+        "dropped": 1.0 - kept_total / n_assign,
+        "hot_frac": hot_kept / n_assign,
+    }
+    return y.reshape(b, s, d), stats

@@ -1,0 +1,118 @@
+"""Declarative parameter system.
+
+Every parameter is declared exactly once as a :class:`ParamSpec` — shape,
+dtype, initializer, and *logical* axis names. From that single declaration we
+derive, always consistently:
+
+  * ``init_params``      — RNG-split initialization (real arrays)
+  * ``abstract_params``  — ShapeDtypeStruct tree (dry-run, no allocation)
+  * ``partition_specs``  — PartitionSpec tree via logical→mesh axis rules
+
+so a sharding tree can never drift out of sync with the parameter tree.
+(The container has no flax; this ~150-line system is all the models need.)
+
+Logical axes used by the models:
+
+  layers, vocab, embed, heads, kv_heads, head_dim, mlp, experts,
+  state (recurrent width), frames (audio), patches (vlm)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "dense_init",
+    "embed_init",
+    "zeros_init",
+    "ones_init",
+    "init_params",
+    "abstract_params",
+    "partition_specs",
+    "count_params",
+]
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = replicated)
+    init: Callable[[Array, tuple[int, ...], Any], Array]
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):  # pragma: no cover - NamedTuple has no post_init
+        pass
+
+
+def dense_init(fan_in: int, scale: float = 1.0):
+    """Truncated-normal with 1/sqrt(fan_in) std — the standard matmul init."""
+
+    def f(key: Array, shape: tuple[int, ...], dtype) -> Array:
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+    return f
+
+
+def embed_init(scale: float = 1.0):
+    def f(key: Array, shape: tuple[int, ...], dtype) -> Array:
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+    return f
+
+
+def zeros_init(key: Array, shape: tuple[int, ...], dtype) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key: Array, shape: tuple[int, ...], dtype) -> Array:
+    return jnp.ones(shape, dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, rng: Array):
+    """Materialise a ParamSpec tree into arrays, one fresh key per leaf."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    arrays = [s.init(k, s.shape, s.dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree — for .lower() dry-runs, never allocates."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def partition_specs(specs, rules: dict[str, Any]):
+    """Logical axes -> PartitionSpec via ``rules`` (logical name -> mesh axis,
+    mesh-axis tuple, or None). Unknown logical names are an error — sharding
+    must be a conscious decision for every axis."""
+
+    def one(s: ParamSpec) -> P:
+        parts = []
+        for ax in s.axes:
+            if ax is None:
+                parts.append(None)
+            elif ax in rules:
+                parts.append(rules[ax])
+            else:
+                raise KeyError(f"no sharding rule for logical axis {ax!r}")
+        return P(*parts)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,303 @@
+"""RecurrentGemma blocks (arXiv:2402.19427): RG-LRU recurrence + local
+attention in a 1:2 pattern (every ``attention_period``-th layer attends over
+a sliding window; the rest are gated linear recurrences).
+
+Recurrent block: x -> RMSNorm -> {linear->conv1d(4)->RG-LRU} ⊙ gelu(linear)
+-> linear -> residual. RG-LRU (paper Eq. 5-7)::
+
+    r_t = sigmoid(W_a y_t + b_a)          (recurrence gate, block-diagonal W)
+    i_t = sigmoid(W_x y_t + b_x)          (input gate)
+    log a_t = -c * softplus(Λ) * r_t      (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ y_t)
+
+Training/prefill evaluates the recurrence with an associative scan (prefix
+affine composition) — O(log S) depth, fully parallel; decode is the literal
+one-step update. Combined with the 2048-token attention window this is a
+sub-quadratic architecture, hence it runs the ``long_500k`` cell.
+
+The layer pattern is heterogeneous, so this stack is unrolled (26 layers)
+rather than scanned — bounded HLO, and each layer body is rematerialised
+under ``cfg.remat``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import DistSpec
+from repro.models.layers import apply_norm, norm_specs
+from repro.models.params import ParamSpec, dense_init, ones_init, zeros_init
+from repro.models import transformer as tfm
+
+__all__ = [
+    "layer_kinds",
+    "rglru_block_specs",
+    "RGLRUState",
+    "init_rglru_state",
+    "rglru_forward",
+    "rglru_decode_step",
+]
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def layer_kinds(cfg) -> list[str]:
+    """['rec', 'rec', 'attn', ...] — every period-th layer attends."""
+    p = cfg.attention_period
+    return [
+        "attn" if p and (i % p == p - 1) else "rec" for i in range(cfg.num_layers)
+    ]
+
+
+class RGLRUState(NamedTuple):
+    """Decode-time state. Lists indexed by rec/attn layer ordinal."""
+
+    conv: list  # per rec layer [B, CONV_WIDTH-1, W]
+    h: list  # per rec layer [B, W] fp32
+    caches: list  # per attn layer (k, v) ring buffers [B, window, KH, Dh]
+    length: Array  # [B] int32 tokens generated so far
+
+
+def init_rglru_state(cfg, batch: int, abstract: bool = False):
+    w = cfg.lru_width or cfg.d_model
+    kinds = layer_kinds(cfg)
+    window = cfg.window or 2048
+    kh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    mk = (
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+        if abstract
+        else (lambda s, d: jnp.zeros(s, d))
+    )
+    return RGLRUState(
+        conv=[mk((batch, CONV_WIDTH - 1, w), jnp.bfloat16) for k in kinds if k == "rec"],
+        h=[mk((batch, w), jnp.float32) for k in kinds if k == "rec"],
+        caches=[
+            (mk((batch, window, kh, dh), jnp.bfloat16), mk((batch, window, kh, dh), jnp.bfloat16))
+            for k in kinds
+            if k == "attn"
+        ],
+        length=mk((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations (per layer — the stack is a list, not stacked arrays)
+
+
+def _rec_specs(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nb = cfg.num_heads  # block-diagonal gate blocks
+    bs = w // nb
+    return {
+        "ln": norm_specs(d, cfg.norm),
+        "w_in": ParamSpec((d, w), ("embed", "state"), dense_init(d)),
+        "w_gate_in": ParamSpec((d, w), ("embed", "state"), dense_init(d)),
+        "conv_w": ParamSpec((CONV_WIDTH, w), (None, "state"), dense_init(CONV_WIDTH)),
+        "conv_b": ParamSpec((w,), ("state",), zeros_init),
+        "gate_a": ParamSpec((nb, bs, bs), (None, None, None), dense_init(bs)),
+        "gate_a_b": ParamSpec((w,), ("state",), zeros_init),
+        "gate_x": ParamSpec((nb, bs, bs), (None, None, None), dense_init(bs)),
+        "gate_x_b": ParamSpec((w,), ("state",), zeros_init),
+        "lam": ParamSpec((w,), ("state",), ones_init, jnp.float32),
+        "w_out": ParamSpec((w, d), ("state", "embed"), dense_init(w)),
+    }
+
+
+def _mlp_specs(cfg) -> dict:
+    # RecurrentGemma uses a GeGLU MLP — same shapes as swiglu, gelu gate.
+    from repro.models.layers import swiglu_specs
+
+    return {"ln": norm_specs(cfg.d_model, cfg.norm), **swiglu_specs(cfg.d_model, cfg.d_ff)}
+
+
+def rglru_block_specs(cfg) -> dict:
+    kinds = layer_kinds(cfg)
+    return {
+        "rec": [_rec_specs(cfg) for k in kinds if k == "rec"],
+        "attn": [tfm.attn_specs(cfg, ()) for k in kinds if k == "attn"],
+        "mlp": [_mlp_specs(cfg) for _ in kinds],
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+
+
+def _block_diag_gate(w: Array, b: Array, y: Array) -> Array:
+    """Block-diagonal linear + sigmoid: y [..., W] -> [..., W]."""
+    nb, bs, _ = w.shape
+    yb = y.reshape(*y.shape[:-1], nb, bs)
+    out = jnp.einsum("...nb,nbc->...nc", yb, w.astype(y.dtype))
+    return jax.nn.sigmoid(
+        out.reshape(*y.shape).astype(jnp.float32) + b.astype(jnp.float32)
+    )
+
+
+def _lru_coeffs(p: dict, y: Array) -> tuple[Array, Array]:
+    """Per-token decay a_t and input b_t (both fp32 [B, S, W])."""
+    r = _block_diag_gate(p["gate_a"], p["gate_a_b"], y)
+    i = _block_diag_gate(p["gate_x"], p["gate_x_b"], y)
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * y.astype(jnp.float32))
+    return a, b
+
+
+def _causal_conv(p: dict, y: Array, carry: Array | None) -> tuple[Array, Array]:
+    """Depthwise causal conv, width 4. carry: [B, 3, W] previous inputs."""
+    b, s, w = y.shape
+    if carry is None:
+        carry = jnp.zeros((b, CONV_WIDTH - 1, w), y.dtype)
+    ext = jnp.concatenate([carry.astype(y.dtype), y], axis=1)  # [B, S+3, W]
+    out = sum(
+        ext[:, i : i + s] * p["conv_w"][i].astype(y.dtype)
+        for i in range(CONV_WIDTH)
+    )
+    return out + p["conv_b"].astype(y.dtype), ext[:, -(CONV_WIDTH - 1) :]
+
+
+def rec_block(
+    p: dict,
+    x: Array,  # [B, S, D]
+    cfg,
+    conv_carry: Array | None = None,
+    h0: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """Recurrent block over a full sequence. Returns (y, conv_carry', h_last)."""
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    y = jnp.einsum("bsd,dw->bsw", xn, p["w_in"])
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", xn, p["w_gate_in"]).astype(jnp.float32)
+    )
+    y, conv_carry = _causal_conv(p, y, conv_carry)
+    a, bb = _lru_coeffs(p, y)
+
+    # Prefix affine composition: h_t = A_t h0 + B_t.
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    va, vb = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    if h0 is None:
+        h = vb
+    else:
+        h = va * h0[:, None].astype(jnp.float32) + vb
+    out = h * gate
+    y_out = jnp.einsum("bsw,wd->bsd", out.astype(x.dtype), p["w_out"])
+    return x + y_out, conv_carry, h[:, -1]
+
+
+def rec_block_step(
+    p: dict, x: Array, cfg, conv_carry: Array, h0: Array
+) -> tuple[Array, Array, Array]:
+    """One decode step of the recurrent block. x [B, D]."""
+    y, conv_carry, h = rec_block(p, x[:, None, :], cfg, conv_carry, h0)
+    return y[:, 0], conv_carry, h
+
+
+def mlp_block(p: dict, x: Array, cfg) -> Array:
+    """GeGLU MLP with pre-norm."""
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    g = jnp.einsum("bsd,df->bsf", xn, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", xn, p["w_up"])
+    h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return x + jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Stack execution (unrolled heterogeneous pattern)
+
+
+def rglru_forward(
+    blocks: dict,
+    h: Array,
+    cfg,
+    dist: Optional[DistSpec] = None,
+    state: RGLRUState | None = None,
+    collect_cache: bool = False,
+) -> tuple[Array, Optional[RGLRUState]]:
+    """Full-sequence forward. With ``collect_cache`` builds the decode state
+    (ring-buffer window caches + final recurrent states)."""
+    b, s, _ = h.shape
+    kinds = layer_kinds(cfg)
+    window = cfg.window or 2048
+    ri = ai = 0
+    conv_out, h_out, cache_out = [], [], []
+    positions = jnp.arange(s)
+
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            p = blocks["rec"][ri]
+            conv0 = state.conv[ri] if state else None
+            h0 = state.h[ri] if state else None
+            fn = jax.checkpoint(rec_block, static_argnums=(2,)) if cfg.remat == "full" else rec_block
+            h_seq, conv1, hl = fn(p, h, cfg, conv0, h0)
+            h = h_seq
+            if collect_cache:
+                conv_out.append(conv1)
+                h_out.append(hl)
+            ri += 1
+        else:
+            p = blocks["attn"][ai]
+            fn = (
+                jax.checkpoint(tfm.attn_full, static_argnums=(2, 3, 5, 6))
+                if cfg.remat == "full"
+                else tfm.attn_full
+            )
+            h, (k, v) = fn(p, h, cfg, dist, positions, window, cfg.attn_chunk)
+            if collect_cache:
+                # Last ``window`` tokens into the ring buffer, slot = pos % window.
+                take = min(window, s)
+                pos = positions[-take:]
+                slots = pos % window
+                kc = jnp.zeros((b, window, *k.shape[2:]), k.dtype).at[:, slots].set(k[:, -take:])
+                vc = jnp.zeros((b, window, *v.shape[2:]), v.dtype).at[:, slots].set(v[:, -take:])
+                cache_out.append((kc, vc))
+            ai += 1
+        h = mlp_block(blocks["mlp"][li], h, cfg)
+
+    new_state = None
+    if collect_cache:
+        new_state = RGLRUState(
+            conv=conv_out, h=h_out, caches=cache_out, length=jnp.full((b,), s, jnp.int32)
+        )
+    return h, new_state
+
+
+def rglru_decode_step(
+    blocks: dict,
+    x: Array,  # [B, D]
+    cfg,
+    state: RGLRUState,
+    dist: Optional[DistSpec] = None,
+) -> tuple[Array, RGLRUState]:
+    kinds = layer_kinds(cfg)
+    window = cfg.window or 2048
+    ri = ai = 0
+    conv_out, h_out, cache_out = [], [], []
+    for li, kind in enumerate(kinds):
+        if kind == "rec":
+            p = blocks["rec"][ri]
+            x, conv1, h1 = rec_block_step(p, x, cfg, state.conv[ri], state.h[ri])
+            conv_out.append(conv1)
+            h_out.append(h1)
+            ri += 1
+        else:
+            p = blocks["attn"][ai]
+            kc, vc = state.caches[ai]
+            x, (kc, vc) = tfm.attn_decode(
+                p, x, kc, vc, state.length, cfg, dist, window=window
+            )
+            cache_out.append((kc, vc))
+            ai += 1
+        x = mlp_block(blocks["mlp"][li], x[:, None, :], cfg)[:, 0]
+    return x, RGLRUState(
+        conv=conv_out, h=h_out, caches=cache_out, length=state.length + 1
+    )

@@ -1,0 +1,281 @@
+"""RWKV-6 "Finch" blocks (arXiv:2404.05892) — attention-free token mixing
+with data-dependent per-channel decay.
+
+Structure per layer: TimeMix (the wkv6 recurrence) + ChannelMix, both with
+pre-LayerNorm and token-shift data-dependent interpolation (ddlerp with a
+shared low-rank adapter, the paper's Eq. 10-13 shape).
+
+The wkv6 recurrence, per head (Dh = 64)::
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: [Dh, Dh] state)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Training runs the *chunked* form (linear-attention chunking): within a chunk
+of C tokens the intra-chunk contribution is a masked matmul with per-channel
+decay weighting, and the state propagates once per chunk — O(S·C·Dh) instead
+of an S-step sequential scan, and the matmuls are MXU-shaped. Chunk math in
+fp32 (decay ratios are exponentials; C = 32 keeps them bounded).
+
+Decode is the recurrence taken literally, one step per token — O(1) state,
+which is why this arch runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import DistSpec
+from repro.models.layers import layernorm
+from repro.models.params import ParamSpec, dense_init, ones_init, zeros_init
+
+__all__ = ["RWKVState", "rwkv_block_specs", "rwkv_forward", "rwkv_decode_step", "init_rwkv_state"]
+
+LORA_MIX = 32  # shared ddlerp adapter rank
+LORA_DECAY = 64  # decay adapter rank
+CHUNK = 32  # chunked-recurrence block length
+
+
+class RWKVState(NamedTuple):
+    """Per-layer recurrent state, stacked [L, ...]."""
+
+    x_tm: Array  # [L, B, D] last input seen by TimeMix (token shift)
+    x_cm: Array  # [L, B, D] last input seen by ChannelMix
+    wkv: Array  # [L, B, H, Dh, Dh] recurrence state (fp32)
+
+
+def init_rwkv_state(cfg, batch: int, abstract: bool = False):
+    h = cfg.d_model // cfg.rwkv_head_dim
+    shapes = dict(
+        x_tm=((cfg.num_layers, batch, cfg.d_model), jnp.bfloat16),
+        x_cm=((cfg.num_layers, batch, cfg.d_model), jnp.bfloat16),
+        wkv=((cfg.num_layers, batch, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+    )
+    mk = (
+        (lambda s, d: jax.ShapeDtypeStruct(s, d))
+        if abstract
+        else (lambda s, d: jnp.zeros(s, d))
+    )
+    return RWKVState(**{k: mk(s, d) for k, (s, d) in shapes.items()})
+
+
+def rwkv_block_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    l = cfg.num_layers
+    pre = ((l, "layers"),)
+    ps, pa = (l,), ("layers",)
+
+    def vec(name_axis=None, init=zeros_init, dtype=jnp.float32):
+        return ParamSpec(ps + (d,), pa + (name_axis,), init, dtype)
+
+    ln = lambda: {
+        "scale": ParamSpec(ps + (d,), pa + (None,), ones_init, jnp.float32),
+        "bias": ParamSpec(ps + (d,), pa + (None,), zeros_init, jnp.float32),
+    }
+    return {
+        "tm": {
+            "ln": ln(),
+            "mu_x": vec(),
+            "mu": ParamSpec(ps + (5, d), pa + (None, None), zeros_init, jnp.float32),
+            "lora_a": ParamSpec(ps + (d, 5 * LORA_MIX), pa + ("embed", None), dense_init(d)),
+            "lora_b": ParamSpec(ps + (5, LORA_MIX, d), pa + (None, None, "embed"), zeros_init),
+            "w_r": ParamSpec(ps + (d, d), pa + ("embed", "heads"), dense_init(d)),
+            "w_k": ParamSpec(ps + (d, d), pa + ("embed", "heads"), dense_init(d)),
+            "w_v": ParamSpec(ps + (d, d), pa + ("embed", "heads"), dense_init(d)),
+            "w_g": ParamSpec(ps + (d, d), pa + ("embed", "heads"), dense_init(d)),
+            "w_o": ParamSpec(ps + (d, d), pa + ("heads", "embed"), dense_init(d)),
+            "decay_base": vec(),  # w0
+            "decay_a": ParamSpec(ps + (d, LORA_DECAY), pa + ("embed", None), dense_init(d)),
+            "decay_b": ParamSpec(ps + (LORA_DECAY, d), pa + (None, "embed"), zeros_init),
+            "bonus": vec(init=zeros_init),  # u, flattened [D] = [H*Dh]
+            "ln_x": ln(),  # per-head group norm params (applied over Dh)
+        },
+        "cm": {
+            "ln": ln(),
+            "mu_r": vec(),
+            "mu_k": vec(),
+            "w_r": ParamSpec(ps + (d, d), pa + ("embed", "mlp"), dense_init(d)),
+            "w_k": ParamSpec(ps + (d, f), pa + ("embed", "mlp"), dense_init(d)),
+            "w_v": ParamSpec(ps + (f, d), pa + ("mlp", "embed"), dense_init(f)),
+        },
+    }
+
+
+# ---------------------------------------------------------------------------
+# TimeMix
+
+
+def _ddlerp(p: dict, x: Array, xx: Array) -> list[Array]:
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, g, w)."""
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lo = jnp.einsum("bsd,dr->bsr", base, p["lora_a"].astype(x.dtype))
+    lo = jnp.tanh(lo.astype(jnp.float32)).reshape(*lo.shape[:-1], 5, LORA_MIX)
+    delta = jnp.einsum("bsir,ird->bsid", lo, p["lora_b"].astype(jnp.float32))
+    mix = p["mu"].astype(jnp.float32)[None, None] + delta  # [B, S, 5, D]
+    out = x[..., None, :] + xx[..., None, :] * mix.astype(x.dtype)
+    return [out[..., i, :] for i in range(5)]
+
+
+def _decay(p: dict, xw: Array) -> Array:
+    """Per-channel log-decay in (-inf, 0): logw = -exp(w0 + lora(xw))."""
+    lo = jnp.einsum("bsd,dr->bsr", xw, p["decay_a"].astype(xw.dtype))
+    lo = jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(lo.astype(jnp.float32)), p["decay_b"].astype(jnp.float32)
+    )
+    return -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32) + lo, -8.0, 4.0))
+
+
+def _heads(x: Array, dh: int) -> Array:
+    return x.reshape(*x.shape[:-1], x.shape[-1] // dh, dh)
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """One chunk of the wkv6 recurrence (all fp32).
+
+    r,k,v: [B, C, H, Dh]; logw: [B, C, H, Dh]; u: [H, Dh];
+    s0: [B, H, Dh, Dh]. Returns (o [B, C, H, Dh], s1).
+    """
+    cum = jnp.cumsum(logw, axis=1)  # inclusive per-channel decay log-prod
+    total = cum[:, -1]  # [B, H, Dh]
+    # Keys normalised to chunk start, queries to t-1 (state before token t).
+    q_t = r * jnp.exp(cum - logw)  # r_t * A_{t-1}
+    k_i = k * jnp.exp(-cum)  # k_i / A_i
+    scores = jnp.einsum("bthd,bihd->bhti", q_t, k_i)
+    c = r.shape[1]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strictly i < t
+    intra = jnp.einsum(
+        "bhti,bihd->bthd", jnp.where(mask[None, None], scores, 0.0), v
+    )
+    diag = jnp.einsum("bthd,bthd->bth", r * u[None, None], k)[..., None] * v
+    inter = jnp.einsum("bthd,bhde->bthe", q_t, s0)
+    o = intra + diag + inter
+    s1 = s0 * jnp.exp(total)[..., None] + jnp.einsum(
+        "bihd,bihe->bhde", k * jnp.exp(total[:, None] - cum), v
+    )
+    return o, s1
+
+
+def _group_norm(p: dict, x: Array, dh: int, eps: float = 1e-5) -> Array:
+    """Per-head LayerNorm over Dh (rwkv's GroupNorm(H))."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], shape[-1] // dh, dh).astype(jnp.float32)
+    mean = jnp.mean(xh, -1, keepdims=True)
+    var = jnp.var(xh, -1, keepdims=True)
+    xh = ((xh - mean) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return xh * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+
+
+def time_mix(
+    p: dict,
+    x: Array,  # [B, S, D]
+    cfg,
+    x_prev: Array,  # [B, D] carry-in for token shift
+    s0: Array,  # [B, H, Dh, Dh]
+) -> tuple[Array, Array, Array]:
+    """Full-sequence TimeMix. Returns (y, x_last, s_out)."""
+    b, s, d = x.shape
+    dh = cfg.rwkv_head_dim
+    xn = layernorm(p["ln"]["scale"], p["ln"]["bias"], x)
+    shifted = jnp.concatenate([x_prev[:, None].astype(xn.dtype), xn[:, :-1]], axis=1)
+    xx = shifted - xn
+    xr, xk, xv, xg, xw = _ddlerp(p, xn, xx)
+
+    r = _heads(jnp.einsum("bsd,de->bse", xr, p["w_r"]), dh).astype(jnp.float32)
+    k = _heads(jnp.einsum("bsd,de->bse", xk, p["w_k"]), dh).astype(jnp.float32)
+    v = _heads(jnp.einsum("bsd,de->bse", xv, p["w_v"]), dh).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"]).astype(jnp.float32))
+    logw = _heads(_decay(p, xw), dh)  # [B, S, H, Dh]
+    u = _heads(p["bonus"].astype(jnp.float32)[None], dh)[0]  # [H, Dh]
+
+    n_chunks = max(1, s // CHUNK)
+    assert s % CHUNK == 0 or s < CHUNK, (s, CHUNK)
+    if s < CHUNK:
+        o, s_out = _wkv_chunk(r, k, v, logw, u, s0)
+    else:
+        resh = lambda a: a.reshape(b, n_chunks, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+
+        def body(carry, xs):
+            rc, kc, vc, wc = xs
+            o, s1 = _wkv_chunk(rc, kc, vc, wc, u, carry)
+            return s1, o
+
+        s_out, o = jax.lax.scan(body, s0, (resh(r), resh(k), resh(v), resh(logw)))
+        o = o.swapaxes(0, 1).reshape(b, s, -1, dh)
+
+    o = o.reshape(b, s, d)
+    y = _group_norm(p["ln_x"], o, dh) * g
+    y = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_o"])
+    return x + y, xn[:, -1], s_out
+
+
+def channel_mix(
+    p: dict, x: Array, x_prev: Array
+) -> tuple[Array, Array]:
+    """ChannelMix (rwkv FFN). Returns (y, x_last)."""
+    xn = layernorm(p["ln"]["scale"], p["ln"]["bias"], x)
+    shifted = jnp.concatenate([x_prev[:, None].astype(xn.dtype), xn[:, :-1]], axis=1)
+    xx = shifted - xn
+    xr = xn + xx * p["mu_r"].astype(xn.dtype)
+    xk = xn + xx * p["mu_k"].astype(xn.dtype)
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"]).astype(jnp.float32))
+    kk = jnp.einsum("bsd,df->bsf", xk, p["w_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["w_v"])
+    return x + (rr.astype(x.dtype) * vv), xn[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+
+
+def rwkv_forward(
+    blocks: dict,
+    h: Array,  # [B, S, D]
+    cfg,
+    dist: Optional[DistSpec] = None,
+    state: RWKVState | None = None,
+) -> tuple[Array, RWKVState]:
+    """Run all layers over a full sequence (train/prefill). ``state`` carries
+    in (zeros for a fresh sequence) and the updated state carries out."""
+    b = h.shape[0]
+    if state is None:
+        state = init_rwkv_state(cfg, b)
+
+    def body(carry, xs):
+        x = carry
+        p, x_tm, x_cm, wkv = xs
+        x, x_tm, wkv = time_mix(p["tm"], x, cfg, x_tm, wkv)
+        x, x_cm = channel_mix(p["cm"], x, x_cm)
+        return x, (x_tm, x_cm, wkv)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, (x_tm, x_cm, wkv) = jax.lax.scan(
+        body, h, (blocks, state.x_tm, state.x_cm, state.wkv)
+    )
+    return h, RWKVState(x_tm=x_tm, x_cm=x_cm, wkv=wkv)
+
+
+def rwkv_decode_step(
+    blocks: dict,
+    x: Array,  # [B, D] one token's embedding
+    cfg,
+    state: RWKVState,
+    dist: Optional[DistSpec] = None,
+) -> tuple[Array, RWKVState]:
+    """One literal recurrence step per layer (O(1) in context length)."""
+
+    def body(carry, xs):
+        xt = carry
+        p, x_tm, x_cm, wkv = xs
+        y, x_tm2, wkv2 = time_mix(p["tm"], xt[:, None, :], cfg, x_tm, wkv)
+        y, x_cm2 = channel_mix(p["cm"], y, x_cm)
+        return y[:, 0], (x_tm2, x_cm2, wkv2)
+
+    x, (x_tm, x_cm, wkv) = jax.lax.scan(
+        body, x, (blocks, state.x_tm, state.x_cm, state.wkv)
+    )
+    return x, RWKVState(x_tm=x_tm, x_cm=x_cm, wkv=wkv)

@@ -1,0 +1,370 @@
+"""Decoder-only transformer blocks (dense + MoE FFN), GQA, three run modes.
+
+The block stack is declared once (``stacked_block_specs`` — all parameters
+carry a leading ``layers`` dim) and executed with ``jax.lax.scan`` so HLO
+size and compile time stay bounded at 88 layers × 512 devices. Modes:
+
+  * train/prefill — full-sequence blockwise (flash-style) attention; prefill
+    additionally returns the per-layer KV cache.
+  * decode        — one new token per sequence against a KV cache
+                    (cache layout ``[L, B, T, KH, Dh]``, sequence dim
+                    shardable over the model axis).
+
+Redynis hook: when ``cfg.num_experts > 0`` the FFN is the MoE layer from
+``repro.models.moe``, which emits per-(expert, data-group) routing counts —
+the traffic statistics the placement daemon consumes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist import DistSpec, constrain
+from repro.models import moe as moe_lib
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.layers import (
+    apply_norm,
+    norm_specs,
+    rope,
+    swiglu,
+    swiglu_specs,
+    gelu_mlp,
+    gelu_mlp_specs,
+)
+from repro.models.params import ParamSpec, dense_init, ones_init
+
+__all__ = ["KVCache", "init_cache_specs", "stacked_block_specs", "run_decoder"]
+
+LAYERS = ("layers",)
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. ``k``/``v``: [L, B, T, KH, Dh]; length: [B]."""
+
+    k: Array
+    v: Array
+    length: Array  # [B] int32 — valid entries per sequence
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+
+def init_cache_specs(
+    cfg, batch: int, cache_len: int, layers: int | None = None
+) -> KVCache:
+    """ShapeDtypeStruct cache (dry-run) — materialise with jnp.zeros_like."""
+    kh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    l = cfg.num_layers if layers is None else layers
+    shape = (l, batch, cache_len, kh, dh)
+    dt = jnp.bfloat16
+    return KVCache(
+        k=jax.ShapeDtypeStruct(shape, dt),
+        v=jax.ShapeDtypeStruct(shape, dt),
+        length=jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+
+
+def attn_specs(cfg, prefix: tuple) -> dict:
+    d, h, kh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ps = tuple(s for s, _ in prefix)
+    pa = tuple(a for _, a in prefix)
+    specs = {
+        "ln": norm_specs(d, cfg.norm, prefix),
+        "wq": ParamSpec(ps + (d, h, dh), pa + ("embed", "heads", "head_dim"), dense_init(d)),
+        "wk": ParamSpec(ps + (d, kh, dh), pa + ("embed", "kv_heads", "head_dim"), dense_init(d)),
+        "wv": ParamSpec(ps + (d, kh, dh), pa + ("embed", "kv_heads", "head_dim"), dense_init(d)),
+        "wo": ParamSpec(ps + (h, dh, d), pa + ("heads", "head_dim", "embed"), dense_init(h * dh)),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec(ps + (dh,), pa + (None,), ones_init, jnp.float32)
+        specs["k_norm"] = ParamSpec(ps + (dh,), pa + (None,), ones_init, jnp.float32)
+    return specs
+
+
+def mlp_specs(cfg, prefix: tuple) -> dict:
+    specs = {"ln": norm_specs(cfg.d_model, cfg.norm, prefix)}
+    if cfg.num_experts:
+        specs.update(moe_lib.moe_specs(cfg, prefix))
+    elif cfg.act == "gelu":
+        specs.update(gelu_mlp_specs(cfg.d_model, cfg.d_ff, prefix))
+    else:
+        specs.update(swiglu_specs(cfg.d_model, cfg.d_ff, prefix))
+    return specs
+
+
+def stacked_block_specs(cfg, layers: int | None = None) -> dict:
+    l = cfg.num_layers if layers is None else layers
+    prefix = ((l, "layers"),)
+    return {"attn": attn_specs(cfg, prefix), "mlp": mlp_specs(cfg, prefix)}
+
+
+# ---------------------------------------------------------------------------
+# Attention block application
+
+
+def _rmsnorm_head(scale: Array, x: Array, eps: float = 1e-6) -> Array:
+    """qwen3-style per-head q/k RMSNorm over head_dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(p: dict, xn: Array, cfg) -> tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"])
+    if cfg.qk_norm:
+        q = _rmsnorm_head(p["q_norm"], q)
+        k = _rmsnorm_head(p["k_norm"], k)
+    return q, k, v
+
+
+def attn_full(
+    p: dict,
+    x: Array,  # [B, S, D]
+    cfg,
+    dist: Optional[DistSpec],
+    positions: Array,  # [S]
+    window: int = 0,
+    chunk: int = 1024,
+    causal: bool = True,
+) -> tuple[Array, tuple[Array, Array]]:
+    """Full-sequence attention (train / prefill). Returns (y, (k, v))."""
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    q, k, v = _project_qkv(p, xn, cfg)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    tp = dist.model_axis if (dist and dist.tensor_parallel) else None
+    q = constrain(q, dist, dist.batch if dist else None, None, tp, None)
+    o = blockwise_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return x + y, (k, v)
+
+
+def cross_attn(
+    p: dict,
+    x: Array,  # [B, S, D] decoder side
+    memory_kv: tuple[Array, Array],  # precomputed (k, v) [B, F, KH, Dh]
+    cfg,
+    dist: Optional[DistSpec],
+) -> Array:
+    """Encoder-decoder cross attention against precomputed memory K/V."""
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"])
+    k, v = memory_kv
+    o = blockwise_attention(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return x + y
+
+
+def cross_attn_kv(p: dict, memory: Array, cfg) -> tuple[Array, Array]:
+    """Project encoder output once into cross-attention K/V."""
+    k = jnp.einsum("bfd,dhk->bfhk", memory, p["wk"])
+    v = jnp.einsum("bfd,dhk->bfhk", memory, p["wv"])
+    return k, v
+
+
+def attn_decode(
+    p: dict,
+    x: Array,  # [B, D] — one token per sequence
+    k_cache: Array,  # [B, T, KH, Dh]
+    v_cache: Array,
+    length: Array,  # [B] — cache entries BEFORE this token
+    cfg,
+    dist: Optional[DistSpec],
+    window: int = 0,
+) -> tuple[Array, tuple[Array, Array]]:
+    """One decode step. Returns (y, (k_cache', v_cache'))."""
+    b = x.shape[0]
+    xn = apply_norm(p["ln"], x[:, None, :], cfg.norm)
+    q, k, v = _project_qkv(p, xn, cfg)
+    pos = length.astype(jnp.int32)  # new token's position, per sequence
+    if cfg.pos == "rope":
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    t = k_cache.shape[1]
+    slot = jnp.where(window > 0, pos % t, pos) if window else pos
+    bi = jnp.arange(b)
+    k_cache = k_cache.at[bi, slot].set(k.astype(k_cache.dtype))
+    v_cache = v_cache.at[bi, slot].set(v.astype(v_cache.dtype))
+    valid = jnp.minimum(length + 1, t) if window else length + 1
+    o = decode_attention(q, k_cache, v_cache, valid)
+    y = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    return x + y, (k_cache, v_cache)
+
+
+def mlp_apply(
+    p: dict,
+    x: Array,
+    cfg,
+    dist: Optional[DistSpec],
+    hot_ids: Array | None = None,
+) -> tuple[Array, dict | None]:
+    """Pre-norm FFN (dense or MoE). Returns (y, moe_stats|None)."""
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    stats = None
+    if cfg.num_experts:
+        y, stats = moe_lib.moe_apply(p, xn, cfg, dist, hot_ids)
+    elif cfg.act == "gelu":
+        y = gelu_mlp(p, xn)
+    else:
+        y = swiglu(p, xn)
+    return x + y, stats
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack execution
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _reduce_layer_stats(stats: dict | None) -> dict | None:
+    """Aggregate per-layer MoE stats stacked [L, ...] by the scan.
+
+    Routing counts keep their layer resolution — the paper's key universe is
+    (layer, expert): each layer's hot set is decided independently.
+    """
+    if stats is None:
+        return None
+    return {
+        "counts": stats["counts"],  # [L, G, E]
+        "aux": jnp.mean(stats["aux"]),
+        "dropped": jnp.mean(stats["dropped"]),
+        "hot_frac": jnp.mean(stats["hot_frac"]),
+    }
+
+
+def run_decoder(
+    blocks: dict,
+    h: Array,  # [B, S, D] embedded inputs
+    cfg,
+    dist: Optional[DistSpec] = None,
+    *,
+    mode: str = "train",  # train | prefill
+    positions: Array | None = None,
+    window: int = 0,
+    attn_chunk: int = 1024,
+    hot_ids: Array | None = None,  # [L, R] per-layer replica sets
+) -> tuple[Array, Optional[KVCache], Optional[dict]]:
+    """Scan the stacked blocks over ``h``.
+
+    Returns (hidden, cache|None, moe_stats|None). ``moe_stats['counts']`` is
+    the [G, E] routing histogram summed over layers — the Redynis traffic
+    feed for the placement daemon.
+    """
+    b, s, d = h.shape
+    if positions is None:
+        positions = jnp.arange(s)
+
+    collect_cache = mode == "prefill"
+    has_moe = bool(cfg.num_experts)
+    xs = (blocks, hot_ids) if hot_ids is not None else (blocks,)
+
+    def body(carry, xs_slice):
+        x = carry
+        layer_params = xs_slice[0]
+        hids = xs_slice[1] if len(xs_slice) > 1 else None
+        x, (k, v) = attn_full(
+            layer_params["attn"], x, cfg, dist, positions, window, attn_chunk
+        )
+        x, stats = mlp_apply(layer_params["mlp"], x, cfg, dist, hids)
+        x = constrain(x, dist, dist.batch if dist else None, None, None)
+        if collect_cache and dist is not None and dist.mesh is not None:
+            # Cache layout for decode: batch over data, kv-heads over model
+            # when they divide (MHA), else sequence over model — without
+            # this the stacked prefill cache replicates T per chip.
+            m = dist.model_size
+            kh = k.shape[2]
+            bs = dist.batch if k.shape[0] % max(dist.batch_size, 1) == 0 else None
+            if kh % m == 0:
+                spec = (bs, None, dist.model_axis, None)
+            else:
+                spec = (bs, dist.model_axis if k.shape[1] % m == 0 else None, None, None)
+            k = constrain(k, dist, *spec)
+            v = constrain(v, dist, *spec)
+        ys = (
+            (k, v) if collect_cache else None,
+            stats if has_moe else None,
+        )
+        return x, ys
+
+    body = _maybe_remat(body, cfg)
+    h, ys = jax.lax.scan(body, h, xs)
+    kv, stats = ys
+
+    cache = None
+    if collect_cache:
+        k, v = kv  # [L, B, S, KH, Dh]
+        cache = KVCache(k=k, v=v, length=jnp.full((b,), s, jnp.int32))
+    return h, cache, _reduce_layer_stats(stats if has_moe else None)
+
+
+def run_decode_step(
+    blocks: dict,
+    x: Array,  # [B, D] — embedded new token
+    cache: KVCache,
+    cfg,
+    dist: Optional[DistSpec] = None,
+    *,
+    window: int = 0,
+    hot_ids: Array | None = None,  # [L, R]
+) -> tuple[Array, KVCache, Optional[dict]]:
+    """One token through all layers.
+
+    The full [L, B, T, KH, Dh] cache travels in the scan CARRY and each
+    layer scatters exactly one [B, KH, Dh] row into it — with donated
+    buffers this is a true in-place update (per-step HBM write = one row
+    per layer, not a layer slice; the unavoidable read is the attention
+    pass over the layer's cache slice)."""
+    has_moe = bool(cfg.num_experts)
+    b = x.shape[0]
+    t = cache.max_len
+    length = cache.length
+    pos = length.astype(jnp.int32)
+    slot = jnp.where(window > 0, pos % t, pos) if window else pos
+    valid = jnp.minimum(length + 1, t) if window else length + 1
+    bi = jnp.arange(b)
+    layer_idx = jnp.arange(cfg.num_layers)
+    xs = (blocks, layer_idx, hot_ids) if hot_ids is not None else (blocks, layer_idx)
+
+    def body(carry, xs_slice):
+        x, k_all, v_all = carry
+        layer_params, li = xs_slice[:2]
+        hids = xs_slice[2] if len(xs_slice) > 2 else None
+        # int8-served weights dequantize per layer inside the scan, so only
+        # one layer's bf16 copy is ever live (see repro/quant.py).
+        from repro.quant import dequant_tree
+
+        layer_params = dequant_tree(layer_params)
+        p = layer_params["attn"]
+        xn = apply_norm(p["ln"], x[:, None, :], cfg.norm)
+        q, k, v = _project_qkv(p, xn, cfg)
+        if cfg.pos == "rope":
+            q = rope(q, pos[:, None], cfg.rope_theta)
+            k = rope(k, pos[:, None], cfg.rope_theta)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        k_all = k_all.at[li, bi, slot].set(k.astype(k_all.dtype))
+        v_all = v_all.at[li, bi, slot].set(v.astype(v_all.dtype))
+        kc = jax.lax.dynamic_index_in_dim(k_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, li, 0, keepdims=False)
+        o = decode_attention(q, kc, vc, valid)
+        x = x + jnp.einsum("bhk,hkd->bd", o, p["wo"])
+        y, stats = mlp_apply(layer_params["mlp"], x[:, None, :], cfg, dist, hids)
+        return (y[:, 0], k_all, v_all), (stats if has_moe else None)
+
+    (x, k, v), stats = jax.lax.scan(body, (x, cache.k, cache.v), xs)
+    new_cache = KVCache(k=k, v=v, length=cache.length + 1)
+    return x, new_cache, _reduce_layer_stats(stats if has_moe else None)

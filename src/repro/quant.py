@@ -1,0 +1,81 @@
+"""Int8 weight quantization for serving (hillclimb C / §Perf).
+
+Decode is bandwidth-bound: every step streams the full (sharded) weight set
+through the chip once. Quantizing matrices to int8 with per-output-channel
+scales halves/quarters both the HBM traffic and — when weights would
+otherwise be FSDP-gathered per step — the collective traffic, and lets a
+123B model serve weights-stationary (replicated over the data axis) inside
+16 GB/chip.
+
+Representation: a quantized leaf is the dict ``{"q": int8[...], "s":
+f32[..., 1]}`` (scale broadcast over the last dim). ``dequant_tree`` maps
+them back to bf16 — called INSIDE the layer scan body so only one layer's
+weights materialise at a time. Norm/bias/router (small, precision-critical)
+leaves stay in their original dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = ["quantize_leaf", "quantize_tree", "is_quantized", "dequant_leaf", "dequant_tree", "abstract_quantize_tree"]
+
+_MIN_QUANT_SIZE = 1 << 16  # leave small tensors (norms, biases) alone
+
+
+def quantize_leaf(w: Array) -> dict:
+    """Per-row (last-dim) symmetric int8: w ≈ q * s."""
+    wf = w.astype(jnp.float32)
+    s = jnp.max(jnp.abs(wf), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-12)
+    q = jnp.clip(jnp.round(wf / s), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": s}
+
+
+def is_quantized(leaf) -> bool:
+    return isinstance(leaf, dict) and set(leaf.keys()) == {"q", "s"}
+
+
+def dequant_leaf(leaf, dtype=jnp.bfloat16):
+    if is_quantized(leaf):
+        return (leaf["q"].astype(jnp.float32) * leaf["s"]).astype(dtype)
+    return leaf
+
+
+def _should_quantize(x) -> bool:
+    return (
+        hasattr(x, "ndim")
+        and x.ndim >= 2
+        and x.size >= _MIN_QUANT_SIZE
+        and x.dtype in (jnp.bfloat16, jnp.float32, jnp.float16)
+    )
+
+
+def quantize_tree(tree):
+    """Quantize every large matrix leaf; keep small/precision leaves."""
+    return jax.tree.map(
+        lambda x: quantize_leaf(x) if _should_quantize(x) else x, tree
+    )
+
+
+def abstract_quantize_tree(tree):
+    """ShapeDtypeStruct version (dry-run: what the quantized tree looks like)."""
+
+    def f(x):
+        if _should_quantize(x):
+            return {
+                "q": jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct(x.shape[:-1] + (1,), jnp.float32),
+            }
+        return x
+
+    return jax.tree.map(f, tree)
+
+
+def dequant_tree(tree, dtype=jnp.bfloat16):
+    """Dequantize a (sub)tree — call inside the per-layer scan body."""
+    return jax.tree.map(
+        lambda x: dequant_leaf(x, dtype), tree, is_leaf=is_quantized
+    )

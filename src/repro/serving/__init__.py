@@ -1,0 +1,3 @@
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kvcache import LaneTable, state_bytes
+from repro.serving.router import RouteResult, SessionRouter

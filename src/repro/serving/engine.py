@@ -1,0 +1,161 @@
+"""Batched decode engine: prefill requests into lanes, step all lanes.
+
+One engine ≈ one pod's serving deployment (the paper's RedynisService +
+Redis instance). The engine is deliberately model-family-agnostic: it only
+calls ``model.prefill`` / ``model.decode_step`` and carries the opaque
+decode-state pytree, so dense GQA, MoE (with live hot-expert sets), RWKV,
+RecurrentGemma and Whisper all serve through the same code path.
+
+Lane packing: decode states are stored *stacked over lanes* exactly as the
+model produces them for a full batch; a new prefill writes its lane slice
+via index update. All lanes advance together each ``step()`` (continuous
+batching at lane granularity).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.dist import DistSpec
+from repro.models.model import Model
+from repro.serving.kvcache import LaneTable, state_bytes
+
+__all__ = ["Request", "ServeEngine"]
+
+
+class Request(NamedTuple):
+    session: str
+    tokens: np.ndarray  # prompt token ids [S]
+    max_new: int = 16
+
+
+def _write_lane(state, lane_state, lane: int, num_lanes: int):
+    """Copy a single-lane decode state into lane ``lane`` of the batch state.
+
+    The lane dim of each leaf is the first axis that is ``num_lanes`` wide
+    in the batch state and 1 wide in the single-lane state — dim 0 for flat
+    [B, ...] leaves, dim 1 for layer-stacked [L, B, ...] leaves.
+    """
+
+    def upd(full, single):
+        for d in range(full.ndim):
+            if full.shape[d] == num_lanes and single.shape[d] == 1:
+                idx = tuple([slice(None)] * d + [slice(lane, lane + 1)])
+                return full.at[idx].set(single.astype(full.dtype))
+        raise ValueError((full.shape, single.shape, num_lanes))
+
+    return jax.tree.map(upd, state, lane_state)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: Model,
+        params: dict,
+        num_lanes: int,
+        cache_len: int,
+        dist: Optional[DistSpec] = None,
+        hot_ids: Array | None = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.dist = dist
+        self.hot_ids = hot_ids
+        self.cache_len = cache_len
+        self.temperature = temperature
+        self.lanes = LaneTable(num_lanes)
+        self.num_lanes = num_lanes
+        self.state = model.init_state(num_lanes, cache_len)
+        self.last_token = jnp.zeros((num_lanes,), jnp.int32)
+        self.remaining = np.zeros((num_lanes,), np.int64)
+        self.outputs: dict[str, list[int]] = {}
+        self._rng = jax.random.PRNGKey(seed)
+        self.steps = 0
+        self.tokens_out = 0
+
+        self._decode = jax.jit(
+            lambda p, s, t, h: model.decode_step(p, s, t, self.dist, hot_ids=h)
+        )
+        self._prefill_cache: dict[int, Any] = {}
+
+    # -------------------------------------------------------------- prefill
+    def admit(self, req: Request) -> int:
+        """Prefill a request into a lane. Returns the lane index."""
+        lane, evicted = self.lanes.bind(req.session)
+        if evicted is not None:
+            self.outputs.setdefault(evicted, [])
+        s = len(req.tokens)
+        batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :]}
+        if self.model.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.model.cfg.num_patches, self.model.cfg.d_model),
+                jnp.bfloat16,
+            )
+        if self.model.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.model.cfg.num_frames, self.model.cfg.d_model),
+                jnp.bfloat16,
+            )
+        fn = self._prefill_cache.get(s)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, b: self.model.prefill(
+                    p, b, self.dist, cache_len=self.cache_len, hot_ids=self.hot_ids
+                )
+            )
+            self._prefill_cache[s] = fn
+        logits, lane_state = fn(self.params, batch)
+        self.state = _write_lane(self.state, lane_state, lane, self.num_lanes)
+        tok = self._sample(logits)[0]
+        self.last_token = self.last_token.at[lane].set(tok)
+        self.remaining[lane] = req.max_new
+        self.outputs[req.session] = [int(tok)]
+        return lane
+
+    # -------------------------------------------------------------- decode
+    def _sample(self, logits: Array) -> Array:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(k, logits / self.temperature, -1).astype(
+            jnp.int32
+        )
+
+    def step(self) -> dict[str, int]:
+        """One decode step for every active lane. Returns {session: token}."""
+        active = {s: l for s, l in self.lanes.active.items() if self.remaining[l] > 0}
+        if not active:
+            return {}
+        logits, self.state = self._decode(
+            self.params, self.state, self.last_token, self.hot_ids
+        )
+        toks = self._sample(logits)
+        self.last_token = toks
+        out = {}
+        for session, lane in active.items():
+            t = int(toks[lane])
+            self.outputs[session].append(t)
+            self.remaining[lane] -= 1
+            out[session] = t
+            if self.remaining[lane] == 0:
+                self.lanes.release(session)
+        self.steps += 1
+        self.tokens_out += len(out)
+        return out
+
+    def run_to_completion(self, max_steps: int = 10_000) -> dict[str, list[int]]:
+        for _ in range(max_steps):
+            if not self.step():
+                break
+        return dict(self.outputs)
+
+    # -------------------------------------------------------------- stats
+    def cache_bytes(self) -> int:
+        return state_bytes(self.state)

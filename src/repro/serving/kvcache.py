@@ -1,0 +1,69 @@
+"""Session-slot KV cache management for batched decoding.
+
+The engine owns a fixed number of *lanes* (batch slots); each lane is bound
+to one session. Lane state is whatever the model family's decode state is
+(KV cache / recurrent state / enc-dec state) — this module only manages the
+binding, LRU eviction of idle sessions, and the byte accounting the Redynis
+session router charges migrations with.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["LaneTable", "state_bytes"]
+
+
+def state_bytes(state) -> int:
+    """Total decode-state bytes (the migration payload for one full batch)."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(state))
+
+
+class LaneTable:
+    """session_id <-> lane binding with LRU eviction."""
+
+    def __init__(self, num_lanes: int):
+        self.num_lanes = num_lanes
+        self._lane_of: dict[str, int] = {}
+        self._session_of: dict[int, str] = {}
+        self._last_used: dict[int, float] = {}
+
+    def lookup(self, session: str) -> Optional[int]:
+        lane = self._lane_of.get(session)
+        if lane is not None:
+            self._last_used[lane] = time.monotonic()
+        return lane
+
+    def bind(self, session: str) -> tuple[int, Optional[str]]:
+        """Assign a lane (evicting the LRU session if full).
+
+        Returns (lane, evicted_session|None).
+        """
+        if session in self._lane_of:
+            return self._lane_of[session], None
+        free = set(range(self.num_lanes)) - set(self._session_of)
+        evicted = None
+        if free:
+            lane = min(free)
+        else:
+            lane = min(self._last_used, key=self._last_used.get)
+            evicted = self._session_of.pop(lane)
+            del self._lane_of[evicted]
+        self._lane_of[session] = lane
+        self._session_of[lane] = session
+        self._last_used[lane] = time.monotonic()
+        return lane, evicted
+
+    def release(self, session: str) -> None:
+        lane = self._lane_of.pop(session, None)
+        if lane is not None:
+            self._session_of.pop(lane, None)
+            self._last_used.pop(lane, None)
+
+    @property
+    def active(self) -> dict[str, int]:
+        return dict(self._lane_of)

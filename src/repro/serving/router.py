@@ -1,0 +1,141 @@
+"""Session-affinity router — Redynis integration #3 (serving control plane).
+
+Objects are sessions (their KV/recurrent decode state), nodes are pods,
+traffic is request arrivals. The router keeps the paper's metadata layer
+(per-session per-pod access counts, last-access time), and its placement
+daemon decides which pod *owns* each session's cache — migrating caches
+toward the pods that serve them most and expiring idle sessions, with the
+migration payload charged at real decode-state byte sizes.
+
+Leader election (paper §11, "future work"): the write-serializer (the node
+that commits placement changes) is chosen by a bully election over the
+heartbeat table — highest-id live pod wins; a dead leader is replaced on
+the next ``tick()``. Placement sweeps only run on the leader, exactly like
+the paper's single RedynisDaemon node.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metadata import create_store, record_accesses, record_new_keys
+from repro.core.placement import PlacementDaemon
+from repro.train.fault import HeartbeatMonitor
+
+__all__ = ["RouteResult", "SessionRouter"]
+
+
+class RouteResult(NamedTuple):
+    pod: int  # pod that serves the request
+    local_hit: bool  # session cache already on that pod
+    migrated: bool  # placement moved the cache here first
+
+
+class SessionRouter:
+    def __init__(
+        self,
+        num_pods: int,
+        max_sessions: int,
+        *,
+        h: float | None = None,
+        expiry_ticks: int | None = 10_000,
+        sweep_period: int = 100,
+        session_bytes: float = 0.0,
+    ):
+        self.num_pods = num_pods
+        self.max_sessions = max_sessions
+        self.daemon = PlacementDaemon(
+            num_pods, h=h, expiry=expiry_ticks, period=sweep_period
+        )
+        self.store = create_store(max_sessions, num_pods)
+        self.session_bytes = session_bytes
+        self._sid: dict[str, int] = {}  # session name -> key index
+        self._free = list(range(max_sessions - 1, -1, -1))
+        self.monitor = HeartbeatMonitor([f"pod-{i}" for i in range(num_pods)])
+        self.leader = self._elect()
+        self.tick_count = 0
+        self.stats = {
+            "requests": 0,
+            "local_hits": 0,
+            "migrations": 0,
+            "migrated_bytes": 0.0,
+            "expired": 0,
+            "elections": 0,
+        }
+
+    # ------------------------------------------------------------ election
+    def _elect(self) -> int:
+        """Bully election: highest-id live pod becomes the write serializer."""
+        alive = self.monitor.alive()
+        if not alive:
+            raise RuntimeError("no live pods")
+        return max(int(n.split("-")[1]) for n in alive)
+
+    def fail_pod(self, pod: int) -> None:
+        """Simulated pod failure: sessions homed there lose their replicas;
+        a dead leader triggers re-election on the next tick."""
+        self.monitor.kill(f"pod-{pod}")
+        hosts = self.store.hosts.at[:, pod].set(False)
+        # Sessions that lost their only replica must re-prefill somewhere.
+        orphan = ~jnp.any(hosts, axis=-1) & self.store.live
+        self.store = self.store._replace(hosts=hosts, live=self.store.live & ~orphan)
+
+    # ------------------------------------------------------------ routing
+    def _key_of(self, session: str) -> int:
+        if session not in self._sid:
+            if not self._free:
+                raise RuntimeError("session table full")
+            self._sid[session] = self._free.pop()
+        return self._sid[session]
+
+    def route(self, session: str, source_pod: int) -> RouteResult:
+        """Algorithm 1, serving flavour: serve locally when the cache is
+        here; otherwise serve from the owner pod (remote penalty) while the
+        metadata layer logs the miss — the daemon migrates hot sessions at
+        the next sweep."""
+        alive = {int(n.split("-")[1]) for n in self.monitor.alive()}
+        if source_pod not in alive:
+            source_pod = min(alive)
+        key = self._key_of(session)
+        k = jnp.asarray([key], jnp.int32)
+        n = jnp.asarray([source_pod], jnp.int32)
+        self.stats["requests"] += 1
+
+        live = bool(self.store.live[key])
+        if not live:  # new session: cache built where the request landed
+            self.store = record_new_keys(self.store, k, n, now=self.tick_count)
+            return RouteResult(pod=source_pod, local_hit=False, migrated=False)
+
+        self.store = record_accesses(self.store, k, n, now=self.tick_count)
+        hosts = np.asarray(self.store.hosts[key])
+        if hosts[source_pod]:
+            self.stats["local_hits"] += 1
+            return RouteResult(pod=source_pod, local_hit=True, migrated=False)
+        owner = int(np.argmax(hosts))
+        return RouteResult(pod=owner, local_hit=False, migrated=False)
+
+    # ------------------------------------------------------------ daemon
+    def tick(self) -> None:
+        """Advance logical time; on the period boundary the *leader* sweeps."""
+        self.tick_count += 1
+        for i in range(self.num_pods):  # healthy pods heartbeat every tick
+            self.monitor.beat(f"pod-{i}")
+        if int(self.leader) not in {
+            int(n.split("-")[1]) for n in self.monitor.alive()
+        }:
+            self.leader = self._elect()
+            self.stats["elections"] += 1
+        if self.tick_count % self.daemon.period == 0:
+            plan, self.store = self.daemon.step(self.store, now=self.tick_count)
+            moves = float(jnp.sum(plan.to_add))
+            self.stats["migrations"] += int(moves)
+            self.stats["migrated_bytes"] += moves * self.session_bytes
+            self.stats["expired"] += int(jnp.sum(plan.expired))
+
+    # ------------------------------------------------------------ metrics
+    def hit_rate(self) -> float:
+        r = max(self.stats["requests"], 1)
+        return self.stats["local_hits"] / r

@@ -1,0 +1,107 @@
+"""Gradient compression for cross-pod reduction (beyond-paper, scale kit).
+
+Two composable codecs, both with exact size accounting so the launch layer
+can trade collective bytes for steps-to-converge:
+
+  * int8 quantisation — per-tensor symmetric scale, 4x byte reduction on
+    fp32 grads (2x on bf16); unbiased via stochastic rounding.
+  * top-k sparsification with error feedback — keeps the k largest-|g|
+    entries per tensor, accumulates the residual locally (Stich et al.
+    error feedback), so the sparsification bias vanishes over steps.
+
+Intended placement: *between pods* (the slow DCI hops), not inside a pod —
+mirrors the paper's geo-distributed remote-penalty asymmetry.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = [
+    "QuantGrad",
+    "quantize_int8",
+    "dequantize_int8",
+    "TopKGrad",
+    "topk_encode",
+    "topk_decode",
+    "ErrorFeedback",
+]
+
+
+class QuantGrad(NamedTuple):
+    q: Array  # int8 payload
+    scale: Array  # [] f32
+
+    @property
+    def nbytes(self) -> int:
+        return self.q.size + 4
+
+
+def quantize_int8(g: Array, key: Array | None = None) -> QuantGrad:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    x = gf / scale
+    if key is not None:  # stochastic rounding -> unbiased
+        x = jnp.floor(x + jax.random.uniform(key, x.shape))
+    else:
+        x = jnp.round(x)
+    return QuantGrad(q=jnp.clip(x, -127, 127).astype(jnp.int8), scale=scale)
+
+
+def dequantize_int8(qg: QuantGrad) -> Array:
+    return qg.q.astype(jnp.float32) * qg.scale
+
+
+class TopKGrad(NamedTuple):
+    idx: Array  # [k] int32 flat indices
+    val: Array  # [k] f32
+    shape: tuple
+
+    @property
+    def nbytes(self) -> int:
+        return self.idx.size * 4 + self.val.size * 4
+
+
+def topk_encode(g: Array, k: int) -> tuple[TopKGrad, Array]:
+    """Returns (sparse grad, residual to fold into error feedback)."""
+    gf = g.astype(jnp.float32).reshape(-1)
+    k = min(k, gf.size)
+    val, idx = jax.lax.top_k(jnp.abs(gf), k)
+    picked = gf[idx]
+    dense_kept = jnp.zeros_like(gf).at[idx].set(picked)
+    residual = (gf - dense_kept).reshape(g.shape)
+    return TopKGrad(idx=idx.astype(jnp.int32), val=picked, shape=g.shape), residual
+
+
+def topk_decode(tg: TopKGrad) -> Array:
+    size = 1
+    for s in tg.shape:
+        size *= s
+    return jnp.zeros((size,), jnp.float32).at[tg.idx].set(tg.val).reshape(tg.shape)
+
+
+class ErrorFeedback(NamedTuple):
+    """Per-tensor residual memory for top-k (init zeros_like(grads))."""
+
+    residual: dict
+
+    @staticmethod
+    def init(grads) -> "ErrorFeedback":
+        return ErrorFeedback(
+            residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        )
+
+    def compress_step(self, grads, k: int):
+        """grads + residual -> (sparse tree, new feedback)."""
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = treedef.flatten_up_to(self.residual)
+        enc, res = [], []
+        for g, r in zip(flat_g, flat_r):
+            e, nr = topk_encode(g.astype(jnp.float32) + r, k)
+            enc.append(e)
+            res.append(nr)
+        return treedef.unflatten(enc), ErrorFeedback(residual=treedef.unflatten(res))

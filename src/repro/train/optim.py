@@ -1,0 +1,100 @@
+"""AdamW + schedule + clipping, as pure pytree transforms (no optax here).
+
+Optimizer state mirrors the param tree (m, v in fp32 regardless of param
+dtype), so the launch layer shards it with the same PartitionSpecs as the
+params — optimizer memory scales down with FSDP exactly like the weights.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = ["OptConfig", "OptState", "init_opt", "apply_updates", "lr_at", "global_norm"]
+
+
+class OptConfig(NamedTuple):
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    m: dict  # fp32, like params
+    v: dict  # fp32, like params
+    step: Array  # [] int32
+
+
+def init_opt(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_at(cfg: OptConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def apply_updates(
+    cfg: OptConfig, params, grads, state: OptState
+) -> tuple[dict, OptState, dict]:
+    """One AdamW step. Returns (params', state', metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(m=new_m, v=new_v, step=step), metrics

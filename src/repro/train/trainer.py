@@ -1,0 +1,278 @@
+"""Training loop: grad-accumulated step + the Redynis daemon in the loop.
+
+The jitted step is pure and donated (params/opt-state buffers reused); the
+host loop around it does only paper-daemon things: fold traffic statistics,
+trigger sweeps at the period boundary, checkpoint asynchronously. Placement
+changes (new ``hot_ids`` / hot-row cache) feed the *next* step's inputs —
+the non-blocking property: a sweep never stalls the step that overlaps it.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core.expert_placement import ExpertPlacement, ExpertPlacementState
+from repro.core.hot_embedding import HotEmbedding, HotEmbeddingState
+from repro.data.pipeline import Pipeline
+from repro.dist import DistSpec
+from repro.models.model import Model
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optim import OptConfig, OptState, apply_updates, init_opt
+
+__all__ = ["TrainConfig", "TrainState", "Trainer"]
+
+
+class TrainConfig(NamedTuple):
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    # Cross-pod gradient compression (train/compress.py): "none" | "int8".
+    # In a multi-pod deployment this wraps the inter-pod all-reduce; here it
+    # is applied to the global gradient with stochastic rounding so the
+    # convergence impact is the same thing the pods would see.
+    grad_compression: str = "none"
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: OptState
+    expert_placement: Optional[ExpertPlacementState]
+    hot_embed: Optional[HotEmbeddingState]
+    data_step: int  # pipeline position (host int — exact replay key)
+
+
+class Trainer:
+    def __init__(
+        self,
+        model: Model,
+        cfg: TrainConfig,
+        dist: Optional[DistSpec] = None,
+        num_nodes: int = 1,
+    ):
+        self.model = model
+        self.cfg = cfg
+        self.dist = dist
+        self.num_nodes = num_nodes
+        mcfg = model.cfg
+
+        self.expert_daemon = None
+        if mcfg.num_experts and mcfg.hot_expert_slots:
+            self.expert_daemon = ExpertPlacement(
+                mcfg.num_layers,
+                mcfg.num_experts,
+                num_nodes,
+                mcfg.hot_expert_slots,
+                h=mcfg.ownership_h or None,
+                decay=mcfg.traffic_decay,
+                period=mcfg.sweep_period,
+            )
+        self.embed_daemon = None
+        if mcfg.hot_embed_rows:
+            self.embed_daemon = HotEmbedding(
+                mcfg.padded_vocab,
+                num_nodes,
+                mcfg.hot_embed_rows,
+                h=mcfg.ownership_h or None,
+                decay=mcfg.traffic_decay,
+                period=mcfg.sweep_period,
+            )
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, rng: Array) -> TrainState:
+        params = self.model.init(rng)
+        return TrainState(
+            params=params,
+            opt=init_opt(params),
+            expert_placement=(
+                self.expert_daemon.init_state() if self.expert_daemon else None
+            ),
+            hot_embed=(
+                self.embed_daemon.init_state() if self.embed_daemon else None
+            ),
+            data_step=0,
+        )
+
+    # ------------------------------------------------------------------ step
+    def _build_step(self):
+        model, cfg = self.model, self.cfg
+
+        def loss_fn(params, mb, hot_ids, hot_embed):
+            return model.loss(
+                params, mb, self.dist, hot_ids=hot_ids, hot_embed=hot_embed
+            )
+
+        def step(params, opt_state, batch, hot_ids, hot_embed):
+            m = cfg.microbatches
+            if m > 1:
+                batch = jax.tree.map(
+                    lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch
+                )
+
+                def micro(carry, mb):
+                    g_acc, metr_acc = carry
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True
+                    )(params, mb, hot_ids, hot_embed)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                    )
+                    metr_acc = jax.tree.map(lambda a, b: a + b, metr_acc, metrics)
+                    return (g_acc, metr_acc), None
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                mb0 = jax.tree.map(lambda x: x[0], batch)
+                _, metrics_sds = jax.eval_shape(
+                    loss_fn, params, mb0, hot_ids, hot_embed
+                )
+                metr0 = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), metrics_sds
+                )
+                (grads, metrics), _ = jax.lax.scan(micro, (g0, metr0), batch)
+                grads = jax.tree.map(lambda g: g / m, grads)
+                metrics = jax.tree.map(lambda x: x / m, metrics)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(params, batch, hot_ids, hot_embed)
+
+            if cfg.grad_compression == "int8":
+                from repro.train.compress import dequantize_int8, quantize_int8
+
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(12), opt_state.step
+                )
+                leaves, treedef = jax.tree.flatten(grads)
+                keys = jax.random.split(key, len(leaves))
+                grads = treedef.unflatten(
+                    [
+                        dequantize_int8(quantize_int8(g, k))
+                        for g, k in zip(leaves, keys)
+                    ]
+                )
+            params2, opt2, opt_metrics = apply_updates(
+                cfg.opt, params, grads, opt_state
+            )
+            metrics.update(opt_metrics)
+            return params2, opt2, metrics
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------ run
+    def run(
+        self,
+        state: TrainState,
+        pipeline: Pipeline,
+        steps: int,
+        log: bool = True,
+    ) -> tuple[TrainState, list[dict]]:
+        cfg = self.cfg
+        pstate = pipeline.seek(state.data_step)
+        history: list[dict] = []
+        pending_save = None
+
+        for i in range(steps):
+            batch, pstate = pipeline.next(pstate)
+            hot_ids = (
+                state.expert_placement.hot_ids
+                if state.expert_placement is not None
+                else None
+            )
+            t0 = time.perf_counter()
+            params, opt, metrics = self._step_fn(
+                state.params, state.opt, batch, hot_ids, state.hot_embed
+            )
+            step_idx = int(opt.step)
+            dt = time.perf_counter() - t0
+
+            # ---- Redynis daemon: fold traffic, sweep on period ------------
+            ep, he = state.expert_placement, state.hot_embed
+            if self.expert_daemon is not None and "moe_counts" in metrics:
+                g = metrics["moe_counts"].shape[1]
+                group_nodes = self._group_nodes(g)
+                ep = self.expert_daemon.fold(ep, metrics["moe_counts"], group_nodes)
+                if self.expert_daemon.due(step_idx):
+                    ep = self.expert_daemon.sweep(ep)
+            if self.embed_daemon is not None:
+                tok_nodes = self._token_nodes(batch["tokens"].shape[0])
+                he = self.embed_daemon.fold(he, batch["tokens"], tok_nodes)
+                if self.embed_daemon.due(step_idx):
+                    he = self.embed_daemon.sweep(he)
+
+            state = TrainState(
+                params=params,
+                opt=opt,
+                expert_placement=ep,
+                hot_embed=he,
+                data_step=int(pstate.step),
+            )
+
+            # ---- checkpoint / log -----------------------------------------
+            if cfg.checkpoint_every and step_idx % cfg.checkpoint_every == 0:
+                if pending_save is not None:
+                    pending_save.wait()
+                pending_save = ckpt_lib.save_async(
+                    cfg.checkpoint_dir,
+                    step_idx,
+                    {"params": state.params, "opt": state.opt},
+                    metadata={"data_step": state.data_step},
+                )
+                ckpt_lib.gc_checkpoints(cfg.checkpoint_dir, cfg.keep_checkpoints)
+
+            scalars = {
+                k: float(v)
+                for k, v in metrics.items()
+                if hasattr(v, "ndim") and v.ndim == 0
+            }
+            scalars["step"] = step_idx
+            scalars["step_time_s"] = dt
+            history.append(scalars)
+            if log and (step_idx % cfg.log_every == 0 or i == steps - 1):
+                msg = f"step {step_idx}: loss={scalars.get('loss', 0):.4f}"
+                if "moe_hot_frac" in scalars:
+                    msg += f" hot_frac={scalars['moe_hot_frac']:.3f}"
+                print(msg, flush=True)
+
+        if pending_save is not None:
+            pending_save.wait()
+        return state, history
+
+    # ------------------------------------------------------------------ maps
+    def _group_nodes(self, g: int) -> Array:
+        """Dispatch-group -> EP-rank map (data-major block layout)."""
+        per = max(g // max(self.num_nodes, 1), 1)
+        return (jnp.arange(g, dtype=jnp.int32) // per) % self.num_nodes
+
+    def _token_nodes(self, b: int) -> Array:
+        per = max(b // max(self.num_nodes, 1), 1)
+        return (jnp.arange(b, dtype=jnp.int32) // per) % self.num_nodes
+
+    # ------------------------------------------------------------------ ckpt
+    def restore(self, rng: Array) -> TrainState:
+        """Restore from the latest checkpoint (fresh init if none)."""
+        state = self.init_state(rng)
+        if not self.cfg.checkpoint_dir:
+            return state
+        try:
+            tree, manifest = ckpt_lib.restore_checkpoint(
+                self.cfg.checkpoint_dir,
+                template={"params": state.params, "opt": state.opt},
+            )
+        except FileNotFoundError:
+            return state
+        return state._replace(
+            params=jax.tree.map(jnp.asarray, tree["params"]),
+            opt=jax.tree.map(jnp.asarray, tree["opt"]),
+            data_step=int(manifest["metadata"].get("data_step", 0)),
+        )

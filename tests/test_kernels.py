@@ -1,0 +1,124 @@
+"""Per-kernel allclose-vs-oracle sweeps (shapes × dtypes, interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ops import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.hot_gather.ops import hot_gather
+from repro.kernels.hot_gather.ref import hot_gather_ref
+from repro.kernels.moe_router.ops import moe_router
+from repro.kernels.moe_router.ref import router_ref
+from repro.kernels.ownership_sweep.ops import ownership_sweep
+from repro.kernels.ownership_sweep.ref import sweep_ref
+
+
+@pytest.mark.parametrize(
+    "b,s,t,h,kh,dh,causal,window",
+    [
+        (2, 256, 256, 4, 2, 64, True, 0),
+        (1, 128, 128, 8, 1, 128, True, 0),  # MQA
+        (2, 256, 256, 4, 4, 32, True, 64),  # MHA + sliding window
+        (1, 128, 384, 4, 2, 64, False, 0),  # cross attention, T > S
+        (1, 192, 192, 6, 2, 64, True, 0),  # non-power-of-two blocks
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, s, t, h, kh, dh, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(hash((b, s, t)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, kh, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, kh, dh), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, t, dh)
+    ref = attention_ref(
+        qf, kf, vf, group=h // kh, heads=h, kv_heads=kh, causal=causal, window=window
+    ).reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize(
+    "b,t,h,kh,dh,bk",
+    [(2, 1024, 8, 2, 64, 256), (4, 512, 4, 1, 128, 512), (2, 768, 16, 16, 32, 128)],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(b, t, h, kh, dh, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(t), 4)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, t, kh, dh), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, t, kh, dh), jnp.float32).astype(dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, t)
+    out = flash_decode(q, kc, vc, lengths, bk=bk)
+    ref = decode_ref(q, kc, vc, lengths)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("k,n,h,expiry", [(1000, 16, 0.0625, 0), (513, 3, 1 / 3, 50), (64, 64, 0.01, 10)])
+def test_ownership_sweep(k, n, h, expiry):
+    ks = jax.random.split(jax.random.PRNGKey(k), 4)
+    counts = jax.random.randint(ks[0], (k, n), 0, 50).astype(jnp.float32)
+    counts = counts * (jax.random.uniform(ks[1], (k, n)) > 0.5)
+    hosts = jax.random.uniform(ks[2], (k, n)) > 0.7
+    live = jax.random.uniform(ks[3], (k,)) > 0.1
+    last = jax.random.randint(ks[0], (k,), 0, 100)
+    out = ownership_sweep(counts, hosts, live, last, 100, h=h, expiry=expiry, tk=256)
+    ref = sweep_ref(counts, hosts, live, last, 100, h=h, expiry=expiry)
+    for i, (a, b) in enumerate(zip(out, ref)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b).reshape(np.asarray(a).shape),
+            err_msg=f"output {i}",
+        )
+
+
+@pytest.mark.parametrize("t,e,k,tt", [(512, 64, 6, 128), (300, 32, 8, 128), (1024, 8, 2, 256)])
+def test_moe_router(t, e, k, tt):
+    logits = jax.random.normal(jax.random.PRNGKey(t + e), (t, e), jnp.float32)
+    g, i, c = moe_router(logits, k=k, tt=tt)
+    gr, ir, cr = router_ref(logits, k)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-6)
+    assert float(c.sum()) == t * k  # histogram mass = assignments
+
+
+@pytest.mark.parametrize("v,r,d,t", [(5000, 64, 256, 333), (1024, 8, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hot_gather(v, r, d, t, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(v), 3)
+    slot_map = jnp.full((v,), -1, jnp.int32)
+    hot_rows = jax.random.choice(ks[0], v, (r,), replace=False)
+    slot_map = slot_map.at[hot_rows].set(jnp.arange(r, dtype=jnp.int32))
+    table = jax.random.normal(ks[1], (r, d), jnp.float32).astype(dtype)
+    tokens = jax.random.randint(ks[2], (t,), 0, v)
+    rows, hit = hot_gather(tokens, slot_map, table, tt=128, td=128)
+    rr, hr = hot_gather_ref(tokens, slot_map, table)
+    np.testing.assert_array_equal(np.asarray(hit), np.asarray(hr))
+    np.testing.assert_array_equal(
+        np.asarray(rows, np.float32), np.asarray(rr, np.float32)
+    )
+
+
+def test_hot_gather_vjp_matches_ref():
+    v, r, d = 200, 16, 32
+    slot_map = jnp.full((v,), -1, jnp.int32).at[jnp.arange(r) * 3].set(
+        jnp.arange(r, dtype=jnp.int32)
+    )
+    table = jax.random.normal(jax.random.PRNGKey(0), (r, d), jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, v)
+    f1 = lambda t: jnp.sum(jnp.sin(hot_gather(tokens, slot_map, t)[0]))
+    f2 = lambda t: jnp.sum(jnp.sin(hot_gather_ref(tokens, slot_map, t)[0]))
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(f1)(table)), np.asarray(jax.grad(f2)(table)), atol=1e-5
+    )

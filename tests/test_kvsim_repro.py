@@ -1,0 +1,63 @@
+"""Faithful-reproduction validation: the kvsim must reproduce the paper's
+§9/§10 claims (Optimized ≈ 10× Remote, near Local) on scaled-down traces."""
+
+import numpy as np
+import pytest
+
+from repro.kvsim import (
+    ClusterConfig,
+    Scenario,
+    WorkloadConfig,
+    generate_trace,
+    run_scenario,
+)
+
+
+@pytest.mark.parametrize("skewed", [False, True])
+def test_optimized_beats_remote(skewed):
+    wl = WorkloadConfig(num_requests=20_000, skewed=skewed)
+    cl = ClusterConfig()
+    rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
+    opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+    loc = run_scenario(wl, cl, Scenario.LOCAL, seed=0)
+    assert opt.throughput_ops_s > 4 * rem.throughput_ops_s
+    assert opt.throughput_ops_s > 0.4 * loc.throughput_ops_s
+    assert opt.hit_rate > 0.8  # daemon converges to local placement
+
+
+def test_local_is_upper_bound():
+    wl = WorkloadConfig(num_requests=10_000)
+    cl = ClusterConfig()
+    loc = run_scenario(wl, cl, Scenario.LOCAL, seed=1)
+    for sc in (Scenario.REMOTE, Scenario.OPTIMIZED):
+        r = run_scenario(wl, cl, sc, seed=1)
+        assert r.throughput_ops_s <= loc.throughput_ops_s * 1.01
+
+
+def test_write_heavy_keeps_advantage():
+    """The optimized advantage over remote holds across the paper's full
+    read-ratio grid (100% -> 50%): writes pay master-relay costs in both
+    scenarios, so the ratio stays well above 1 (paper fig 2/3 shape)."""
+    cl = ClusterConfig()
+    for rf in (1.0, 0.75, 0.5):
+        wl = WorkloadConfig(num_requests=15_000, read_fraction=rf, skewed=True)
+        rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
+        opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+        assert opt.throughput_ops_s > 3 * rem.throughput_ops_s, rf
+
+
+def test_daemon_replicates_then_stabilises():
+    wl = WorkloadConfig(num_requests=30_000, skewed=True)
+    cl = ClusterConfig()
+    r = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+    assert r.replication_moves > 0
+    # moves are bounded: no thrashing (less than one move per key per sweep)
+    assert r.replication_moves < wl.num_keys * 5
+
+
+def test_trace_determinism_and_shape():
+    wl = WorkloadConfig(num_requests=5_000, skewed=True)
+    t1, t2 = generate_trace(wl, seed=3), generate_trace(wl, seed=3)
+    np.testing.assert_array_equal(np.asarray(t1.keys), np.asarray(t2.keys))
+    hot = np.asarray(t1.keys) < int(wl.num_keys * wl.hot_fraction)
+    assert 0.85 < hot.mean() < 0.95  # zipfian 90/10 as described in §8.2

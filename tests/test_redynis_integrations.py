@@ -1,0 +1,171 @@
+"""The three ML-state Redynis integrations: expert placement, hot-row
+embedding, session routing — convergence, exactness, non-blocking commit."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.expert_placement import ExpertPlacement
+from repro.core.hot_embedding import HotEmbedding, embed_with_cache
+from repro.core.repartition import CommitState, create_cache, plan_moves, publish_and_fill
+from repro.core.placement import PlacementPlan
+from repro.models import moe as moe_lib
+from repro.models.params import init_params
+from repro.serving import SessionRouter
+
+
+def test_expert_placement_tracks_hot_experts():
+    ep = ExpertPlacement(num_layers=3, num_experts=16, num_nodes=4, slots=4, period=10)
+    st = ep.init_state()
+    rng = np.random.default_rng(0)
+    for step in range(30):
+        counts = np.zeros((3, 8, 16), np.float32)
+        for l in range(3):
+            for g in range(8):
+                np.add.at(counts[l, g], rng.choice([3, 7, 11], 100), 1)
+                np.add.at(counts[l, g], rng.integers(0, 16, 25), 1)
+        st = ep.fold(st, jnp.asarray(counts), jnp.arange(8, dtype=jnp.int32) % 4)
+        if ep.due(step + 1):
+            st = ep.sweep(st)
+    for l in range(3):
+        assert {3, 7, 11} <= set(np.asarray(st.hot_ids)[l].tolist())
+    assert float(ep.hit_rate(st)) > 0.7
+
+
+def test_expert_placement_shift_reacts():
+    """Traffic shifts -> EMA decay lets the replica set follow (beyond-paper
+    extension; raw counters would pin the stale set)."""
+    ep = ExpertPlacement(3, 16, 2, slots=2, period=5, decay=0.5)
+    st = ep.init_state()
+    def run(hot, steps):
+        nonlocal st
+        rng = np.random.default_rng(1)
+        for s in range(steps):
+            counts = np.zeros((3, 4, 16), np.float32)
+            np.add.at(counts[:, :, hot], None, 50.0)
+            st = ep.fold(st, jnp.asarray(counts), jnp.arange(4, dtype=jnp.int32) % 2)
+            if ep.due(int(st.step)):
+                st = ep.sweep(st)
+    run(2, 10)
+    assert 2 in np.asarray(st.hot_ids)[0]
+    run(9, 20)
+    assert 9 in np.asarray(st.hot_ids)[0]
+
+
+def test_moe_hot_path_exact_at_full_capacity():
+    cfg = reduced(get_config("deepseek-moe-16b"))
+    cfg = dataclasses.replace(
+        cfg, moe_capacity_factor=8.0, moe_cold_capacity=1.0, moe_hot_capacity=8.0
+    )
+    specs = moe_lib.moe_specs(cfg, ())
+    params = init_params(specs, jax.random.PRNGKey(1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 64, cfg.d_model)).astype(jnp.bfloat16)
+    y0, s0 = moe_lib.moe_apply(params, x, cfg)
+    hot = jnp.arange(cfg.hot_expert_slots, dtype=jnp.int32)
+    y1, s1 = moe_lib.moe_apply(params, x, cfg, None, hot)
+    np.testing.assert_allclose(
+        np.asarray(y0, np.float32), np.asarray(y1, np.float32), atol=2e-2
+    )
+    assert float(s1["hot_frac"]) > 0
+    np.testing.assert_array_equal(np.asarray(s0["counts"]), np.asarray(s1["counts"]))
+
+
+def test_moe_cold_capacity_shrinks_with_hot_cache():
+    cfg = reduced(get_config("deepseek-moe-16b"))
+    assert moe_lib.cold_capacity(cfg, 512) < moe_lib.cold_capacity(
+        dataclasses.replace(cfg, hot_expert_slots=0), 512
+    )
+
+
+def test_hot_embedding_exactness_and_hit_rate():
+    he = HotEmbedding(vocab=1000, num_nodes=4, rows=64, period=5)
+    hs = he.init_state()
+    rng = np.random.default_rng(0)
+    for step in range(10):
+        toks = np.where(
+            rng.random((8, 128)) < 0.9,
+            rng.integers(0, 64, (8, 128)),
+            rng.integers(64, 1000, (8, 128)),
+        )
+        hs = he.fold(hs, jnp.asarray(toks, jnp.int32), jnp.arange(8, dtype=jnp.int32) % 4)
+        if he.due(step + 1):
+            hs = he.sweep(hs)
+    assert float(he.hit_rate(hs)) > 0.8
+    table = jax.random.normal(jax.random.PRNGKey(0), (1024, 32))
+    # a batch drawn from the same zipfian stream the cache was tuned on
+    toks = jnp.asarray(
+        np.where(
+            rng.random((2, 64)) < 0.9,
+            rng.integers(0, 64, (2, 64)),
+            rng.integers(64, 1000, (2, 64)),
+        ),
+        jnp.int32,
+    )
+    for kernel in (True, False):
+        rows, hit = embed_with_cache(table, toks, hs, use_kernel=kernel)
+        np.testing.assert_allclose(
+            np.asarray(rows), np.asarray(jnp.take(table, toks, axis=0)), atol=1e-6
+        )
+    # the zipfian batch should mostly hit the cache
+    assert float(hit.mean()) > 0.6
+
+
+def test_session_router_migrates_and_elects():
+    r = SessionRouter(num_pods=4, max_sessions=64, sweep_period=10, session_bytes=1e6)
+    rng = np.random.default_rng(2)
+    # sessions created on pod 0, then served from their true home pods:
+    # the daemon must migrate them (paper: bring data to the request source)
+    for i in range(16):
+        r.route(f"sess{i}", 0)
+    home = {f"sess{i}": i % 4 for i in range(16)}
+    for t in range(300):
+        s = f"sess{rng.integers(0, 16)}"
+        r.route(s, home[s])
+        r.tick()
+    assert r.stats["migrations"] > 0
+    assert r.hit_rate() > 0.5
+    assert r.stats["migrated_bytes"] > 0
+    lead = r.leader
+    r.fail_pod(lead)
+    r.tick()
+    assert r.leader != lead and r.stats["elections"] == 1
+
+
+def test_commit_state_non_blocking():
+    """Consumers read the active cache while a sweep stages the next one;
+    the flip is atomic at a step boundary."""
+    cache = create_cache(4, (8,))
+    cs = CommitState.create(cache)
+    new = cache._replace(ids=cache.ids.at[0].set(42))
+    staged = cs.stage(new)
+    assert int(staged.active.ids[0]) == -1  # still the old view
+    committed = staged.commit()
+    assert int(committed.active.ids[0]) == 42
+
+
+def test_publish_and_fill_moves_payloads():
+    k, n, cap = 8, 2, 4
+    owners = np.zeros((k, n), bool)
+    owners[:, 0] = True  # home
+    owners[[1, 3], 1] = True  # node 1 qualifies for keys 1 and 3
+    plan = PlacementPlan(
+        owners=jnp.asarray(owners),
+        to_add=jnp.asarray(owners & ~np.eye(1, n, 0, dtype=bool)[[0] * k]),
+        to_drop=jnp.zeros((k, n), bool),
+        expired=jnp.zeros((k,), bool),
+    )
+    home = jnp.zeros((k,), jnp.int32)
+    moves = plan_moves(plan, home, cap, max_moves=4, object_bytes=16.0)
+    values = jnp.arange(k * 8, dtype=jnp.float32).reshape(k, 8)
+    cache = create_cache(cap, (8,))
+    filled = publish_and_fill(
+        cache, moves, values, jnp.arange(k, dtype=jnp.int32), rank=1
+    )
+    ids = set(int(i) for i in filled.ids if int(i) >= 0)
+    assert ids == {1, 3}
+    slot = int(jnp.argmax(filled.ids == 1))
+    np.testing.assert_allclose(np.asarray(filled.data[slot]), np.asarray(values[1]))

@@ -1,0 +1,75 @@
+"""Serving layer: engine lanes/eviction, decode fidelity, router behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.serving import LaneTable, Request, ServeEngine
+from repro.serving.kvcache import state_bytes
+
+
+def test_lane_table_lru_eviction():
+    lt = LaneTable(2)
+    l0, ev = lt.bind("a")
+    assert ev is None
+    l1, _ = lt.bind("b")
+    lt.lookup("a")  # refresh a -> b becomes LRU
+    l2, evicted = lt.bind("c")
+    assert evicted == "b" and l2 == l1
+    lt.release("a")
+    assert "a" not in lt.active
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-1.6b"])
+def test_engine_batched_generation(arch):
+    cfg = reduced(get_config(arch))
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(m, params, num_lanes=4, cache_len=64)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.admit(Request(f"s{i}", rng.integers(0, cfg.vocab_size, 12), max_new=5))
+    outs = eng.run_to_completion()
+    assert all(len(v) == 6 for v in outs.values())
+    assert eng.tokens_out == 15
+    assert state_bytes(eng.state) > 0
+
+
+def test_engine_interleaved_admission():
+    """A request admitted mid-decode of others generates correctly."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompt_a = np.arange(8) % cfg.vocab_size
+    prompt_b = (np.arange(8) * 3 + 1) % cfg.vocab_size
+
+    eng = ServeEngine(m, params, num_lanes=2, cache_len=32)
+    eng.admit(Request("a", prompt_a, max_new=4))
+    eng.step()
+    eng.admit(Request("b", prompt_b, max_new=4))  # joins mid-flight
+    out = eng.run_to_completion()
+
+    for sid, prompt in (("a", prompt_a), ("b", prompt_b)):
+        seq, ref = list(prompt), []
+        for _ in range(5):
+            logits, _ = m.prefill(params, {"tokens": jnp.asarray(seq, jnp.int32)[None]})
+            t = int(jnp.argmax(logits, -1)[0])
+            ref.append(t)
+            seq.append(t)
+        assert out[sid] == ref, sid
+
+
+def test_engine_sampled_generation_reproducible():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(m, params, num_lanes=2, cache_len=32, temperature=1.0, seed=7)
+        eng.admit(Request("a", np.arange(8) % cfg.vocab_size, max_new=6))
+        outs.append(eng.run_to_completion()["a"])
+    assert outs[0] == outs[1]
+    assert max(outs[0]) < cfg.vocab_size

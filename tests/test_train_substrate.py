@@ -1,0 +1,237 @@
+"""Trainer / data / checkpoint / fault / compression integration tests."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, Pipeline, write_token_file
+from repro.models import build
+from repro.train import checkpoint as ck
+from repro.train.compress import (
+    ErrorFeedback,
+    dequantize_int8,
+    quantize_int8,
+    topk_decode,
+)
+from repro.train.fault import (
+    HeartbeatMonitor,
+    StragglerMonitor,
+    StragglerPolicy,
+    elastic_data_width,
+)
+from repro.train.optim import OptConfig, apply_updates, init_opt, lr_at
+from repro.train.trainer import TrainConfig, Trainer
+
+
+# --------------------------------------------------------------------- data
+def test_pipeline_determinism_and_replay():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4, seed=7)
+    p = Pipeline(cfg)
+    s = p.init_state()
+    batches = []
+    for _ in range(5):
+        b, s = p.next(s)
+        batches.append(b)
+    s2 = p.seek(3)
+    b3, _ = p.next(s2)
+    np.testing.assert_array_equal(np.asarray(b3["tokens"]), np.asarray(batches[3]["tokens"]))
+    # targets are next-token shifted
+    np.testing.assert_array_equal(
+        np.asarray(batches[0]["targets"][:, :-1]), np.asarray(batches[0]["tokens"][:, 1:])
+    )
+
+
+def test_pipeline_zipf_skew():
+    cfg = DataConfig(vocab_size=1000, seq_len=256, global_batch=8, zipf_a=1.4)
+    p = Pipeline(cfg)
+    b, _ = p.next(p.init_state())
+    toks = np.asarray(b["tokens"]).ravel()
+    head = (toks < 100).mean()
+    assert head > 0.5  # hot head catches most traffic
+
+
+def test_memmap_source(tmp_path):
+    path = str(tmp_path / "tokens.bin")
+    write_token_file(path, np.arange(10_000) % 31)
+    cfg = DataConfig(vocab_size=31, seq_len=8, global_batch=2, source="memmap", path=path)
+    p = Pipeline(cfg)
+    b, s = p.next(p.init_state())
+    assert b["tokens"].shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(b["tokens"])[0], np.arange(8) % 31)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_lr_schedule():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_adamw_reduces_quadratic():
+    w = {"x": jnp.asarray([3.0, -2.0])}
+    opt = init_opt(w)
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0, clip_norm=100.0)
+    for _ in range(100):
+        g = {"x": 2 * w["x"]}
+        w, opt, _ = apply_updates(cfg, w, g, opt)
+    assert float(jnp.abs(w["x"]).max()) < 0.5
+
+
+# ------------------------------------------------------------------ trainer
+def test_train_loss_decreases_and_checkpoint_resume():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = reduced(get_config("llama3.2-3b"))
+        m = build(cfg)
+        tcfg = TrainConfig(
+            opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=40),
+            checkpoint_dir=d,
+            checkpoint_every=5,
+            log_every=100,
+        )
+        tr = Trainer(m, tcfg)
+        pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+        s0 = tr.init_state(jax.random.PRNGKey(0))
+        s1, h1 = tr.run(s0, pipe, 10, log=False)
+        assert h1[-1]["loss"] < h1[0]["loss"]
+        # resume from checkpoint == continue uninterrupted
+        s_rest = tr.restore(jax.random.PRNGKey(0))
+        assert int(s_rest.opt.step) == 10 and s_rest.data_step == 10
+        _, h2 = tr.run(s_rest, pipe, 5, log=False)
+        _, h3 = tr.run(s1, pipe, 5, log=False)
+        np.testing.assert_allclose(
+            [x["loss"] for x in h2], [x["loss"] for x in h3], rtol=1e-5
+        )
+
+
+def test_train_with_daemons_and_microbatches():
+    cfg = dataclasses.replace(
+        reduced(get_config("granite-moe-1b-a400m")), sweep_period=4, hot_embed_rows=32
+    )
+    m = build(cfg)
+    tr = Trainer(
+        m,
+        TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=30), microbatches=2, log_every=100),
+        num_nodes=2,
+    )
+    st = tr.init_state(jax.random.PRNGKey(0))
+    pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, zipf_a=1.3))
+    st, hist = tr.run(st, pipe, 12, log=False)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert int(st.expert_placement.sweeps) >= 2
+    assert int(st.hot_embed.sweeps) >= 2
+    assert hist[-1]["moe_hot_frac"] > 0
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    root = str(tmp_path)
+    tree = {"a": jnp.ones((4, 4), jnp.bfloat16), "b": {"c": jnp.arange(3)}}
+    for step in (1, 2, 3, 4):
+        ck.save_checkpoint(root, step, tree, metadata={"x": step})
+    ck.gc_checkpoints(root, keep=2)
+    steps = sorted(n for n in os.listdir(root) if n.startswith("step_"))
+    assert len(steps) == 2
+    assert ck.latest_step(root) == 4
+    restored, manifest = ck.restore_checkpoint(root, template=tree)
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]), np.arange(3))
+    assert restored["a"].dtype == np.asarray(tree["a"]).dtype
+    assert manifest["metadata"]["x"] == 4
+
+
+def test_checkpoint_shard_filter(tmp_path):
+    root = str(tmp_path)
+    tree = {"a": jnp.ones((2,)), "b": jnp.zeros((2,))}
+    ck.save_checkpoint(root, 1, tree, shard_filter=lambda name: name == "a")
+    d = os.path.join(root, "step_00000001")
+    assert os.path.exists(os.path.join(d, "a.npy"))
+    assert not os.path.exists(os.path.join(d, "b.npy"))
+
+
+# -------------------------------------------------------------------- fault
+def test_heartbeat_and_elastic_width():
+    mon = HeartbeatMonitor(["n0", "n1", "n2", "n3"], timeout=10.0)
+    assert len(mon.alive()) == 4
+    mon.kill("n2")
+    assert mon.dead() == ["n2"]
+    assert elastic_data_width(3, model_parallel=1) == 3
+    assert elastic_data_width(7, model_parallel=4) == 1
+    assert elastic_data_width(3, model_parallel=4) == 0
+
+
+def test_straggler_backup_dispatch():
+    sm = StragglerMonitor(["a", "b", "c"], StragglerPolicy(deadline_factor=2.0, patience=2))
+    assert sm.observe({"a": 1.0, "b": 1.0, "c": 5.0}) == []
+    fired = sm.observe({"a": 1.0, "b": 1.0, "c": 5.0})
+    assert fired and fired[0][0] == "c"
+
+
+def test_elastic_restart_recovers_from_failure(tmp_path):
+    """Kill a node mid-run; the runner restores the checkpoint, reseeks the
+    data stream, and continues at reduced width."""
+    root = str(tmp_path)
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m = build(cfg)
+
+    def make_trainer(width):
+        tr = Trainer(
+            m,
+            TrainConfig(
+                opt=OptConfig(lr=1e-3, warmup_steps=2, total_steps=60),
+                checkpoint_dir=root,
+                checkpoint_every=5,
+                log_every=1000,
+            ),
+            num_nodes=max(width, 1),
+        )
+        pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+        return tr, tr.init_state(jax.random.PRNGKey(0)), pipe
+
+    from repro.train.fault import ElasticRunner
+
+    mon = HeartbeatMonitor(["n0", "n1", "n2", "n3"], timeout=1e9)
+    runner = ElasticRunner(make_trainer, mon)
+    tr, st, pipe = make_trainer(4)
+    st, h1 = tr.run(st, pipe, 10, log=False)  # steps 1-10, ckpt at 10
+    mon.kill("n3")
+    runner.monitor = mon
+    h2 = runner.run(total_steps=10, chunk=5)
+    assert runner.restarts == 1
+    assert len(h2) == 10
+    assert h2[0]["step"] == 11  # resumed after the step-10 checkpoint
+
+
+# -------------------------------------------------------------- compression
+def test_int8_roundtrip_bound():
+    g = jax.random.normal(jax.random.PRNGKey(3), (128, 64)) * 0.01
+    qg = quantize_int8(g)
+    err = float(jnp.max(jnp.abs(dequantize_int8(qg) - g)))
+    assert err <= float(qg.scale) * 1.01
+    assert qg.nbytes < g.size * 4 / 3.9
+
+
+def test_int8_stochastic_rounding_unbiased():
+    g = jnp.full((1000,), 0.3 * 0.01)
+    qs = [
+        dequantize_int8(quantize_int8(g, jax.random.PRNGKey(i))).mean()
+        for i in range(30)
+    ]
+    assert abs(float(np.mean(qs)) - 0.003) < 2e-4
+
+
+def test_topk_error_feedback_decomposition():
+    g = jax.random.normal(jax.random.PRNGKey(5), (64, 32))
+    grads = {"w": g}
+    ef = ErrorFeedback.init(grads)
+    sparse, ef2 = ef.compress_step(grads, k=100)
+    dense = topk_decode(sparse["w"])
+    np.testing.assert_allclose(
+        np.asarray(dense + ef2.residual["w"]), np.asarray(g), atol=1e-6
+    )
+    assert int((np.asarray(dense) != 0).sum()) <= 100
