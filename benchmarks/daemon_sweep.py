@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import banner, emit, time_fn
 from repro.core.metadata import create_store
-from repro.core.placement import sweep
+from repro.core.placement import masked_step, sweep
 from repro.kernels.ownership_sweep.ops import ownership_sweep
 
 
@@ -32,6 +32,19 @@ def main(sizes=(1_000, 10_000, 100_000, 1_000_000), n_nodes: int = 16) -> None:
             lambda: jax.block_until_ready(sweep(store, h, 0)[0].owners), iters=5
         )
         emit("daemon_sweep_purejax", round(k / t_jax / 1e6, 3), "Mkeys/s", keys=k)
+
+        # Scan-compatible (due-masked) step: the form the fused simulation
+        # engine runs inside lax.scan — masking must not cost throughput.
+        masked = jax.jit(lambda s, due: masked_step(s, 0, due, h=h)[2].hosts)
+        t_masked = time_fn(
+            lambda: jax.block_until_ready(masked(store, jnp.bool_(True))), iters=5
+        )
+        emit(
+            "daemon_sweep_masked_step",
+            round(k / t_masked / 1e6, 3),
+            "Mkeys/s",
+            keys=k,
+        )
 
         fcounts = counts.astype(jnp.float32)
         live = jnp.ones((k,), bool)

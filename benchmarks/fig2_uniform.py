@@ -4,21 +4,34 @@ Local / Remote / Optimized (+ beyond-paper Replicated) throughput across
 read ratios 100% -> 50%, 100k requests, 3 nodes, 100 ms simulated remote
 RTT, with 99% confidence intervals over repeated iterations — the exact
 experiment grid of paper §8.2/§9.
+
+``engine="scan"`` (default) runs the fused lax.scan engine with the seed
+dimension vmapped; ``compare_engines=True`` additionally times the retained
+per-chunk reference loop on the same grid and reports the fusion speedup
+(warm timings — each engine runs once to compile, then is timed).
 """
 
 from __future__ import annotations
+
+import time
 
 from benchmarks.common import banner, emit
 from repro.kvsim import run_experiment
 
 
-def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
+def main(
+    iterations: int = 5,
+    num_requests: int = 100_000,
+    engine: str = "scan",
+    compare_engines: bool = False,
+) -> dict:
     banner("fig2: uniform object access distribution (paper Figure 2)")
     res = run_experiment(
         read_fractions=(1.0, 0.9, 0.75, 0.5),
         skewed=False,
         iterations=iterations,
         num_requests=num_requests,
+        engine=engine,
     )
     for scenario, rows in res["scenarios"].items():
         for row in rows:
@@ -42,6 +55,27 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
             "x_over_remote",
             read_fraction=rf,
             frac_of_local=round(opt[rf] / loc[rf], 3),
+        )
+
+    if compare_engines:
+        banner("fig2b: scan-fusion speedup over the reference chunk loop")
+        timings = {}
+        for eng in ("scan", "reference"):
+            run_experiment(
+                iterations=iterations, num_requests=num_requests, engine=eng
+            )  # compile / warm caches
+            t0 = time.perf_counter()
+            run_experiment(
+                iterations=iterations, num_requests=num_requests, engine=eng
+            )
+            timings[eng] = time.perf_counter() - t0
+            emit("fig2b_engine_s", round(timings[eng], 3), "s", engine=eng)
+        emit(
+            "fig2b_fusion_speedup",
+            round(timings["reference"] / timings["scan"], 2),
+            "x",
+            num_requests=num_requests,
+            iterations=iterations,
         )
     return res
 

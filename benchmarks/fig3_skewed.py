@@ -15,8 +15,11 @@ from repro.kvsim import (
     ClusterConfig,
     Scenario,
     WorkloadConfig,
+    diurnal_workload,
     run_experiment,
     run_scenario,
+    wan5_cluster,
+    wan5_workload,
 )
 
 
@@ -63,6 +66,33 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
             round(r.throughput_ops_s, 2),
             "ops/s",
             affinity=round(affinity, 3),
+            hit_rate=round(r.hit_rate, 4),
+            repl_moves=int(r.replication_moves),
+        )
+
+    banner("fig3c: 5-region WAN topology (beyond paper)")
+    geo = wan5_cluster()
+    wl5 = wan5_workload(num_requests=num_requests // 2)
+    for sc in (Scenario.LOCAL, Scenario.REMOTE, Scenario.OPTIMIZED):
+        r = run_scenario(wl5, geo, sc, seed=0)
+        emit(
+            "fig3c_wan5",
+            round(r.throughput_ops_s, 2),
+            "ops/s",
+            scenario=sc.value,
+            hit_rate=round(r.hit_rate, 4),
+            mean_latency_ms=round(r.mean_latency_ms, 2),
+        )
+
+    banner("fig3d: diurnal hot region — decay chases moving traffic")
+    wld = diurnal_workload(num_requests=num_requests // 2)
+    for decay in (1.0, 0.5):
+        r = run_scenario(wld, geo, Scenario.OPTIMIZED, seed=0, decay=decay)
+        emit(
+            "fig3d_diurnal",
+            round(r.throughput_ops_s, 2),
+            "ops/s",
+            decay=decay,
             hit_rate=round(r.hit_rate, 4),
             repl_moves=int(r.replication_moves),
         )

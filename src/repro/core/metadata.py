@@ -80,11 +80,15 @@ def record_accesses(
     nodes: Array,
     now: Array | int,
     weights: Array | None = None,
+    valid: Array | None = None,
 ) -> MetadataStore:
     """Fold a batch of accesses into the metadata (Algorithm 1's bookkeeping).
 
     keys, nodes: ``[B]`` int32 — key accessed / node that served the request.
     weights: optional ``[B]`` int32 multiplicity (e.g. tokens per route).
+    valid: optional ``[B]`` bool — False rows are ignored entirely (counts
+        *and* last_access). Lets fixed-shape callers (``lax.scan`` over padded
+        request chunks) fold partial batches without host-side slicing.
 
     The paper updates metadata per request over HTTP; we fold the whole batch
     with one scatter-add — this is the "non-blocking, off the critical path"
@@ -93,10 +97,14 @@ def record_accesses(
     k, n = store.access_counts.shape
     if weights is None:
         weights = jnp.ones_like(keys, dtype=jnp.int32)
-    flat = keys.astype(jnp.int32) * n + nodes.astype(jnp.int32)
+    sel = keys
+    if valid is not None:
+        weights = jnp.where(valid, weights, 0)
+        sel = jnp.where(valid, keys, k)  # out-of-range rows drop below
+    flat = sel.astype(jnp.int32) * n + nodes.astype(jnp.int32)
     counts = store.access_counts.reshape(-1)
     counts = counts.at[flat].add(weights.astype(jnp.int32), mode="drop")
-    last = store.last_access.at[keys].max(
+    last = store.last_access.at[sel].max(
         jnp.asarray(now, dtype=jnp.int32), mode="drop"
     )
     return store._replace(

@@ -30,7 +30,7 @@ from jax import Array
 from repro.core.metadata import MetadataStore
 from repro.core.ownership import eligible_hosts, validate_coefficient
 
-__all__ = ["PlacementPlan", "sweep", "apply_plan", "PlacementDaemon"]
+__all__ = ["PlacementPlan", "sweep", "apply_plan", "masked_step", "PlacementDaemon"]
 
 
 class PlacementPlan(NamedTuple):
@@ -100,6 +100,51 @@ def apply_plan(values_present: Array, plan: PlacementPlan) -> Array:
     return present
 
 
+def _decay_counts(store: MetadataStore, decay: float) -> MetadataStore:
+    """Beyond-paper: exponential decay keeps the heuristics reactive to
+    traffic *shifts* (the paper's raw counters saturate — an object hot
+    yesterday and cold today keeps stale ownership for a long time).
+    Applied post-sweep so each sweep sees fresh-ish counts. Shared by the
+    host-side daemon and the scan-compatible `masked_step` so the fused
+    engine and its reference oracle cannot desynchronize."""
+    if decay >= 1.0:
+        return store
+    return store._replace(
+        access_counts=jnp.floor(
+            store.access_counts.astype(jnp.float32) * decay
+        ).astype(jnp.int32)
+    )
+
+
+def masked_step(
+    store: MetadataStore,
+    now: Array | int,
+    due: Array,
+    *,
+    h: Array | float,
+    expiry: int | None = None,
+    decay: float = 1.0,
+) -> tuple[Array, Array, MetadataStore]:
+    """Scan-compatible daemon step: fixed-shape replacement for the host-side
+    ``if daemon.due(tick): daemon.step(...)`` pattern.
+
+    The sweep is always computed but only *committed* where ``due`` (a traced
+    bool) — off ticks return the store unchanged, so the step can live inside
+    ``jax.lax.scan`` / ``vmap`` bodies with no data-dependent control flow.
+
+    Returns ``(adds, drops, store)``: replicas created / dropped this tick
+    (0.0 when not due) and the conditionally-updated metadata store.
+    """
+    plan, swept = sweep(store, h, now, expiry)
+    swept = _decay_counts(swept, decay)
+    new_store = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(due, a, b), swept, store
+    )
+    adds = jnp.where(due, jnp.sum(plan.to_add).astype(jnp.float32), 0.0)
+    drops = jnp.where(due, jnp.sum(plan.to_drop).astype(jnp.float32), 0.0)
+    return adds, drops, new_store
+
+
 class PlacementDaemon:
     """Periodic offline repartitioner (paper §5.1 'Placement Daemon').
 
@@ -136,13 +181,12 @@ class PlacementDaemon:
         self, store: MetadataStore, now: Array | int
     ) -> tuple[PlacementPlan, MetadataStore]:
         plan, store = sweep(store, self.h, now, self.expiry)
-        if self.decay < 1.0:
-            # Beyond-paper: exponential decay keeps the heuristics reactive to
-            # traffic *shifts* (the paper's raw counters saturate — an object
-            # hot yesterday and cold today keeps stale ownership for a long
-            # time). Applied post-sweep so each sweep sees fresh-ish counts.
-            decayed = jnp.floor(
-                store.access_counts.astype(jnp.float32) * self.decay
-            ).astype(jnp.int32)
-            store = store._replace(access_counts=decayed)
-        return plan, store
+        return plan, _decay_counts(store, self.decay)
+
+    def masked_step(
+        self, store: MetadataStore, now: Array | int, due: Array
+    ) -> tuple[Array, Array, MetadataStore]:
+        """Scan-compatible `step`: commit only where ``due`` (traced bool)."""
+        return masked_step(
+            store, now, due, h=self.h, expiry=self.expiry, decay=self.decay
+        )

@@ -78,23 +78,34 @@ def plan_moves(
     cache_capacity: int,
     max_moves: int,
     object_bytes: Array | float,
+    priority: Array | None = None,  # [K] float; higher = keep first
 ) -> Moves:
     """Compile a PlacementPlan into a static-shape move schedule.
 
     Replicas beyond the home shard live in caches; the desired cache contents
     of rank ``n`` are the objects with ``owners[k, n] & (home[k] != n)``,
-    hottest-first, truncated to capacity (the budgeted plan already fits).
-    Newly published objects are those appearing in any rank's adds.
+    truncated to capacity (the budgeted plan already fits). With ``priority``
+    (e.g. total access counts) the truncation keeps the hottest objects
+    first, ties broken by object id; without it the order is object id —
+    deterministic either way. Newly published objects are those appearing in
+    any rank's adds.
     """
     k, n = plan.owners.shape
     arange_k = jnp.arange(k, dtype=jnp.int32)
 
+    if priority is None:
+        rank = arange_k  # id order
+    else:
+        # Dense rank by descending priority (stable -> ties by id).
+        pos = jnp.argsort(-jnp.asarray(priority, jnp.float32), stable=True)
+        rank = jnp.zeros((k,), jnp.int32).at[pos].set(arange_k)
+
     want = plan.owners & (home[:, None] != jnp.arange(n)[None, :])  # [K, N]
-    # Per-rank desired slots: stable top-capacity by object id (deterministic).
+    # Per-rank desired slots: stable top-capacity by rank (deterministic).
     def slots_for(col: Array) -> Array:
-        ids = jnp.where(col, arange_k, k)  # k sorts last
-        order = jnp.sort(ids)[:cache_capacity]
-        return jnp.where(order < k, order, -1).astype(jnp.int32)
+        score = jnp.where(col, rank, k)  # unwanted sorts last
+        order = jnp.argsort(score)[:cache_capacity]  # key ids, best first
+        return jnp.where(score[order] < k, order.astype(jnp.int32), -1)
 
     slot_ids = jax.vmap(slots_for, in_axes=1, out_axes=0)(want)  # [N, C]
 

@@ -2,23 +2,55 @@
 
 3 nodes × {RedynisService, Redis data instance, Redis metadata instance} +
 one master propagator for write serialization + the RedynisDaemon — with the
-paper's latency model: 100 ms simulated remote penalty, 0 ms local (§8.2).
+paper's latency model generalised to an ``[N, N]`` inter-node RTT matrix:
+the paper's flat 100 ms remote penalty is the degenerate topology (§8.2);
+``wan5_cluster`` + the region-skewed / diurnal workload presets open the
+geo-distributed scenarios the paper motivates but never measures.
 
 The simulator runs the *same* core engine (metadata/ownership/placement) that
 the ML integrations use; only the latency bookkeeping is simulation-specific.
+``run_scenario`` is a single fused ``lax.scan`` program per scenario;
+``run_scenario_reference`` retains the per-chunk Python loop as the oracle.
 """
 
-from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
-from repro.kvsim.cluster import ClusterConfig, Scenario
-from repro.kvsim.simulate import SimResult, run_scenario, run_experiment
+from repro.kvsim.workload import (
+    Trace,
+    WorkloadConfig,
+    diurnal_workload,
+    generate_trace,
+    wan5_workload,
+)
+from repro.kvsim.cluster import (
+    WAN5_REGIONS,
+    WAN5_RTT_MS,
+    ClusterConfig,
+    Scenario,
+    flat_rtt,
+    wan5_cluster,
+)
+from repro.kvsim.simulate import (
+    SimResult,
+    confidence_interval_99,
+    run_experiment,
+    run_scenario,
+    run_scenario_reference,
+)
 
 __all__ = [
     "Trace",
     "WorkloadConfig",
     "generate_trace",
+    "wan5_workload",
+    "diurnal_workload",
     "ClusterConfig",
     "Scenario",
+    "flat_rtt",
+    "wan5_cluster",
+    "WAN5_REGIONS",
+    "WAN5_RTT_MS",
     "SimResult",
     "run_scenario",
+    "run_scenario_reference",
     "run_experiment",
+    "confidence_interval_99",
 ]

@@ -11,15 +11,30 @@
                  are local, but every write pays master relay + broadcast —
                  the cost LOCAL's idealisation hides.
 
-Latency model (paper §8.2): remote request penalty 100 ms, local penalty 0.
-Service time is the YCSB-side per-op cost; the paper does not state it, so it
-is a calibration constant chosen to land the LOCAL:REMOTE throughput ratio
-near the paper's reported ~10x (see EXPERIMENTS.md §Repro-assumptions).
+Latency model (paper §8.2, generalised): the cluster is described by an
+``[N, N]`` inter-node RTT matrix. The paper's 3-node testbed is the
+*degenerate flat topology* — ``local_ms`` on the diagonal, ``remote_ms``
+(100 ms) everywhere else — and is the default (``rtt=None``). Geo presets
+(5-region WAN) live here; region-skewed / diurnal traffic presets live in
+``workload.py``. Service time is the YCSB-side per-op cost; the paper does
+not state it, so it is a calibration constant chosen to land the
+LOCAL:REMOTE throughput ratio near the paper's reported ~10x (see
+EXPERIMENTS.md §Repro-assumptions).
+
+Read path (Algorithm 1, geo-generalised): a read at node x is served by the
+*nearest* replica — ``min_j rtt[x, j]`` over the key's replica set. A local
+replica has ``rtt[x, x] = local_ms``, reproducing the flat model's hit path.
 
 Write path (Algorithm 2): a write at node x for a key whose replica set is
 {x} commits locally; otherwise it is relayed to the master propagator
-(one RTT if x != master) which posts the value to every owner host
-(one parallel RTT if any owner is remote from the master).
+(``rtt[x, master]``) which posts the value to every owner host in parallel
+(``max_j rtt[master, j]`` over owners — the broadcast completes when the
+farthest owner acks).
+
+Per-key payload cost (size-aware, after Didona & Zwaenepoel): when
+``transfer_ms_per_kb > 0`` every remote hop additionally pays
+``value_bytes``-proportional serialisation/transfer time. The default of 0
+keeps the paper's pure-RTT model (and the exact Fig 2/3 numbers).
 """
 
 from __future__ import annotations
@@ -30,7 +45,19 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import Array
 
-__all__ = ["ClusterConfig", "Scenario", "read_latency", "write_latency"]
+__all__ = [
+    "ClusterConfig",
+    "Scenario",
+    "read_latency",
+    "write_latency",
+    "nearest_replica_rtt",
+    "read_latency_geo",
+    "write_latency_geo",
+    "flat_rtt",
+    "wan5_cluster",
+    "WAN5_REGIONS",
+    "WAN5_RTT_MS",
+]
 
 
 class Scenario(enum.Enum):
@@ -38,6 +65,28 @@ class Scenario(enum.Enum):
     REMOTE = "remote"
     OPTIMIZED = "optimized"
     REPLICATED = "replicated"
+
+
+def flat_rtt(
+    num_nodes: int = 3, remote_ms: float = 100.0, local_ms: float = 0.0
+) -> tuple[tuple[float, ...], ...]:
+    """The paper's testbed topology: a uniform ``remote_ms`` between every
+    pair of distinct nodes (the degenerate ``[N, N]`` case)."""
+    return tuple(
+        tuple(local_ms if i == j else remote_ms for j in range(num_nodes))
+        for i in range(num_nodes)
+    )
+
+
+# 5-region WAN preset: approximate public-cloud inter-region RTTs in ms.
+WAN5_REGIONS = ("us-east", "us-west", "eu-west", "ap-southeast", "ap-northeast")
+WAN5_RTT_MS: tuple[tuple[float, ...], ...] = (
+    (0.0, 65.0, 75.0, 230.0, 170.0),
+    (65.0, 0.0, 140.0, 165.0, 105.0),
+    (75.0, 140.0, 0.0, 160.0, 220.0),
+    (230.0, 165.0, 160.0, 0.0, 70.0),
+    (170.0, 105.0, 220.0, 70.0, 0.0),
+)
 
 
 class ClusterConfig(NamedTuple):
@@ -48,6 +97,40 @@ class ClusterConfig(NamedTuple):
     master: int = 0  # master propagator (write serializer)
     value_bytes: float = 1024.0  # size(value) >> size(key), paper §4
     key_bytes: float = 16.0
+    # [N][N] pairwise RTT in ms (hashable nested tuple so the config stays a
+    # valid jit static). None -> the degenerate flat topology built from
+    # remote_ms / local_ms — byte-identical to the paper's model.
+    rtt: tuple[tuple[float, ...], ...] | None = None
+    # Size-aware per-key transfer cost on remote hops; 0 = pure-RTT model.
+    transfer_ms_per_kb: float = 0.0
+
+    def rtt_matrix(self) -> Array:
+        """The ``[N, N]`` RTT matrix as a device array."""
+        if self.rtt is None:
+            return jnp.asarray(
+                flat_rtt(self.num_nodes, self.remote_ms, self.local_ms),
+                jnp.float32,
+            )
+        return jnp.asarray(self.rtt, jnp.float32)
+
+    def transfer_ms(self, payload_bytes: float | None = None) -> float:
+        """Payload serialisation/transfer time for one remote hop."""
+        if payload_bytes is None:
+            payload_bytes = self.value_bytes
+        return self.transfer_ms_per_kb * (payload_bytes / 1024.0)
+
+
+def wan5_cluster(service_ms: float = 10.0, **kwargs) -> ClusterConfig:
+    """5-region WAN preset (``WAN5_REGIONS`` RTTs), master in us-east."""
+    return ClusterConfig(
+        num_nodes=5, rtt=WAN5_RTT_MS, service_ms=service_ms, **kwargs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Flat-model latency functions (paper §8.2 verbatim; retained for the
+# degenerate topology and as the reference the geo model must collapse to).
+# ---------------------------------------------------------------------------
 
 
 def read_latency(cfg: ClusterConfig, hit: Array) -> Array:
@@ -61,7 +144,7 @@ def write_latency(
     sole_local_owner: Array,
     any_owner_remote_from_master: Array,
 ) -> Array:
-    """Per-request write latency (Algorithm 2).
+    """Per-request write latency (Algorithm 2), flat topology.
 
     sole_local_owner: replica set == {requesting node} -> commit locally.
     Otherwise: relay to master (RTT if requester != master) + master posts to
@@ -70,3 +153,66 @@ def write_latency(
     relay = jnp.where(node == cfg.master, 0.0, cfg.remote_ms)
     post = jnp.where(any_owner_remote_from_master, cfg.remote_ms, 0.0)
     return cfg.service_ms + jnp.where(sole_local_owner, 0.0, relay + post)
+
+
+# ---------------------------------------------------------------------------
+# Geo latency functions: the [N, N] generalisation used by the simulator.
+# ---------------------------------------------------------------------------
+
+
+def nearest_replica_rtt(rtt: Array, replicas: Array, nodes: Array) -> Array:
+    """RTT from each requesting node to its *nearest* replica.
+
+    rtt:      [N, N] pairwise RTT matrix.
+    replicas: [B, N] bool replica mask per request.
+    nodes:    [B]    requesting node per request.
+
+    A request whose replica mask is empty (orphan key) pays the worst RTT in
+    the topology rather than producing an inf — the metadata layer's
+    starvation guard makes this unreachable in practice.
+    """
+    row = rtt[nodes]  # [B, N]
+    masked = jnp.where(replicas, row, jnp.inf)
+    nearest = jnp.min(masked, axis=-1)
+    return jnp.where(jnp.isfinite(nearest), nearest, jnp.max(rtt))
+
+
+def read_latency_geo(
+    cfg: ClusterConfig, rtt: Array, replicas: Array, nodes: Array
+) -> Array:
+    """Geo read path: service + RTT to the nearest replica (+ payload cost
+    when the serving replica is remote — i.e. the requesting node holds no
+    visible copy; a nonzero RTT diagonal models intra-node latency, not a
+    network hop, so it never triggers the transfer charge)."""
+    nearest = nearest_replica_rtt(rtt, replicas, nodes)
+    has_local = replicas[jnp.arange(replicas.shape[0]), nodes]
+    xfer = cfg.transfer_ms(cfg.value_bytes)
+    return cfg.service_ms + nearest + jnp.where(has_local, 0.0, xfer)
+
+
+def write_latency_geo(
+    cfg: ClusterConfig,
+    rtt: Array,
+    replicas: Array,
+    nodes: Array,
+    sole_local_owner: Array,
+) -> Array:
+    """Geo write path (Algorithm 2 over the RTT matrix).
+
+    Relay to the master costs ``rtt[node, master]``; the master's parallel
+    post to the owner set completes when the farthest owner acks
+    (``max`` over the owner row). A master-origin write relays for free and
+    the master's own replica posts for free — as in the flat model — even
+    when a nonzero RTT diagonal models intra-node latency, so ``cost > 0``
+    means a payload genuinely crossed a link (and pays the transfer charge).
+    """
+    n = rtt.shape[0]
+    relay = jnp.where(nodes == cfg.master, 0.0, rtt[nodes, cfg.master])
+    non_master_owners = replicas & (jnp.arange(n)[None, :] != cfg.master)
+    post = jnp.max(
+        jnp.where(non_master_owners, rtt[cfg.master][None, :], 0.0), axis=-1
+    )
+    cost = relay + post
+    xfer = cfg.transfer_ms(cfg.value_bytes + cfg.key_bytes)
+    cost = cost + jnp.where(cost > 0, xfer, 0.0)
+    return cfg.service_ms + jnp.where(sole_local_owner, 0.0, cost)

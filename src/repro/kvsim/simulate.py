@@ -2,11 +2,11 @@
 
 Reproduces the three scenarios of Figure 2/3 — Local / Remote / Optimized —
 on YCSB-style traces (``workload.py``) with the paper's latency model
-(``cluster.py``). The OPTIMIZED scenario runs the *actual* core engine
-(metadata layer + ownership coefficient + placement daemon), not a model of
-it: requests fold accesses into a :class:`repro.core.MetadataStore` and the
-:class:`repro.core.PlacementDaemon` sweeps between request chunks, exactly
-like the paper's offline RedynisDaemon.
+generalised to an ``[N, N]`` RTT topology (``cluster.py``). The OPTIMIZED
+scenario runs the *actual* core engine (metadata layer + ownership
+coefficient + placement daemon), not a model of it: requests fold accesses
+into a :class:`repro.core.MetadataStore` and the placement daemon sweeps
+between request chunks, exactly like the paper's offline RedynisDaemon.
 
 Execution model
 ---------------
@@ -15,6 +15,19 @@ chunk every request sees the replica map *frozen at chunk start* — this is
 the paper's non-blocking property: in-flight requests are never stalled by
 the daemon; they observe the previous placement until the sweep commits.
 Metadata updates (access logging) fold in continuously, as in Algorithm 1.
+
+Two engines with identical semantics:
+
+  * ``run_scenario`` — the fused fast path: ONE ``jax.lax.scan`` over
+    fixed-shape chunks with the daemon sweep ``due``-masked inside the scan
+    body (``repro.core.placement.masked_step``), so a whole scenario is a
+    single compiled program instead of one dispatch per chunk.
+    ``run_experiment`` additionally ``vmap``s the seed (CI-iteration)
+    dimension, so a full read-ratio row runs as one batched program.
+  * ``run_scenario_reference`` — the retained slow path: the original
+    per-chunk Python loop. It exists as the regression oracle for the fused
+    engine (see tests/test_simulate_equivalence.py) and accumulates in
+    float64; equivalence is allclose, not bit-identical.
 
 Throughput model
 ----------------
@@ -35,12 +48,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
-from repro.core.metadata import MetadataStore, create_store, record_accesses
-from repro.core.placement import PlacementDaemon
-from repro.kvsim.cluster import ClusterConfig, Scenario, read_latency, write_latency
+from repro.core.metadata import create_store, record_accesses
+from repro.core.placement import PlacementDaemon, masked_step
+from repro.kvsim.cluster import (
+    ClusterConfig,
+    Scenario,
+    read_latency_geo,
+    write_latency_geo,
+)
 from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
 
-__all__ = ["SimResult", "run_scenario", "run_experiment", "confidence_interval_99"]
+__all__ = [
+    "SimResult",
+    "run_scenario",
+    "run_scenario_reference",
+    "run_experiment",
+    "confidence_interval_99",
+]
 
 
 class SimResult(NamedTuple):
@@ -54,47 +78,209 @@ class SimResult(NamedTuple):
     deletion_moves: float  # replicas dropped by the daemon
 
 
-def _initial_hosts(trace: Trace, num_keys: int, num_nodes: int, scenario: Scenario) -> Array:
+def _initial_hosts(natural_node: Array, num_keys: int, num_nodes: int, scenario: Scenario) -> Array:
     """Starting replica map per scenario (paper §9 scenario definitions)."""
     if scenario in (Scenario.LOCAL, Scenario.REPLICATED):
         return jnp.ones((num_keys, num_nodes), dtype=bool)
     # REMOTE / OPTIMIZED: each key starts on a single node that is *not* its
     # natural request source ("requests ... served not available on the local
     # key-value store"), so both start from the worst-case placement.
-    home = (trace.natural_node + 1) % num_nodes
+    home = (natural_node + 1) % num_nodes
     return jax.nn.one_hot(home, num_nodes, dtype=bool)
 
 
-@partial(jax.jit, static_argnames=("cluster", "scenario"))
 def _chunk_latency(
     hosts: Array,  # [K, N] frozen replica map
     keys: Array,  # [B]
     nodes: Array,  # [B]
     is_read: Array,  # [B]
+    rtt: Array,  # [N, N]
     cluster: ClusterConfig,
     scenario: Scenario,
 ) -> tuple[Array, Array]:
     """Per-request latency + hit flags for one chunk under a frozen map."""
+    b = keys.shape[0]
     if scenario is Scenario.LOCAL:
         # The paper's "theoretically ideal scenario": everything local.
         hit = jnp.ones_like(is_read)
-        return jnp.full(keys.shape, cluster.service_ms, jnp.float32), hit & is_read
-    if scenario is Scenario.REMOTE:
-        hit = jnp.zeros_like(is_read)  # every request pays the RTT
-    else:
-        hit = hosts[keys, nodes]
-    r_lat = read_latency(cluster, hit)
+        return jnp.full((b,), cluster.service_ms, jnp.float32), hit & is_read
 
-    owner_count = jnp.sum(hosts[keys], axis=-1)
+    replicas = hosts[keys]  # [B, N]
+    hit = replicas[jnp.arange(b), nodes]
+    if scenario is Scenario.REMOTE:
+        # "No local replicas ever": the requesting node's own copy (if any)
+        # is invisible to reads, so every op pays a WAN hop; with an empty
+        # visible set the orphan guard charges the topology's worst RTT —
+        # exactly the flat model's unconditional remote_ms.
+        read_replicas = replicas & (jnp.arange(hosts.shape[1])[None, :] != nodes[:, None])
+        hit = jnp.zeros_like(hit)
+    else:
+        read_replicas = replicas
+    r_lat = read_latency_geo(cluster, rtt, read_replicas, nodes)
+
+    owner_count = jnp.sum(replicas, axis=-1)
     sole_local = hit & (owner_count == 1)
     if scenario is Scenario.REMOTE:
         sole_local = jnp.zeros_like(sole_local)
-    owners_not_master = hosts[keys].at[:, cluster.master].set(False)
-    any_remote_from_master = jnp.any(owners_not_master, axis=-1)
-    w_lat = write_latency(cluster, nodes, sole_local, any_remote_from_master)
+    w_lat = write_latency_geo(cluster, rtt, replicas, nodes, sole_local)
 
     lat = jnp.where(is_read, r_lat, w_lat)
     return lat, hit & is_read
+
+
+_chunk_latency_jit = jax.jit(
+    _chunk_latency, static_argnames=("cluster", "scenario")
+)
+
+
+def _make_daemon(
+    workload: WorkloadConfig,
+    ownership_coefficient: float | None,
+    expiry_ticks: int | None,
+    decay: float,
+    period: int = 1,
+) -> PlacementDaemon:
+    """Host-side construction so H is validated against N (paper eq. 3)."""
+    return PlacementDaemon(
+        num_nodes=workload.num_nodes,
+        h=ownership_coefficient,
+        expiry=expiry_ticks,
+        decay=decay,
+        period=period,
+    )
+
+
+def _check_topology(workload: WorkloadConfig, cluster: ClusterConfig) -> None:
+    if workload.num_nodes != cluster.num_nodes:
+        raise ValueError(
+            f"workload has {workload.num_nodes} nodes but cluster topology "
+            f"has {cluster.num_nodes}"
+        )
+    if cluster.rtt is not None and len(cluster.rtt) != cluster.num_nodes:
+        raise ValueError(
+            f"rtt matrix is {len(cluster.rtt)}x{len(cluster.rtt[0])} but "
+            f"num_nodes={cluster.num_nodes}"
+        )
+
+
+def _seed_store(hosts: Array, num_keys: int, num_nodes: int):
+    """Metadata layer seeded with the initial placement (Algorithm 1's
+    "metadata == null -> generate metadata object" happened at load time)."""
+    return create_store(num_keys, num_nodes)._replace(
+        hosts=hosts,
+        live=jnp.ones((num_keys,), dtype=bool),
+        home=jnp.argmax(hosts, axis=-1).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused engine: one lax.scan over chunks, daemon due-masked inside the body.
+# ---------------------------------------------------------------------------
+
+_SIM_STATICS = (
+    "cluster",
+    "scenario",
+    "daemon_interval",
+    "h",
+    "expiry",
+    "decay",
+    "period",
+)
+
+
+def _simulate(
+    keys: Array,  # [R]
+    nodes: Array,  # [R]
+    is_read: Array,  # [R]
+    natural: Array,  # [K]
+    *,
+    cluster: ClusterConfig,
+    scenario: Scenario,
+    daemon_interval: int,
+    h: float,
+    expiry: int | None,
+    decay: float,
+    period: int,
+):
+    """Whole-scenario simulation as a single fixed-shape scan program.
+
+    The trace is padded to ``num_chunks * daemon_interval`` with ``valid``-
+    masked rows (zero latency, zero metadata weight), so every chunk has one
+    shape and the Python loop collapses into ``jax.lax.scan``.
+    """
+    r = keys.shape[0]
+    num_keys = natural.shape[0]
+    n = cluster.num_nodes
+    rtt = cluster.rtt_matrix()
+
+    num_chunks = -(-r // daemon_interval)
+    pad = num_chunks * daemon_interval - r
+
+    def chunked(x: Array) -> Array:
+        if pad:
+            x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        return x.reshape(num_chunks, daemon_interval)
+
+    xs = (
+        jnp.arange(num_chunks, dtype=jnp.int32),
+        chunked(keys),
+        chunked(nodes),
+        chunked(is_read),
+        (jnp.arange(num_chunks * daemon_interval) < r).reshape(
+            num_chunks, daemon_interval
+        ),
+    )
+
+    store = _seed_store(_initial_hosts(natural, num_keys, n, scenario), num_keys, n)
+    zero = jnp.float32(0.0)
+    init = (store, jnp.zeros((n,), jnp.float32), zero, zero, zero, zero, zero)
+
+    def body(carry, x):
+        store, busy, lat_sum, hits, reads, repl, drop = carry
+        c, ck, cn, cr, cv = x
+        lat, read_hits = _chunk_latency(store.hosts, ck, cn, cr, rtt, cluster, scenario)
+        lat = jnp.where(cv, lat, 0.0)
+        busy = busy.at[cn].add(lat)
+        lat_sum = lat_sum + jnp.sum(lat)
+        hits = hits + jnp.sum((read_hits & cv).astype(jnp.float32))
+        reads = reads + jnp.sum((cr & cv).astype(jnp.float32))
+        if scenario is Scenario.OPTIMIZED:
+            # Algorithm 1 bookkeeping: log usage heuristics per request.
+            store = record_accesses(store, ck, cn, now=c, valid=cv)
+            adds, drops, store = masked_step(
+                store, c, (c % period) == 0, h=h, expiry=expiry, decay=decay
+            )
+            repl = repl + adds
+            drop = drop + drops
+        return (store, busy, lat_sum, hits, reads, repl, drop), None
+
+    (_, busy, lat_sum, hits, reads, repl, drop), _ = jax.lax.scan(body, init, xs)
+    makespan_ms = jnp.max(busy)
+    return (
+        r / (makespan_ms / 1000.0),
+        hits / jnp.maximum(reads, 1.0),
+        lat_sum / r,
+        busy,
+        repl,
+        drop,
+    )
+
+
+_simulate_jit = partial(jax.jit, static_argnames=_SIM_STATICS)(_simulate)
+
+
+@partial(jax.jit, static_argnames=_SIM_STATICS)
+def _simulate_batch(keys, nodes, is_read, natural, **statics):
+    """Seed-batched fused engine: vmap over the leading (iteration) axis."""
+    return jax.vmap(lambda a, b, c, d: _simulate(a, b, c, d, **statics))(
+        keys, nodes, is_read, natural
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _traces_for_seeds(cfg: WorkloadConfig, seeds: Array) -> Trace:
+    """Batched trace generation (seed axis leading on every field)."""
+    return jax.vmap(lambda s: generate_trace(cfg, s))(seeds)
 
 
 def run_scenario(
@@ -105,24 +291,70 @@ def run_scenario(
     daemon_interval: int = 1000,
     ownership_coefficient: float | None = None,
     expiry_ticks: int | None = None,
+    decay: float = 1.0,
+    daemon_period: int = 1,
 ) -> SimResult:
-    """Simulate one scenario over one generated trace."""
+    """Simulate one scenario over one generated trace (fused scan engine).
+
+    daemon_period: sweep every `daemon_period`-th chunk (1 = every chunk);
+    off chunks take the not-due branch of `masked_step`.
+    """
+    _check_topology(workload, cluster)
+    daemon = _make_daemon(
+        workload, ownership_coefficient, expiry_ticks, decay, daemon_period
+    )
+    trace = generate_trace(workload, seed)
+    tput, hit, mean_lat, busy, repl, drop = _simulate_jit(
+        trace.keys,
+        trace.nodes,
+        trace.is_read,
+        trace.natural_node,
+        cluster=cluster,
+        scenario=scenario,
+        daemon_interval=daemon_interval,
+        h=daemon.h,
+        expiry=daemon.expiry,
+        decay=daemon.decay,
+        period=daemon.period,
+    )
+    return SimResult(
+        throughput_ops_s=float(tput),
+        hit_rate=float(hit),
+        mean_latency_ms=float(mean_lat),
+        node_busy_ms=np.asarray(busy, dtype=np.float64),
+        replication_moves=float(repl),
+        deletion_moves=float(drop),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference engine: the original per-chunk Python loop, kept as the oracle.
+# ---------------------------------------------------------------------------
+
+
+def run_scenario_reference(
+    workload: WorkloadConfig,
+    cluster: ClusterConfig,
+    scenario: Scenario,
+    seed: int = 0,
+    daemon_interval: int = 1000,
+    ownership_coefficient: float | None = None,
+    expiry_ticks: int | None = None,
+    decay: float = 1.0,
+    daemon_period: int = 1,
+) -> SimResult:
+    """Slow-path reference: one host dispatch per chunk, daemon stepped with
+    Python control flow. Semantically identical to :func:`run_scenario`."""
+    _check_topology(workload, cluster)
     trace = generate_trace(workload, seed)
     k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
-    hosts = _initial_hosts(trace, k, n, scenario)
+    rtt = cluster.rtt_matrix()
 
-    daemon = PlacementDaemon(
-        num_nodes=n,
-        h=ownership_coefficient,
-        expiry=expiry_ticks,
+    daemon = _make_daemon(
+        workload, ownership_coefficient, expiry_ticks, decay, daemon_period
     )
-    store = create_store(k, n)
-    # Seed the metadata layer with the initial placement (Algorithm 1's
-    # "metadata == null -> generate metadata object" happened at load time).
-    store = store._replace(
-        hosts=hosts,
-        live=jnp.ones((k,), dtype=bool),
-        home=jnp.argmax(hosts, axis=-1).astype(jnp.int32),
+    store = _seed_store(
+        _initial_hosts(trace.natural_node, k, n, scenario), k, n
     )
 
     total_lat = np.zeros((n,), dtype=np.float64)
@@ -139,8 +371,8 @@ def run_scenario(
         nodes = trace.nodes[lo:hi]
         is_read = trace.is_read[lo:hi]
 
-        lat, read_hits = _chunk_latency(
-            store.hosts, keys, nodes, is_read, cluster, scenario
+        lat, read_hits = _chunk_latency_jit(
+            store.hosts, keys, nodes, is_read, rtt, cluster, scenario
         )
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
@@ -182,10 +414,22 @@ def run_experiment(
     skewed: bool = False,
     iterations: int = 5,
     num_requests: int = 100_000,
+    cluster: ClusterConfig | None = None,
+    engine: str = "scan",
+    daemon_interval: int = 1000,
     **workload_kwargs,
 ) -> dict:
-    """Paper Figure 2/3: all three scenarios × read ratios, with 99% CIs."""
-    cluster = ClusterConfig()
+    """Paper Figure 2/3: all scenarios × read ratios, with 99% CIs.
+
+    engine="scan" (default) runs every CI iteration of a read-ratio row as
+    one vmapped program; engine="reference" replays the retained per-chunk
+    Python loop (the oracle the equivalence tests pin the scan engine to).
+    """
+    if cluster is None:
+        cluster = ClusterConfig()
+    workload_kwargs.setdefault("num_nodes", cluster.num_nodes)
+    if engine not in ("scan", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
     out: dict = {"skewed": skewed, "read_fractions": list(read_fractions), "scenarios": {}}
     for scenario in Scenario:
         rows = []
@@ -196,14 +440,42 @@ def run_experiment(
                 skewed=skewed,
                 **workload_kwargs,
             )
-            samples = np.array(
-                [
-                    run_scenario(wl, cluster, scenario, seed=it).throughput_ops_s
-                    for it in range(iterations)
-                ]
-            )
+            if engine == "reference":
+                samples = np.array(
+                    [
+                        run_scenario_reference(
+                            wl, cluster, scenario, seed=it,
+                            daemon_interval=daemon_interval,
+                        ).throughput_ops_s
+                        for it in range(iterations)
+                    ]
+                )
+                hit = run_scenario_reference(
+                    wl, cluster, scenario, seed=0,
+                    daemon_interval=daemon_interval,
+                ).hit_rate
+            else:
+                _check_topology(wl, cluster)
+                daemon = _make_daemon(wl, None, None, 1.0)
+                traces = _traces_for_seeds(
+                    wl, jnp.arange(iterations, dtype=jnp.int32)
+                )
+                tput, hit_b, *_ = _simulate_batch(
+                    traces.keys,
+                    traces.nodes,
+                    traces.is_read,
+                    traces.natural_node,
+                    cluster=cluster,
+                    scenario=scenario,
+                    daemon_interval=daemon_interval,
+                    h=daemon.h,
+                    expiry=daemon.expiry,
+                    decay=daemon.decay,
+                    period=daemon.period,
+                )
+                samples = np.asarray(tput, dtype=np.float64)
+                hit = float(hit_b[0])
             mean, ci = confidence_interval_99(samples)
-            hit = run_scenario(wl, cluster, scenario, seed=0).hit_rate
             rows.append(
                 {"read_fraction": rf, "throughput": mean, "ci99": ci, "hit_rate": hit}
             )

@@ -1,4 +1,4 @@
-"""YCSB-style workload generation (paper §8.2).
+"""YCSB-style workload generation (paper §8.2) + geo workload presets.
 
 The paper's workloads are permutations of:
   * read ratio: 100% (all reads) → 50% (write-heavy)
@@ -14,6 +14,20 @@ uniformly random other node otherwise. ``affinity = 1/n`` reduces to fully
 uniform sources. This is the knob that makes "bring data closer to the
 frequent source" meaningful, and it is an *assumption the paper leaves
 implicit* (documented in EXPERIMENTS.md §Repro-assumptions).
+
+Beyond the paper's 3-node testbed, two geo workload classes pair with the
+``[N, N]`` RTT topologies in ``cluster.py``:
+
+  * **region-skewed** (``region_weights``): keys' natural sources are drawn
+    from a non-uniform distribution over regions — most traffic originates
+    in a couple of hot regions, as in real WAN deployments.
+  * **diurnal** (``diurnal_shifts``): the hot region *rotates* across the
+    trace ("follow the sun") — at phase p every request source is shifted p
+    nodes around the ring, so placement must chase moving traffic. This is
+    the workload the daemon's beyond-paper count decay exists for.
+
+``generate_trace`` is pure JAX and accepts a traced seed, so the simulator
+can ``vmap`` trace generation across CI iterations.
 """
 
 from __future__ import annotations
@@ -24,7 +38,13 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-__all__ = ["WorkloadConfig", "Trace", "generate_trace"]
+__all__ = [
+    "WorkloadConfig",
+    "Trace",
+    "generate_trace",
+    "wan5_workload",
+    "diurnal_workload",
+]
 
 
 class WorkloadConfig(NamedTuple):
@@ -43,6 +63,13 @@ class WorkloadConfig(NamedTuple):
     # clients are geo-clustered, so the faithful default is 1.0; the
     # affinity-sweep benchmark explores degradation below that.
     affinity: float = 1.0
+    # P(natural node = i) per region; None = uniform over nodes. Length must
+    # equal num_nodes (hashable tuple so the config stays a jit static).
+    region_weights: tuple[float, ...] | None = None
+    # >0: request sources rotate `diurnal_shifts` times across the trace —
+    # requests in phase p originate (natural + p) % n, so the hot region
+    # moves and stale placements decay in value.
+    diurnal_shifts: int = 0
 
 
 class Trace(NamedTuple):
@@ -52,7 +79,12 @@ class Trace(NamedTuple):
     natural_node: Array  # [K] int32 per-key natural source (ground truth)
 
 
-def generate_trace(cfg: WorkloadConfig, seed: int = 0) -> Trace:
+def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
+    if cfg.region_weights is not None and len(cfg.region_weights) != cfg.num_nodes:
+        raise ValueError(
+            f"region_weights has {len(cfg.region_weights)} entries "
+            f"for {cfg.num_nodes} nodes"
+        )
     k_hot, k_key, k_node, k_rw, k_nat, k_other = jax.random.split(
         jax.random.PRNGKey(seed), 6
     )
@@ -71,12 +103,44 @@ def generate_trace(cfg: WorkloadConfig, seed: int = 0) -> Trace:
     else:
         keys = jax.random.randint(k_key, (r,), 0, k).astype(jnp.int32)
 
-    natural = jax.random.randint(k_nat, (k,), 0, n).astype(jnp.int32)
+    if cfg.region_weights is not None:
+        w = jnp.asarray(cfg.region_weights, jnp.float32)
+        natural = jax.random.choice(k_nat, n, (k,), p=w / jnp.sum(w)).astype(
+            jnp.int32
+        )
+    else:
+        natural = jax.random.randint(k_nat, (k,), 0, n).astype(jnp.int32)
     stay = jax.random.bernoulli(k_node, cfg.affinity, (r,))
     # A non-natural request lands uniformly on one of the other n-1 nodes.
     shift = jax.random.randint(k_other, (r,), 1, n)
     nat_of_key = natural[keys]
     nodes = jnp.where(stay, nat_of_key, (nat_of_key + shift) % n).astype(jnp.int32)
 
+    if cfg.diurnal_shifts > 0:
+        # "Follow the sun": phase p (p = 0..shifts-1) rotates every request
+        # source p nodes around the ring.
+        phase = (jnp.arange(r, dtype=jnp.int32) * cfg.diurnal_shifts) // r
+        nodes = ((nodes + phase) % n).astype(jnp.int32)
+
     is_read = jax.random.bernoulli(k_rw, cfg.read_fraction, (r,))
     return Trace(keys=keys, nodes=nodes, is_read=is_read, natural_node=natural)
+
+
+def wan5_workload(**kwargs) -> WorkloadConfig:
+    """5-region WAN preset: skewed traffic whose natural sources concentrate
+    in two hot regions (pairs with ``cluster.wan5_cluster``)."""
+    kwargs.setdefault("num_nodes", 5)
+    kwargs.setdefault("skewed", True)
+    kwargs.setdefault("region_weights", (0.35, 0.25, 0.20, 0.12, 0.08))
+    return WorkloadConfig(**kwargs)
+
+
+def diurnal_workload(**kwargs) -> WorkloadConfig:
+    """Diurnal hot-region preset: traffic concentrated in one region whose
+    identity rotates across the trace (pairs with ``cluster.wan5_cluster``
+    and a decaying placement daemon)."""
+    kwargs.setdefault("num_nodes", 5)
+    kwargs.setdefault("skewed", True)
+    kwargs.setdefault("region_weights", (0.60, 0.10, 0.10, 0.10, 0.10))
+    kwargs.setdefault("diurnal_shifts", 4)
+    return WorkloadConfig(**kwargs)

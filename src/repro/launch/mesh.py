@@ -18,7 +18,19 @@ compression of train/compress.py applies).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5: explicit axis types (Auto matches the older default)
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:  # older jax: Auto is the only behaviour, kwarg absent
+
+    def _axis_kwargs(n: int) -> dict:
+        return {}
+
 
 __all__ = ["make_production_mesh", "make_mesh", "mesh_num_nodes"]
 
@@ -26,12 +38,12 @@ __all__ = ["make_production_mesh", "make_mesh", "mesh_num_nodes"]
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(shape)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (tests use small ones on forced host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(shape)))
 
 
 def mesh_num_nodes(mesh: Mesh, axis: str = "model") -> int:

@@ -122,7 +122,10 @@ def test_layout_field_plumbs_through():
 
     cfg = get_config("qwen3-1.7b")
     # AbstractMesh: rules/dist only read shape + axis names (1-device CI)
-    mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    try:
+        mesh = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    except TypeError:  # older jax: AbstractMesh takes ((name, size), ...)
+        mesh = jax.sharding.AbstractMesh((("data", 2), ("model", 2)))
     tp = param_rules(cfg, mesh)
     assert tp["heads"] == "model" and tp["embed"] == "data"
     fsdp = param_rules(dataclasses.replace(cfg, layout="fsdp"), mesh)

@@ -1,0 +1,162 @@
+"""Geo-topology latency model tests: nearest-replica reads, relay+broadcast
+writes over the [N, N] RTT matrix, and the new WAN / diurnal workloads."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kvsim import (
+    Scenario,
+    WAN5_RTT_MS,
+    diurnal_workload,
+    generate_trace,
+    run_scenario,
+    wan5_cluster,
+    wan5_workload,
+)
+from repro.kvsim.cluster import (
+    ClusterConfig,
+    flat_rtt,
+    nearest_replica_rtt,
+    read_latency,
+    read_latency_geo,
+    write_latency,
+    write_latency_geo,
+)
+
+
+def test_wan5_rtt_matrix_is_symmetric_zero_diag():
+    m = np.asarray(WAN5_RTT_MS)
+    np.testing.assert_array_equal(m, m.T)
+    np.testing.assert_array_equal(np.diag(m), 0.0)
+    assert (m + np.eye(5) > 0).all()
+
+
+def test_nearest_replica_picks_minimum_rtt():
+    rtt = jnp.asarray(
+        [[0.0, 10.0, 50.0], [10.0, 0.0, 30.0], [50.0, 30.0, 0.0]], jnp.float32
+    )
+    # key replicated on {1, 2}; requests from nodes 0, 1, 2
+    replicas = jnp.asarray([[False, True, True]] * 3)
+    nodes = jnp.asarray([0, 1, 2], jnp.int32)
+    got = nearest_replica_rtt(rtt, replicas, nodes)
+    np.testing.assert_allclose(np.asarray(got), [10.0, 0.0, 0.0])
+
+
+def test_nearest_replica_orphan_pays_worst_rtt():
+    rtt = jnp.asarray([[0.0, 40.0], [40.0, 0.0]], jnp.float32)
+    got = nearest_replica_rtt(
+        rtt, jnp.zeros((1, 2), bool), jnp.asarray([0], jnp.int32)
+    )
+    np.testing.assert_allclose(np.asarray(got), [40.0])
+
+
+@pytest.mark.parametrize("local_ms", [0.0, 5.0])
+def test_geo_read_write_collapse_to_flat_model(local_ms):
+    """On the degenerate flat topology the geo functions must equal the
+    paper-verbatim flat functions for every hit/miss and owner combination —
+    including a nonzero intra-node latency on the diagonal."""
+    cfg = ClusterConfig(local_ms=local_ms)
+    rtt = cfg.rtt_matrix()
+    np.testing.assert_array_equal(
+        np.asarray(rtt), np.asarray(flat_rtt(3, 100.0, local_ms))
+    )
+
+    # reads: hit (replica at requester) vs miss
+    replicas = jnp.asarray([[True, False, True], [False, True, False]])
+    nodes = jnp.asarray([0, 2], jnp.int32)
+    hit = replicas[jnp.arange(2), nodes]
+    np.testing.assert_allclose(
+        np.asarray(read_latency_geo(cfg, rtt, replicas, nodes)),
+        np.asarray(read_latency(cfg, hit)),
+    )
+
+    # writes: sole-local / master-owner-only / remote-owner combinations
+    replicas = jnp.asarray(
+        [[False, True, False], [True, False, False], [True, True, False]]
+    )
+    nodes = jnp.asarray([1, 0, 2], jnp.int32)
+    sole = jnp.asarray([True, False, False])
+    owners_not_master = replicas.at[:, cfg.master].set(False)
+    any_remote = jnp.any(owners_not_master, axis=-1)
+    np.testing.assert_allclose(
+        np.asarray(write_latency_geo(cfg, rtt, replicas, nodes, sole)),
+        np.asarray(write_latency(cfg, nodes, sole, any_remote)),
+    )
+
+
+def test_geo_write_pays_relay_plus_farthest_owner():
+    rtt = jnp.asarray(
+        [[0.0, 10.0, 50.0], [10.0, 0.0, 30.0], [50.0, 30.0, 0.0]], jnp.float32
+    )
+    cfg = ClusterConfig(service_ms=1.0, master=0)
+    replicas = jnp.asarray([[True, True, True]])
+    nodes = jnp.asarray([1], jnp.int32)  # requester != master
+    sole = jnp.asarray([False])
+    # relay rtt[1,0]=10 + broadcast max(rtt[0, owners])=50
+    got = write_latency_geo(cfg, rtt, replicas, nodes, sole)
+    np.testing.assert_allclose(np.asarray(got), [1.0 + 10.0 + 50.0])
+
+
+def test_transfer_cost_scales_with_value_bytes():
+    cfg_small = ClusterConfig(transfer_ms_per_kb=2.0, value_bytes=1024.0)
+    cfg_large = cfg_small._replace(value_bytes=4096.0)
+    rtt = cfg_small.rtt_matrix()
+    replicas = jnp.asarray([[False, True, False]])
+    nodes = jnp.asarray([0], jnp.int32)
+    lat_small = float(read_latency_geo(cfg_small, rtt, replicas, nodes)[0])
+    lat_large = float(read_latency_geo(cfg_large, rtt, replicas, nodes)[0])
+    assert lat_large == pytest.approx(lat_small + 2.0 * 3.0)  # +3 KB remote
+    # local reads never pay transfer
+    local = jnp.asarray([[True, False, False]])
+    assert float(read_latency_geo(cfg_large, rtt, local, nodes)[0]) == cfg_large.service_ms
+    # ... even when the diagonal models a nonzero intra-node latency
+    cfg_diag = cfg_large._replace(local_ms=5.0)
+    lat = float(read_latency_geo(cfg_diag, cfg_diag.rtt_matrix(), local, nodes)[0])
+    assert lat == cfg_diag.service_ms + 5.0  # intra-node RTT, no transfer
+
+
+def test_wan5_scenario_ordering():
+    """Paper §10 shape survives real geography: local > optimized > remote."""
+    geo = wan5_cluster()
+    wl = wan5_workload(num_requests=10_000, num_keys=500)
+    loc = run_scenario(wl, geo, Scenario.LOCAL, seed=0)
+    opt = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0)
+    rem = run_scenario(wl, geo, Scenario.REMOTE, seed=0)
+    assert loc.throughput_ops_s > opt.throughput_ops_s > rem.throughput_ops_s
+    assert opt.throughput_ops_s > 3 * rem.throughput_ops_s
+    assert opt.hit_rate > 0.7
+
+
+def test_region_weights_shape_natural_sources():
+    wl = wan5_workload(num_requests=1_000, num_keys=2_000)
+    t = generate_trace(wl, seed=0)
+    counts = np.bincount(np.asarray(t.natural_node), minlength=5) / wl.num_keys
+    # hot regions get more keys than cold ones (0.35/0.25 vs 0.12/0.08)
+    assert counts[0] > counts[3] and counts[1] > counts[4]
+
+
+def test_diurnal_rotation_moves_request_sources():
+    wl = diurnal_workload(num_requests=8_000, num_keys=400)
+    t = generate_trace(wl, seed=0)
+    nodes = np.asarray(t.nodes)
+    q = len(nodes) // wl.diurnal_shifts
+    first, last = nodes[:q], nodes[-q:]
+    # phase p shifts sources by p (mod n): the hot region (weight 0.6 on
+    # region 0) appears at region 0 in phase 0 and region 3 in phase 3
+    h_first = np.bincount(first, minlength=5)
+    h_last = np.bincount(last, minlength=5)
+    assert h_first.argmax() == 0
+    assert h_last.argmax() == 3
+
+
+def test_decay_daemon_chases_diurnal_hot_region():
+    """The beyond-paper count decay exists exactly for this workload: with
+    saturating raw counters the daemon clings to stale placements; decayed
+    counters follow the sun."""
+    geo = wan5_cluster()
+    wl = diurnal_workload(num_requests=20_000)
+    sticky = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0, decay=1.0)
+    chasing = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0, decay=0.5)
+    assert chasing.hit_rate > sticky.hit_rate + 0.1
+    assert chasing.throughput_ops_s > sticky.throughput_ops_s

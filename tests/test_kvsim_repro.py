@@ -55,6 +55,36 @@ def test_daemon_replicates_then_stabilises():
     assert r.replication_moves < wl.num_keys * 5
 
 
+def test_golden_scenario_ordering():
+    """Fig 2/3 golden ordering on a small seeded trace: the idealised LOCAL
+    bound dominates OPTIMIZED, which dominates REMOTE, at every read ratio."""
+    cl = ClusterConfig()
+    for rf in (1.0, 0.75, 0.5):
+        wl = WorkloadConfig(num_requests=10_000, read_fraction=rf, skewed=True)
+        loc = run_scenario(wl, cl, Scenario.LOCAL, seed=0)
+        opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+        rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
+        assert (
+            loc.throughput_ops_s >= opt.throughput_ops_s >= rem.throughput_ops_s
+        ), rf
+        assert loc.hit_rate >= opt.hit_rate >= rem.hit_rate, rf
+
+
+def test_hit_rate_monotone_in_ownership_coefficient():
+    """Lowering H admits more hosts per key (paper eq. 2), so the OPTIMIZED
+    hit rate must not decrease as the ownership coefficient decreases."""
+    cl = ClusterConfig()
+    wl = WorkloadConfig(num_requests=10_000, skewed=True, affinity=0.7)
+    hit_rates = [
+        run_scenario(
+            wl, cl, Scenario.OPTIMIZED, seed=0, ownership_coefficient=h
+        ).hit_rate
+        for h in (1.0 / 3.0, 0.25, 0.15, 0.05)
+    ]
+    for lo_h_hit, hi_h_hit in zip(hit_rates[1:], hit_rates[:-1]):
+        assert lo_h_hit >= hi_h_hit - 1e-6, hit_rates
+
+
 def test_trace_determinism_and_shape():
     wl = WorkloadConfig(num_requests=5_000, skewed=True)
     t1, t2 = generate_trace(wl, seed=3), generate_trace(wl, seed=3)
