@@ -1,14 +1,17 @@
-"""Shared benchmark utilities: timing, CSV/report emission."""
+"""Shared benchmark utilities: timing, CSV/report emission, and persisted
+``BENCH_<name>.json`` result files (the perf trajectory CI archives)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "emit", "banner"]
+__all__ = ["time_fn", "emit", "banner", "write_bench_json"]
 
 
 def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
@@ -31,3 +34,25 @@ def emit(name: str, value, unit: str = "", **extra) -> None:
 
 def banner(title: str) -> None:
     print(f"\n=== {title} ===", flush=True)
+
+
+def write_bench_json(name: str, metrics: dict, **meta) -> str:
+    """Persist one benchmark's results as ``BENCH_<name>.json``.
+
+    metrics: the measured values (throughput, hit-rate, wall-time, ... —
+        anything JSON-serialisable; numpy scalars are coerced via float).
+    meta: run parameters worth keeping next to the numbers (backend,
+        num_requests, ...).
+    Output directory: ``$BENCH_DIR`` if set, else the current directory.
+    Returns the written path (also printed as a ``WROTE,`` line so log
+    scrapers can find the artifacts).
+    """
+    out_dir = os.environ.get("BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {"bench": name, "unix_time": time.time(), **meta, "metrics": metrics}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True, default=float)
+        fh.write("\n")
+    print(f"WROTE,{path}", flush=True)
+    return path

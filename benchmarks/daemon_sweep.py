@@ -1,22 +1,33 @@
 """Placement-daemon analysis throughput — the paper's "constant time per
 key" claim, measured: keys/second for Algorithm 3 sweeps at growing key
-counts, pure-JAX vs the Pallas ownership_sweep kernel (interpret mode on
-CPU, so the Pallas numbers here validate semantics; MXU-free VPU tiling is
-what the kernel buys on real TPU)."""
+counts, through the scored pipeline's pluggable backends (``--backend
+jax|pallas|both``; Pallas runs in interpret mode on CPU, so its numbers
+here validate semantics — MXU-free VPU tiling is what the kernel buys on
+real TPU). Also times the scan-compatible masked step and the capacity
+projection stage, and persists ``BENCH_daemon_sweep.json``."""
 
 from __future__ import annotations
+
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import banner, emit, time_fn
+from benchmarks.common import banner, emit, time_fn, write_bench_json
 from repro.core.metadata import create_store
 from repro.core.placement import masked_step, sweep
-from repro.kernels.ownership_sweep.ops import ownership_sweep
 
 
-def main(sizes=(1_000, 10_000, 100_000, 1_000_000), n_nodes: int = 16) -> None:
-    banner("daemon_sweep: Algorithm 3 analysis throughput")
+def main(
+    sizes=(1_000, 10_000, 100_000, 1_000_000),
+    n_nodes: int = 16,
+    backend: str = "both",
+) -> list[dict]:
+    banner(f"daemon_sweep: Algorithm 3 analysis throughput (backend={backend})")
+    backends = ("jax", "pallas") if backend == "both" else (backend,)
+    rows: list[dict] = []
+    t_start = time.perf_counter()
     for k in sizes:
         ks = jax.random.split(jax.random.PRNGKey(k % 2**31), 3)
         counts = jax.random.randint(ks[0], (k, n_nodes), 0, 100).astype(jnp.int32)
@@ -27,42 +38,89 @@ def main(sizes=(1_000, 10_000, 100_000, 1_000_000), n_nodes: int = 16) -> None:
             live=jnp.ones((k,), bool),
         )
         h = 1.0 / n_nodes
+        obj = jax.random.uniform(ks[2], (k,), minval=64.0, maxval=4096.0)
+        cap = jnp.full((n_nodes,), 0.3 * float(jnp.sum(obj)) / n_nodes)
 
-        t_jax = time_fn(
-            lambda: jax.block_until_ready(sweep(store, h, 0)[0].owners), iters=5
-        )
-        emit("daemon_sweep_purejax", round(k / t_jax / 1e6, 3), "Mkeys/s", keys=k)
+        for bk in backends:
+            t_sweep = time_fn(
+                lambda: sweep(store, h, 0, backend=bk)[0].owners, iters=3
+            )
+            emit(
+                f"daemon_sweep_{bk}",
+                round(k / t_sweep / 1e6, 3),
+                "Mkeys/s",
+                keys=k,
+                note="interpret-mode-on-CPU" if bk == "pallas" else "",
+            )
+            rows.append(
+                {"name": f"sweep_{bk}", "keys": k, "mkeys_per_s": k / t_sweep / 1e6}
+            )
 
-        # Scan-compatible (due-masked) step: the form the fused simulation
-        # engine runs inside lax.scan — masking must not cost throughput.
-        masked = jax.jit(lambda s, due: masked_step(s, 0, due, h=h)[2].hosts)
-        t_masked = time_fn(
-            lambda: jax.block_until_ready(masked(store, jnp.bool_(True))), iters=5
-        )
-        emit(
-            "daemon_sweep_masked_step",
-            round(k / t_masked / 1e6, 3),
-            "Mkeys/s",
-            keys=k,
-        )
+            # Capacity-projected sweep: the full scored pipeline with a
+            # finite per-node byte budget (projection = 3 sorts + cumsum).
+            t_capped = time_fn(
+                lambda: sweep(
+                    store, h, 0, object_bytes=obj, capacity_bytes=cap,
+                    backend=bk,
+                )[0].owners,
+                iters=3,
+            )
+            emit(
+                f"daemon_sweep_{bk}_capacity",
+                round(k / t_capped / 1e6, 3),
+                "Mkeys/s",
+                keys=k,
+            )
+            rows.append(
+                {
+                    "name": f"sweep_{bk}_capacity",
+                    "keys": k,
+                    "mkeys_per_s": k / t_capped / 1e6,
+                }
+            )
 
-        fcounts = counts.astype(jnp.float32)
-        live = jnp.ones((k,), bool)
-        last = jnp.zeros((k,), jnp.int32)
-        t_pl = time_fn(
-            lambda: jax.block_until_ready(
-                ownership_sweep(fcounts, hosts, live, last, 0, h=h)[0]
-            ),
-            iters=3,
-        )
-        emit(
-            "daemon_sweep_pallas_interp",
-            round(k / t_pl / 1e6, 3),
-            "Mkeys/s",
-            keys=k,
-            note="interpret-mode-on-CPU",
-        )
+            # Scan-compatible (due-masked) step: the form the fused
+            # simulation engine runs inside lax.scan — masking must not
+            # cost throughput (measured per backend, like the sweep).
+            masked = jax.jit(
+                lambda s, due: masked_step(s, 0, due, h=h, backend=bk)[1].hosts
+            )
+            t_masked = time_fn(
+                lambda: masked(store, jnp.bool_(True)), iters=5
+            )
+            emit(
+                f"daemon_sweep_masked_step_{bk}",
+                round(k / t_masked / 1e6, 3),
+                "Mkeys/s",
+                keys=k,
+            )
+            rows.append(
+                {
+                    "name": f"masked_step_{bk}",
+                    "keys": k,
+                    "mkeys_per_s": k / t_masked / 1e6,
+                }
+            )
+
+    write_bench_json(
+        "daemon_sweep",
+        {"rows": rows, "wall_time_s": time.perf_counter() - t_start},
+        backend=backend,
+        n_nodes=n_nodes,
+    )
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--backend", choices=("jax", "pallas", "both"), default="both",
+        help="sweep backend(s) to measure",
+    )
+    ap.add_argument(
+        "--sizes", type=int, nargs="+",
+        default=[1_000, 10_000, 100_000, 1_000_000],
+    )
+    ap.add_argument("--nodes", type=int, default=16)
+    args = ap.parse_args()
+    main(sizes=tuple(args.sizes), n_nodes=args.nodes, backend=args.backend)

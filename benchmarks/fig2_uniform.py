@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import banner, emit
+from benchmarks.common import banner, emit, write_bench_json
 from repro.kvsim import run_experiment
 
 
@@ -26,6 +26,7 @@ def main(
     compare_engines: bool = False,
 ) -> dict:
     banner("fig2: uniform object access distribution (paper Figure 2)")
+    t_start = time.perf_counter()
     res = run_experiment(
         read_fractions=(1.0, 0.9, 0.75, 0.5),
         skewed=False,
@@ -33,6 +34,7 @@ def main(
         num_requests=num_requests,
         engine=engine,
     )
+    wall_s = time.perf_counter() - t_start
     for scenario, rows in res["scenarios"].items():
         for row in rows:
             emit(
@@ -56,6 +58,14 @@ def main(
             read_fraction=rf,
             frac_of_local=round(opt[rf] / loc[rf], 3),
         )
+
+    write_bench_json(
+        "fig2_uniform",
+        {"scenarios": res["scenarios"], "wall_time_s": wall_s},
+        engine=engine,
+        iterations=iterations,
+        num_requests=num_requests,
+    )
 
     if compare_engines:
         banner("fig2b: scan-fusion speedup over the reference chunk loop")

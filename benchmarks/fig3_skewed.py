@@ -8,9 +8,11 @@ nodes (the paper's DNS-affinity assumption weakening).
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import banner, emit
+from benchmarks.common import banner, emit, write_bench_json
 from repro.kvsim import (
     ClusterConfig,
     Scenario,
@@ -25,6 +27,7 @@ from repro.kvsim import (
 
 def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
     banner("fig3: skewed (zipfian 90/10) object access (paper Figure 3)")
+    t_start = time.perf_counter()
     res = run_experiment(
         read_fractions=(1.0, 0.9, 0.75, 0.5),
         skewed=True,
@@ -96,6 +99,15 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
             hit_rate=round(r.hit_rate, 4),
             repl_moves=int(r.replication_moves),
         )
+    write_bench_json(
+        "fig3_skewed",
+        {
+            "scenarios": res["scenarios"],
+            "wall_time_s": time.perf_counter() - t_start,
+        },
+        iterations=iterations,
+        num_requests=num_requests,
+    )
     return res
 
 

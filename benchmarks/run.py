@@ -5,13 +5,17 @@ One module per paper table/figure + the beyond-paper integration benches:
   fig2_uniform      paper Figure 2 (uniform access, Local/Remote/Optimized)
   fig3_skewed       paper Figure 3 (zipfian 90/10) + affinity sweep
   daemon_sweep      Algorithm 3 analysis throughput (pure JAX vs Pallas)
+  capacity_sweep    hit-rate vs per-node replica budget (beyond paper)
   moe_placement     hot-expert replica cache on the reduced MoE
   hot_embedding     hot-row cache hit rates + HBM bytes saved
   serving_sessions  session-cache migration vs static placement
   roofline          aggregate the dry-run sweep into the §Roofline table
 
 Every line of output in ``RESULT,name,value,unit,k=v`` form is machine
-collectable; EXPERIMENTS.md quotes them directly.
+collectable; EXPERIMENTS.md quotes them directly. The figure / sweep
+benches additionally persist ``BENCH_<name>.json`` (throughput, hit-rate,
+wall-time) — the perf-trajectory files CI uploads as artifacts; set
+``$BENCH_DIR`` to redirect them.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ MODULES = [
     "fig2_uniform",
     "fig3_skewed",
     "daemon_sweep",
+    "capacity_sweep",
     "moe_placement",
     "hot_embedding",
     "serving_sessions",
@@ -34,6 +39,7 @@ MODULES = [
 FAST_KWARGS = {
     "fig2_uniform": {"iterations": 3, "num_requests": 50_000},
     "fig3_skewed": {"iterations": 3, "num_requests": 50_000},
+    "capacity_sweep": {"num_requests": 20_000},
 }
 
 

@@ -10,7 +10,13 @@ The paper's contribution as a composable library:
   repartition — plan → fused-collective enforcement with double buffering
 """
 
-from repro.core.costmodel import TPU_V5E, HardwareModel, budget_plan, replication_gain
+from repro.core.costmodel import (
+    TPU_V5E,
+    HardwareModel,
+    budget_plan,
+    project_capacity,
+    replication_gain,
+)
 from repro.core.metadata import (
     MetadataStore,
     create_store,
@@ -25,7 +31,14 @@ from repro.core.ownership import (
     ownership_fraction,
     validate_coefficient,
 )
-from repro.core.placement import PlacementDaemon, PlacementPlan, apply_plan, sweep
+from repro.core.placement import (
+    PlacementDaemon,
+    PlacementPlan,
+    SweepStats,
+    apply_plan,
+    masked_step,
+    sweep,
+)
 from repro.core.repartition import (
     CommitState,
     Moves,
@@ -46,6 +59,7 @@ __all__ = [
     "TPU_V5E",
     "HardwareModel",
     "budget_plan",
+    "project_capacity",
     "replication_gain",
     "MetadataStore",
     "create_store",
@@ -59,7 +73,9 @@ __all__ = [
     "validate_coefficient",
     "PlacementDaemon",
     "PlacementPlan",
+    "SweepStats",
     "apply_plan",
+    "masked_step",
     "sweep",
     "CommitState",
     "Moves",

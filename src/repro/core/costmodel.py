@@ -9,21 +9,55 @@ paper's threshold rule we gate replication with an explicit budget:
     gain(O, x)  = traffic(O, x) × bytes_saved_per_access × steps_per_sweep
     cost(O, x)  = object_bytes(O)        (one ICI broadcast + HBM residency)
 
-and we keep, per node, the highest-gain adds whose cumulative size fits the
-node's replica budget. With an infinite budget this reduces exactly to the
-paper's Algorithm 3 (the property tests assert this).
+and we keep, per node, the highest-score replicas whose cumulative size fits
+the node's replica-byte budget (:func:`project_capacity` — the *capacity
+projection* stage of the placement pipeline). With an infinite budget this
+reduces bit-exactly to the paper's Algorithm 3 (pinned by property tests).
+
+Admission rule (per node, scan/jit-compatible — no data-dependent shapes):
+
+  1. rank every owned candidate by ownership fraction ``f`` descending;
+     at equal ``f`` a *held* replica beats a new add (less churn), further
+     ties broken by object id (deterministic);
+  2. admit candidates while the running byte total fits the node budget —
+     so the hottest adds that fit are admitted and, when the node is over
+     budget, its coldest held replicas are evicted;
+  3. everything else is rejected: held-but-rejected replicas are *capacity
+     evictions*, add-but-rejected candidates simply never materialise.
+
+Freeing memory (threshold drops, expiry) is always allowed — the projection
+only ever shrinks a plan's replica set, never grows it.
+
+Last-replica semantics: under byte pressure the projection may evict a
+key's *last* replica — the budget outranks the eligibility layer's
+starvation guard by design. The replica set is a bounded cache over an
+implicit backing store, not the sole copy of the data: the simulator
+charges replica-less reads the topology's worst RTT (the backing-store
+fetch — in the paper's flat testbed that is exactly ``remote_ms``, i.e. an
+ordinary miss), and a key whose access counts persist is re-admitted by a
+later sweep as soon as it ranks above the budget line again.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import TYPE_CHECKING, NamedTuple
 
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.placement import PlacementPlan
+from repro.core.ownership import ownership_fraction
 
-__all__ = ["HardwareModel", "TPU_V5E", "replication_gain", "budget_plan"]
+if TYPE_CHECKING:  # typing only — placement imports this module at runtime
+    from repro.core.placement import PlacementPlan
+
+__all__ = [
+    "HardwareModel",
+    "TPU_V5E",
+    "replication_gain",
+    "project_capacity",
+    "budget_plan",
+]
 
 
 class HardwareModel(NamedTuple):
@@ -55,32 +89,79 @@ def replication_gain(
     return saved * steps_per_sweep - move
 
 
+def project_capacity(
+    owners: Array,  # [K, N] bool — post-eligibility replica set
+    hosts: Array,  # [K, N] bool — replica set *before* this sweep
+    f: Array,  # [K, N] f32 — ownership fractions (the score)
+    object_bytes: Array,  # [K] f32 per-key payload size
+    capacity_bytes: Array | float,  # [N] (or scalar) per-node byte budget
+) -> tuple[Array, Array, Array]:
+    """Capacity projection: trim ``owners`` to fit each node's byte budget.
+
+    Returns ``(projected_owners, evicted, rejected)`` — all ``[K, N]`` bool:
+    ``evicted`` are held replicas (``owners & hosts``) that no longer fit,
+    ``rejected`` are planned adds that were never admitted.
+
+    Pure fixed-shape JAX (three stable sorts + a cumsum per node), so it runs
+    unchanged inside ``jax.lax.scan`` / ``vmap`` bodies and as an XLA
+    post-pass on the Pallas kernel's outputs. ``capacity_bytes = inf`` is a
+    bit-exact identity: every finite cumulative sum fits, so the admit mask
+    equals ``owners``.
+    """
+    k, n = owners.shape
+    held = owners & hosts
+    obj = jnp.broadcast_to(
+        jnp.asarray(object_bytes, jnp.float32).reshape(k, 1), (k, n)
+    )
+    budget = jnp.broadcast_to(jnp.asarray(capacity_bytes, jnp.float32), (n,))
+
+    # Per-node lexicographic order via a chain of stable sorts, least- to
+    # most-significant key; the initial id-ordered permutation supplies the
+    # final tiebreak. Most significant: owned candidates first, then f
+    # descending, then held-before-add.
+    perm = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[:, None], (k, n))
+    for key in ((~held).astype(jnp.float32), -f, (~owners).astype(jnp.float32)):
+        kp = jnp.take_along_axis(key, perm, axis=0)
+        perm = jnp.take_along_axis(
+            perm, jnp.argsort(kp, axis=0, stable=True), axis=0
+        )
+
+    owned_sorted = jnp.take_along_axis(owners, perm, axis=0)
+    size_sorted = jnp.where(owned_sorted, jnp.take_along_axis(obj, perm, axis=0), 0.0)
+    cum = jnp.cumsum(size_sorted, axis=0)
+    admit_sorted = owned_sorted & (cum <= budget[None, :])
+
+    admit = jnp.zeros_like(admit_sorted)
+    admit = admit.at[perm, jnp.arange(n, dtype=jnp.int32)[None, :]].set(admit_sorted)
+    projected = owners & admit
+    return projected, held & ~admit, (owners & ~hosts) & ~admit
+
+
 def budget_plan(
-    plan: PlacementPlan,
+    plan: "PlacementPlan",
     counts: Array,  # [K, N]
     object_bytes: Array,  # [K]
-    node_budget_bytes: float,
-) -> PlacementPlan:
-    """Trim a plan's adds to fit each node's replica-byte budget, keeping the
-    hottest candidates (by access fraction) first. Drops/expiry untouched —
-    freeing memory is always allowed. Infinite budget => identity.
+    node_budget_bytes: Array | float,
+) -> "PlacementPlan":
+    """Project a plan onto per-node replica-byte budgets (plan-level wrapper
+    around :func:`project_capacity`; scores are ownership fractions of
+    ``counts``). The hottest candidates are kept first; when a node is over
+    budget its coldest held replicas are evicted (``to_drop`` grows and the
+    evictions are recorded in ``capacity_evicted``). Infinite budget =>
+    identity.
     """
-    if node_budget_bytes == float("inf"):
+    if isinstance(node_budget_bytes, (int, float)) and math.isinf(
+        node_budget_bytes
+    ):
         return plan
-    f = counts.astype(jnp.float32)
-    f = f / jnp.maximum(jnp.sum(f, axis=-1, keepdims=True), 1.0)
-    score = jnp.where(plan.to_add, f, -1.0)  # [K, N]
-    # Per node: sort candidate adds by score desc, admit while cumsum fits.
-    order = jnp.argsort(-score, axis=0)  # [K, N]
-    sz = jnp.take_along_axis(
-        jnp.broadcast_to(object_bytes[:, None], score.shape), order, axis=0
-    ).astype(jnp.float32)
-    is_cand = jnp.take_along_axis(score, order, axis=0) >= 0.0
-    cum = jnp.cumsum(jnp.where(is_cand, sz, 0.0), axis=0)
-    admit_sorted = is_cand & (cum <= node_budget_bytes)
-    # Scatter the admit decision back to key order.
-    admit = jnp.zeros_like(admit_sorted)
-    admit = admit.at[order, jnp.arange(score.shape[1])[None, :]].set(admit_sorted)
-    to_add = plan.to_add & admit
-    owners = (plan.owners & ~plan.to_add) | to_add
-    return plan._replace(owners=owners, to_add=to_add)
+    f = ownership_fraction(counts)
+    hosts = (plan.owners & ~plan.to_add) | plan.to_drop  # pre-sweep replica set
+    projected, evicted, _ = project_capacity(
+        plan.owners, hosts, f, object_bytes, node_budget_bytes
+    )
+    return plan._replace(
+        owners=projected,
+        to_add=projected & ~hosts,
+        to_drop=hosts & ~projected,
+        capacity_evicted=evicted,
+    )

@@ -27,6 +27,7 @@ __all__ = [
     "max_coefficient",
     "ownership_fraction",
     "eligible_hosts",
+    "eligible_from_fractions",
 ]
 
 
@@ -65,9 +66,20 @@ def eligible_hosts(counts: Array, h: Array | float) -> Array:
     A numeric starvation guard mirrors eq. 3's intent: if (through a
     misconfigured H or float round-off) no node qualifies for an object that
     *has* traffic, the argmax node is forced eligible so the object never
-    becomes unreachable.
+    becomes unreachable. (The guard governs *eligibility* only; a finite
+    replica-byte budget downstream may still evict the last replica — see
+    the last-replica note in ``costmodel.py``.)
     """
-    f = ownership_fraction(counts)
+    return eligible_from_fractions(ownership_fraction(counts), counts, h)
+
+
+def eligible_from_fractions(f: Array, counts: Array, h: Array | float) -> Array:
+    """Eligibility stage of the placement pipeline, from *precomputed*
+    fractions (eq. 1 output). Splitting this from :func:`eligible_hosts`
+    lets backends that already produce ``f`` (the Pallas ownership-sweep
+    kernel) feed the scoring/eligibility stages without recomputing it.
+    Semantics are identical to ``eligible_hosts(counts, h)``.
+    """
     mask = f >= jnp.asarray(h, dtype=f.dtype)
     total = jnp.sum(counts, axis=-1, keepdims=True)
     has_traffic = jnp.squeeze(total > 0, axis=-1)

@@ -1,4 +1,4 @@
-"""Placement daemon — the paper's Algorithm 3, vectorised.
+"""Placement daemon — the paper's Algorithm 3 as a scored placement pipeline.
 
 The paper's daemon loops over all keys, and per key:
 
@@ -9,13 +9,35 @@ The paper's daemon loops over all keys, and per key:
                  obsolete_hosts = current_hosts ∩ delete_hosts     (drop)
     4. enforce:  update metadata + move data
 
-Here steps 1–3 are a single fused sweep over the ``[K, N]`` metadata arrays
-(`sweep`, pure JAX — a Pallas kernel with identical semantics lives in
-``repro.kernels.ownership_sweep`` for the TPU hot path), producing a
-:class:`PlacementPlan`. Step 4 is split out (`apply_plan`) so the enforcement
-can run *offline / non-blocking* exactly as the paper requires: the serving
-or training step keeps using the old replica map until the plan is committed
-at a step boundary (see ``repro/core/repartition.py`` double-buffering).
+Here steps 1–3 are a staged pipeline over the ``[K, N]`` metadata arrays:
+
+    fractions ──► eligibility ──► capacity projection ──► plan
+      (eq. 1)      (eq. 2 + guard      (costmodel.project_capacity:
+                    + expiry)           per-node replica-byte budgets)
+
+with a pluggable *sweep backend* for the dominant ``[K, N]`` pass:
+
+    backend="jax"     fractions + eligibility in pure jnp (XLA)
+    backend="pallas"  the ``repro.kernels.ownership_sweep`` TPU kernel; its
+                      ``f`` output feeds the projection's scoring directly
+                      (no recompute), and the capacity projection runs as an
+                      XLA post-pass on the kernel outputs.
+
+The projection stage is skipped entirely when ``capacity_bytes is None``
+(compiled away — bit-exact Algorithm 3), and is a bit-exact identity at an
+infinite budget (pinned by property tests). Under byte pressure it may
+evict a key's *last* replica — the budget outranks the eligibility layer's
+starvation guard; see the last-replica note in ``costmodel.py`` (replicas
+are a bounded cache over a backing store, and replica-less reads pay the
+topology's worst RTT in the simulator). Step 4 is split out
+(`apply_plan`) so the enforcement can run *offline / non-blocking* exactly
+as the paper requires: the serving or training step keeps using the old
+replica map until the plan is committed at a step boundary (see
+``repro/core/repartition.py`` double-buffering).
+
+Expiry convention (unified across backends): ``expiry in (None, 0)`` means
+*disabled*; a positive value purges keys untouched for more than ``expiry``
+ticks. ``PlacementDaemon`` validates this at construction.
 """
 
 from __future__ import annotations
@@ -27,10 +49,25 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
+from repro.core.costmodel import project_capacity
 from repro.core.metadata import MetadataStore
-from repro.core.ownership import eligible_hosts, validate_coefficient
+from repro.core.ownership import (
+    eligible_from_fractions,
+    ownership_fraction,
+    validate_coefficient,
+)
 
-__all__ = ["PlacementPlan", "sweep", "apply_plan", "masked_step", "PlacementDaemon"]
+__all__ = [
+    "PlacementPlan",
+    "SweepStats",
+    "SWEEP_BACKENDS",
+    "sweep",
+    "apply_plan",
+    "masked_step",
+    "PlacementDaemon",
+]
+
+SWEEP_BACKENDS = ("jax", "pallas")
 
 
 class PlacementPlan(NamedTuple):
@@ -40,6 +77,9 @@ class PlacementPlan(NamedTuple):
     to_add: Array  # [K, N] bool  -- new_hosts      = owners - current
     to_drop: Array  # [K, N] bool -- obsolete_hosts = current ∩ delete
     expired: Array  # [K]   bool  -- keys past expiry (deleted everywhere)
+    # Scored-pipeline extras (None on hand-built plans):
+    f: Array | None = None  # [K, N] f32 ownership fractions (the score)
+    capacity_evicted: Array | None = None  # [K, N] bool held replicas evicted
 
     def replication_bytes(self, object_bytes: Array | float) -> Array:
         """Bytes the enforcement phase must move (adds × object size)."""
@@ -47,40 +87,101 @@ class PlacementPlan(NamedTuple):
         return jnp.sum(per_key * object_bytes)
 
 
-@partial(jax.jit, static_argnames=("expiry",))
+class SweepStats(NamedTuple):
+    """Scalar move accounting for one (possibly masked) daemon step."""
+
+    adds: Array  # f32 — replicas created
+    drops: Array  # f32 — replicas dropped (threshold + expiry + capacity)
+    expiry_evictions: Array  # f32 — drops attributable to key expiry
+    capacity_evictions: Array  # f32 — held replicas evicted by projection
+
+
+def _expiry_enabled(expiry: int | None) -> bool:
+    """Unified convention: ``None`` and ``0`` both disable expiry."""
+    return expiry is not None and expiry > 0
+
+
+@partial(jax.jit, static_argnames=("expiry", "backend"))
 def sweep(
     store: MetadataStore,
     h: Array | float,
     now: Array | int,
     expiry: int | None = None,
+    *,
+    object_bytes: Array | None = None,
+    capacity_bytes: Array | None = None,
+    backend: str = "jax",
 ) -> tuple[PlacementPlan, MetadataStore]:
     """One full-cluster analysis pass. Returns the plan and the metadata
     store with the plan already reflected (hosts/live updated, counts of
     expired keys cleared) — the *data* movement is the caller's step 4.
 
     h:      ownership coefficient (validated against N by the daemon).
-    expiry: ticks after which an untouched key is purged; ``None`` disables
-            (static so the expiry branch compiles away when unused).
+    expiry: ticks after which an untouched key is purged; ``None`` or ``0``
+            disables (static so the expiry branch compiles away when unused).
+    object_bytes:   ``[K]`` per-key payload size (defaults to 1.0 each —
+            budgets then count replicas), used by the projection stage.
+    capacity_bytes: ``[N]`` (or scalar) per-node replica-byte budget; ``None``
+            skips the projection stage entirely (bit-exact Algorithm 3), and
+            an infinite budget is a bit-exact identity.
+    backend: "jax" (pure-XLA) or "pallas" (``kernels.ownership_sweep``; the
+            kernel's ``f`` output feeds the projection scoring directly).
     """
     counts, hosts, live = store.access_counts, store.hosts, store.live
+    k = store.num_keys
 
-    eligible = eligible_hosts(counts, h)  # eq. 2 over all K keys at once
-    touched = jnp.sum(counts, axis=-1) > 0
-    # Keys with no traffic keep their current placement (no churn on silence).
-    owners = jnp.where(touched[:, None], eligible, hosts)
-    owners = owners & live[:, None]
+    if backend == "pallas":
+        from repro.kernels.ownership_sweep.ops import ownership_sweep
 
-    if expiry is not None:
-        expired = live & ((jnp.asarray(now, jnp.int32) - store.last_access) > expiry)
+        owners, _, _, expired, f = ownership_sweep(
+            counts,
+            hosts,
+            live,
+            store.last_access,
+            now,
+            h=h,
+            expiry=expiry if _expiry_enabled(expiry) else 0,
+        )
+    elif backend == "jax":
+        f = ownership_fraction(counts)  # stage 1: fractions (eq. 1)
+        eligible = eligible_from_fractions(f, counts, h)  # stage 2: eq. 2
+        touched = jnp.sum(counts, axis=-1) > 0
+        # Keys with no traffic keep their current placement (no churn on silence).
+        owners = jnp.where(touched[:, None], eligible, hosts)
+        owners = owners & live[:, None]
+
+        if _expiry_enabled(expiry):
+            expired = live & (
+                (jnp.asarray(now, jnp.int32) - store.last_access) > expiry
+            )
+        else:
+            expired = jnp.zeros_like(live)
+        owners = owners & ~expired[:, None]
     else:
-        expired = jnp.zeros_like(live)
-    owners = owners & ~expired[:, None]
+        raise ValueError(
+            f"unknown sweep backend {backend!r}; expected one of {SWEEP_BACKENDS}"
+        )
+
+    # Stage 3: capacity projection (per-node replica-byte budgets).
+    if capacity_bytes is None:
+        evicted = jnp.zeros_like(owners)
+    else:
+        ob = (
+            jnp.ones((k,), jnp.float32)
+            if object_bytes is None
+            else jnp.asarray(object_bytes, jnp.float32)
+        )
+        owners, evicted, _ = project_capacity(
+            owners, hosts, f, ob, capacity_bytes
+        )
 
     plan = PlacementPlan(
         owners=owners,
         to_add=owners & ~hosts,
         to_drop=hosts & ~owners,
         expired=expired,
+        f=f,
+        capacity_evicted=evicted,
     )
     new_store = store._replace(
         hosts=owners,
@@ -124,7 +225,10 @@ def masked_step(
     h: Array | float,
     expiry: int | None = None,
     decay: float = 1.0,
-) -> tuple[Array, Array, MetadataStore]:
+    object_bytes: Array | None = None,
+    capacity_bytes: Array | None = None,
+    backend: str = "jax",
+) -> tuple[SweepStats, MetadataStore]:
     """Scan-compatible daemon step: fixed-shape replacement for the host-side
     ``if daemon.due(tick): daemon.step(...)`` pattern.
 
@@ -132,27 +236,41 @@ def masked_step(
     bool) — off ticks return the store unchanged, so the step can live inside
     ``jax.lax.scan`` / ``vmap`` bodies with no data-dependent control flow.
 
-    Returns ``(adds, drops, store)``: replicas created / dropped this tick
-    (0.0 when not due) and the conditionally-updated metadata store.
+    Returns ``(stats, store)``: a :class:`SweepStats` of replicas created /
+    dropped / evicted this tick (all 0.0 when not due) and the
+    conditionally-updated metadata store.
     """
-    plan, swept = sweep(store, h, now, expiry)
+    plan, swept = sweep(
+        store,
+        h,
+        now,
+        expiry,
+        object_bytes=object_bytes,
+        capacity_bytes=capacity_bytes,
+        backend=backend,
+    )
     swept = _decay_counts(swept, decay)
     new_store = jax.tree_util.tree_map(
         lambda a, b: jnp.where(due, a, b), swept, store
     )
-    adds = jnp.where(due, jnp.sum(plan.to_add).astype(jnp.float32), 0.0)
-    drops = jnp.where(due, jnp.sum(plan.to_drop).astype(jnp.float32), 0.0)
-    return adds, drops, new_store
+    gate = lambda v: jnp.where(due, v.astype(jnp.float32), 0.0)
+    stats = SweepStats(
+        adds=gate(jnp.sum(plan.to_add)),
+        drops=gate(jnp.sum(plan.to_drop)),
+        expiry_evictions=gate(jnp.sum(plan.to_drop & plan.expired[:, None])),
+        capacity_evictions=gate(jnp.sum(plan.capacity_evicted)),
+    )
+    return stats, new_store
 
 
 class PlacementDaemon:
     """Periodic offline repartitioner (paper §5.1 'Placement Daemon').
 
     Host-side driver: holds H (validated against the cluster size), the decay
-    and expiry policy, and runs `sweep` every ``period`` ticks. It is
-    deliberately *stateless between sweeps* apart from the metadata store it
-    is handed — mirroring the paper's daemon, which only reads the metadata
-    layer and enforces changes.
+    and expiry policy, the sweep backend, and runs `sweep` every ``period``
+    ticks. It is deliberately *stateless between sweeps* apart from the
+    metadata store it is handed — mirroring the paper's daemon, which only
+    reads the metadata layer and enforces changes.
     """
 
     def __init__(
@@ -162,31 +280,70 @@ class PlacementDaemon:
         expiry: int | None = None,
         period: int = 1,
         decay: float = 1.0,
+        backend: str = "jax",
     ) -> None:
         if h is None:
             h = 1.0 / num_nodes
         validate_coefficient(h, num_nodes)
         if not (0.0 < decay <= 1.0):
             raise ValueError(f"decay must be in (0, 1], got {decay}")
+        if expiry is not None and expiry < 0:
+            raise ValueError(
+                f"expiry must be None or a non-negative tick count, got "
+                f"{expiry} (0 disables expiry, on every backend)"
+            )
+        if backend not in SWEEP_BACKENDS:
+            raise ValueError(
+                f"unknown sweep backend {backend!r}; expected one of "
+                f"{SWEEP_BACKENDS}"
+            )
         self.num_nodes = num_nodes
         self.h = h
         self.expiry = expiry
         self.period = period
         self.decay = decay
+        self.backend = backend
 
     def due(self, tick: int) -> bool:
         return tick % self.period == 0
 
     def step(
-        self, store: MetadataStore, now: Array | int
+        self,
+        store: MetadataStore,
+        now: Array | int,
+        *,
+        object_bytes: Array | None = None,
+        capacity_bytes: Array | None = None,
     ) -> tuple[PlacementPlan, MetadataStore]:
-        plan, store = sweep(store, self.h, now, self.expiry)
+        plan, store = sweep(
+            store,
+            self.h,
+            now,
+            self.expiry,
+            object_bytes=object_bytes,
+            capacity_bytes=capacity_bytes,
+            backend=self.backend,
+        )
         return plan, _decay_counts(store, self.decay)
 
     def masked_step(
-        self, store: MetadataStore, now: Array | int, due: Array
-    ) -> tuple[Array, Array, MetadataStore]:
+        self,
+        store: MetadataStore,
+        now: Array | int,
+        due: Array,
+        *,
+        object_bytes: Array | None = None,
+        capacity_bytes: Array | None = None,
+    ) -> tuple[SweepStats, MetadataStore]:
         """Scan-compatible `step`: commit only where ``due`` (traced bool)."""
         return masked_step(
-            store, now, due, h=self.h, expiry=self.expiry, decay=self.decay
+            store,
+            now,
+            due,
+            h=self.h,
+            expiry=self.expiry,
+            decay=self.decay,
+            object_bytes=object_bytes,
+            capacity_bytes=capacity_bytes,
+            backend=self.backend,
         )

@@ -11,8 +11,12 @@ Two properties the paper requires are preserved:
   * **non-blocking** — the plan is computed offline (sweep) and committed at
     a step boundary; until commit, consumers read the previous replica map
     (double buffering — ``CommitState`` below).
-  * **bounded memory** — the replica cache has a fixed slot count; the cost
-    model (budget_plan) guarantees the plan fits before commit.
+  * **bounded memory** — the replica cache has a fixed slot count, and the
+    plans this layer consumes are *post-projection*: the sweep's capacity
+    stage (costmodel.project_capacity) has already evicted what doesn't fit
+    a node's byte budget, so ``plan.owners`` never schedules an evicted
+    replica into a slot and ``publish_ids`` never carries a rejected add.
+    ``Moves.slot_bytes`` reports the resulting per-rank cache residency.
 
 The functions are written to be used either inside ``shard_map`` (axis_name
 set, real collectives) or host-side in the simulator (axis_name None).
@@ -70,6 +74,7 @@ class Moves(NamedTuple):
     publish_ids: Array  # [M] int32 object ids this sweep publishes (-1 pad)
     slot_ids: Array  # [N, C] int32 desired cache contents per rank (-1 empty)
     moved_bytes: Array  # [] float32 total bytes the fused all-gather carries
+    slot_bytes: Array  # [N] f32 bytes resident per rank's cache post-move
 
 
 def plan_moves(
@@ -84,14 +89,17 @@ def plan_moves(
 
     Replicas beyond the home shard live in caches; the desired cache contents
     of rank ``n`` are the objects with ``owners[k, n] & (home[k] != n)``,
-    truncated to capacity (the budgeted plan already fits). With ``priority``
-    (e.g. total access counts) the truncation keeps the hottest objects
-    first, ties broken by object id; without it the order is object id —
-    deterministic either way. Newly published objects are those appearing in
-    any rank's adds.
+    truncated to capacity (a capacity-projected plan already fits — the
+    sweep's projection stage evicted anything over the node's byte budget,
+    so slot truncation is a backstop, not the budget mechanism). With
+    ``priority`` (e.g. total access counts) the truncation keeps the hottest
+    objects first, ties broken by object id; without it the order is object
+    id — deterministic either way. Newly published objects are those
+    appearing in any rank's adds.
     """
     k, n = plan.owners.shape
     arange_k = jnp.arange(k, dtype=jnp.int32)
+    obj_k = jnp.broadcast_to(jnp.asarray(object_bytes, jnp.float32), (k,))
 
     if priority is None:
         rank = arange_k  # id order
@@ -114,10 +122,16 @@ def plan_moves(
     pub = jnp.sort(pub)[:max_moves]
     publish_ids = jnp.where(pub < k, pub, -1).astype(jnp.int32)
 
-    nbytes = jnp.sum(
-        jnp.where(added_any, jnp.broadcast_to(jnp.asarray(object_bytes, jnp.float32), (k,)), 0.0)
+    nbytes = jnp.sum(jnp.where(added_any, obj_k, 0.0))
+    slot_bytes = jnp.sum(
+        jnp.where(slot_ids >= 0, obj_k[jnp.clip(slot_ids, 0)], 0.0), axis=-1
     )
-    return Moves(publish_ids=publish_ids, slot_ids=slot_ids, moved_bytes=nbytes)
+    return Moves(
+        publish_ids=publish_ids,
+        slot_ids=slot_ids,
+        moved_bytes=nbytes,
+        slot_bytes=slot_bytes,
+    )
 
 
 def publish_and_fill(

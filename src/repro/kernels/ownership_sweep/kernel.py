@@ -7,9 +7,18 @@ owner/add/drop deltas. All VPU work — no matmuls — so the kernel is
 memory-bound by design and the tile size just has to keep the six [TK, N]
 planes (~6·TK·N·4B) under VMEM; TK = 2048 at N ≤ 64 is ≈ 3 MB.
 
+The ownership coefficient H arrives as a scalar *input* (like ``now``)
+rather than a compile-time constant, so jitted pipelines can trace it —
+``repro.core.placement.sweep(backend="pallas")`` routes through here with a
+traced H. ``expiry`` stays static (``<= 0`` disables — the unified
+convention; the branch compiles away when unused). ``interpret`` defaults to
+auto-detection: interpret mode off-TPU, compiled Mosaic on TPU.
+
 The daemon sweeps millions of keys per pass; this kernel is why the paper's
 "constant time per key, no graph traversal" claim survives contact with a
-TPU: one HBM read + one write per metadata byte.
+TPU: one HBM read + one write per metadata byte. The ``f`` output plane
+feeds the cost model's capacity projection directly (scored placement
+pipeline), avoiding a second [K, N] pass.
 """
 
 from __future__ import annotations
@@ -19,7 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import compiler_params, pl
+from repro.kernels.common import compiler_params, interpret_default, pl
 
 __all__ = ["ownership_sweep_kernel", "ownership_sweep_call"]
 
@@ -32,13 +41,13 @@ def ownership_sweep_kernel(
     live_ref,  # [TK, 1] i8
     last_ref,  # [TK, 1] i32
     now_ref,  # [1, 1] i32
+    h_ref,  # [1, 1] f32 — ownership coefficient H
     owners_ref,  # out [TK, N] i8
     add_ref,  # out [TK, N] i8
     drop_ref,  # out [TK, N] i8
     expired_ref,  # out [TK, 1] i8
     f_ref,  # out [TK, N] f32 — ownership fractions (cost-model scoring)
     *,
-    h: float,
     expiry: int,
     n: int,
     tk: int,
@@ -46,6 +55,7 @@ def ownership_sweep_kernel(
     counts = counts_ref[...]
     hosts = hosts_ref[...] != 0
     live = live_ref[...] != 0  # [TK, 1]
+    h = h_ref[0, 0]
 
     total = jnp.sum(counts, axis=-1, keepdims=True)  # [TK, 1]
     f = jnp.where(total > 0, counts / jnp.maximum(total, 1.0), 0.0)
@@ -78,19 +88,20 @@ def ownership_sweep_call(
     last_access: jax.Array,  # [K] i32
     now: jax.Array,  # [] or [1] i32
     *,
-    h: float,
+    h: jax.Array | float,
     expiry: int = 0,
     tk: int = DEFAULT_TK,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    if interpret is None:
+        interpret = interpret_default()
     k, n = counts.shape
     tk = min(tk, k)
     assert k % tk == 0, (k, tk)
     grid = (k // tk,)
-    kernel = functools.partial(
-        ownership_sweep_kernel, h=h, expiry=expiry, n=n, tk=tk
-    )
+    kernel = functools.partial(ownership_sweep_kernel, expiry=expiry, n=n, tk=tk)
     row = lambda i: (i, 0)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -99,7 +110,8 @@ def ownership_sweep_call(
             pl.BlockSpec((tk, n), row),
             pl.BlockSpec((tk, 1), row),
             pl.BlockSpec((tk, 1), row),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            scalar,
+            scalar,
         ],
         out_specs=[
             pl.BlockSpec((tk, n), row),
@@ -123,5 +135,6 @@ def ownership_sweep_call(
         live.astype(jnp.int8).reshape(k, 1),
         last_access.astype(jnp.int32).reshape(k, 1),
         jnp.asarray(now, jnp.int32).reshape(1, 1),
+        jnp.asarray(h, jnp.float32).reshape(1, 1),
     )
     return out

@@ -1,4 +1,10 @@
-"""jit'd wrapper: bool in/out, K padded to the tile size transparently."""
+"""jit'd wrapper: bool in/out, K padded to the tile size transparently.
+
+``h`` is a *traced* argument (the kernel reads it from a scalar input ref),
+so the scored placement pipeline can sweep with data-dependent coefficients
+without recompiling; ``expiry`` / ``tk`` / ``interpret`` stay static.
+``interpret=None`` auto-selects from the platform (interpret off-TPU).
+"""
 
 from __future__ import annotations
 
@@ -7,13 +13,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import interpret_default
 from repro.kernels.ownership_sweep.kernel import DEFAULT_TK, ownership_sweep_call
 
 __all__ = ["ownership_sweep"]
 
 
-@partial(jax.jit, static_argnames=("h", "expiry", "tk", "interpret"))
+@partial(jax.jit, static_argnames=("expiry", "tk", "interpret"))
 def ownership_sweep(
     counts: jax.Array,  # [K, N]
     hosts: jax.Array,  # [K, N] bool
@@ -21,14 +26,12 @@ def ownership_sweep(
     last_access: jax.Array,  # [K] int32
     now,
     *,
-    h: float,
+    h: jax.Array | float,
     expiry: int = 0,
     tk: int = DEFAULT_TK,
     interpret: bool | None = None,
 ):
     """Returns (owners, to_add, to_drop, expired, f) — bool/bool/bool/bool/f32."""
-    if interpret is None:
-        interpret = interpret_default()
     k, n = counts.shape
     tk = min(tk, k)
     pad = (-k) % tk

@@ -27,6 +27,7 @@ from repro.kvsim.cluster import (
     Scenario,
     flat_rtt,
     wan5_cluster,
+    wan5_edge_cluster,
 )
 from repro.kvsim.simulate import (
     SimResult,
@@ -46,6 +47,7 @@ __all__ = [
     "Scenario",
     "flat_rtt",
     "wan5_cluster",
+    "wan5_edge_cluster",
     "WAN5_REGIONS",
     "WAN5_RTT_MS",
     "SimResult",

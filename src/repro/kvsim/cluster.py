@@ -40,6 +40,7 @@ keeps the paper's pure-RTT model (and the exact Fig 2/3 numbers).
 from __future__ import annotations
 
 import enum
+import math
 from typing import NamedTuple
 
 import jax.numpy as jnp
@@ -55,6 +56,7 @@ __all__ = [
     "write_latency_geo",
     "flat_rtt",
     "wan5_cluster",
+    "wan5_edge_cluster",
     "WAN5_REGIONS",
     "WAN5_RTT_MS",
 ]
@@ -103,6 +105,13 @@ class ClusterConfig(NamedTuple):
     rtt: tuple[tuple[float, ...], ...] | None = None
     # Size-aware per-key transfer cost on remote hops; 0 = pure-RTT model.
     transfer_ms_per_kb: float = 0.0
+    # Per-node replica-byte budget enforced by the placement daemon's
+    # capacity projection stage (OPTIMIZED scenario only — LOCAL/REPLICATED
+    # are idealised full-replication baselines and ignore it). A scalar
+    # applies to every node; an [N] tuple models heterogeneous clusters
+    # (e.g. one small edge node). inf (default) = the paper's Algorithm 3
+    # exactly — no projection runs at all.
+    capacity_bytes: tuple[float, ...] | float = float("inf")
 
     def rtt_matrix(self) -> Array:
         """The ``[N, N]`` RTT matrix as a device array."""
@@ -119,12 +128,44 @@ class ClusterConfig(NamedTuple):
             payload_bytes = self.value_bytes
         return self.transfer_ms_per_kb * (payload_bytes / 1024.0)
 
+    def capacity_tuple(self) -> tuple[float, ...]:
+        """Per-node budgets as an ``[N]`` tuple (scalar broadcast)."""
+        if isinstance(self.capacity_bytes, tuple):
+            return tuple(float(c) for c in self.capacity_bytes)
+        return (float(self.capacity_bytes),) * self.num_nodes
+
+    def capacity_vector(self) -> Array:
+        """The ``[N]`` per-node budget as a device array."""
+        return jnp.asarray(self.capacity_tuple(), jnp.float32)
+
+    @property
+    def has_finite_capacity(self) -> bool:
+        """True iff any node has a finite replica budget (host-side static,
+        so the projection stage compiles away entirely at inf)."""
+        return any(math.isfinite(c) for c in self.capacity_tuple())
+
 
 def wan5_cluster(service_ms: float = 10.0, **kwargs) -> ClusterConfig:
     """5-region WAN preset (``WAN5_REGIONS`` RTTs), master in us-east."""
     return ClusterConfig(
         num_nodes=5, rtt=WAN5_RTT_MS, service_ms=service_ms, **kwargs
     )
+
+
+def wan5_edge_cluster(
+    edge_capacity_bytes: float = 64 * 1024.0,
+    edge_node: int = 4,
+    **kwargs,
+) -> ClusterConfig:
+    """Heterogeneous WAN preset: the 5-region topology with one small *edge*
+    node (default: ap-northeast) whose replica budget is finite while the
+    core regions are unconstrained — the capacity projection evicts the edge
+    node's coldest replicas instead of letting the daemon overfill it."""
+    caps = tuple(
+        float(edge_capacity_bytes) if i == edge_node else float("inf")
+        for i in range(5)
+    )
+    return wan5_cluster(capacity_bytes=caps, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -167,9 +208,13 @@ def nearest_replica_rtt(rtt: Array, replicas: Array, nodes: Array) -> Array:
     replicas: [B, N] bool replica mask per request.
     nodes:    [B]    requesting node per request.
 
-    A request whose replica mask is empty (orphan key) pays the worst RTT in
-    the topology rather than producing an inf — the metadata layer's
-    starvation guard makes this unreachable in practice.
+    A request whose replica mask is empty pays the worst RTT in the
+    topology rather than producing an inf. With infinite budgets the
+    metadata layer's starvation guard makes the empty set unreachable; with
+    finite ``capacity_bytes`` the projection stage may evict a key's last
+    replica, and this worst-RTT charge *is* the modelled cost of fetching
+    it from the backing store (in the flat testbed: exactly ``remote_ms``,
+    an ordinary miss).
     """
     row = rtt[nodes]  # [B, N]
     masked = jnp.where(replicas, row, jnp.inf)

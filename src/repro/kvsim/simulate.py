@@ -4,9 +4,14 @@ Reproduces the three scenarios of Figure 2/3 — Local / Remote / Optimized —
 on YCSB-style traces (``workload.py``) with the paper's latency model
 generalised to an ``[N, N]`` RTT topology (``cluster.py``). The OPTIMIZED
 scenario runs the *actual* core engine (metadata layer + ownership
-coefficient + placement daemon), not a model of it: requests fold accesses
-into a :class:`repro.core.MetadataStore` and the placement daemon sweeps
-between request chunks, exactly like the paper's offline RedynisDaemon.
+coefficient + scored placement pipeline), not a model of it: requests fold
+accesses into a :class:`repro.core.MetadataStore` and the placement daemon
+sweeps between request chunks, exactly like the paper's offline
+RedynisDaemon. With finite per-node replica budgets
+(``ClusterConfig.capacity_bytes``) the sweep's capacity projection stage
+trims adds and evicts cold replicas, and the run reports eviction /
+occupancy metrics; at the default infinite budget the projection compiles
+away and the engine is bit-identical to the paper's Algorithm 3.
 
 Execution model
 ---------------
@@ -15,6 +20,8 @@ chunk every request sees the replica map *frozen at chunk start* — this is
 the paper's non-blocking property: in-flight requests are never stalled by
 the daemon; they observe the previous placement until the sweep commits.
 Metadata updates (access logging) fold in continuously, as in Algorithm 1.
+Per-node occupancy (replica bytes) is sampled on the same frozen map, and
+``peak_occupancy_bytes`` is its running elementwise max.
 
 Two engines with identical semantics:
 
@@ -24,6 +31,8 @@ Two engines with identical semantics:
     single compiled program instead of one dispatch per chunk.
     ``run_experiment`` additionally ``vmap``s the seed (CI-iteration)
     dimension, so a full read-ratio row runs as one batched program.
+    ``backend="pallas"`` routes the sweep's [K, N] pass through the
+    ``kernels.ownership_sweep`` Pallas kernel (interpret mode off-TPU).
   * ``run_scenario_reference`` — the retained slow path: the original
     per-chunk Python loop. It exists as the regression oracle for the fused
     engine (see tests/test_simulate_equivalence.py) and accumulates in
@@ -75,7 +84,10 @@ class SimResult(NamedTuple):
     mean_latency_ms: float
     node_busy_ms: np.ndarray  # [N]
     replication_moves: float  # replicas created by the daemon
-    deletion_moves: float  # replicas dropped by the daemon
+    deletion_moves: float  # replicas dropped by the daemon (all causes)
+    evictions: float  # subset of deletions caused by key expiry
+    capacity_evictions: float  # held replicas evicted by the budget projection
+    peak_occupancy_bytes: np.ndarray  # [N] peak replica bytes per node
 
 
 def _initial_hosts(natural_node: Array, num_keys: int, num_nodes: int, scenario: Scenario) -> Array:
@@ -133,20 +145,29 @@ _chunk_latency_jit = jax.jit(
 )
 
 
+def _node_occupancy(hosts: Array, object_bytes: Array) -> Array:
+    """Per-node replica bytes ``[N]`` under a replica map (both engines use
+    this exact expression so their peaks agree bit-for-bit)."""
+    return jnp.sum(jnp.where(hosts, object_bytes[:, None], 0.0), axis=0)
+
+
 def _make_daemon(
     workload: WorkloadConfig,
     ownership_coefficient: float | None,
     expiry_ticks: int | None,
     decay: float,
     period: int = 1,
+    backend: str = "jax",
 ) -> PlacementDaemon:
-    """Host-side construction so H is validated against N (paper eq. 3)."""
+    """Host-side construction so H is validated against N (paper eq. 3) and
+    the sweep backend is validated before any tracing happens."""
     return PlacementDaemon(
         num_nodes=workload.num_nodes,
         h=ownership_coefficient,
         expiry=expiry_ticks,
         decay=decay,
         period=period,
+        backend=backend,
     )
 
 
@@ -159,6 +180,14 @@ def _check_topology(workload: WorkloadConfig, cluster: ClusterConfig) -> None:
     if cluster.rtt is not None and len(cluster.rtt) != cluster.num_nodes:
         raise ValueError(
             f"rtt matrix is {len(cluster.rtt)}x{len(cluster.rtt[0])} but "
+            f"num_nodes={cluster.num_nodes}"
+        )
+    if (
+        isinstance(cluster.capacity_bytes, tuple)
+        and len(cluster.capacity_bytes) != cluster.num_nodes
+    ):
+        raise ValueError(
+            f"capacity_bytes has {len(cluster.capacity_bytes)} entries for "
             f"num_nodes={cluster.num_nodes}"
         )
 
@@ -185,6 +214,7 @@ _SIM_STATICS = (
     "expiry",
     "decay",
     "period",
+    "backend",
 )
 
 
@@ -193,6 +223,7 @@ def _simulate(
     nodes: Array,  # [R]
     is_read: Array,  # [R]
     natural: Array,  # [K]
+    object_bytes: Array,  # [K]
     *,
     cluster: ClusterConfig,
     scenario: Scenario,
@@ -201,6 +232,7 @@ def _simulate(
     expiry: int | None,
     decay: float,
     period: int,
+    backend: str,
 ):
     """Whole-scenario simulation as a single fixed-shape scan program.
 
@@ -212,6 +244,11 @@ def _simulate(
     num_keys = natural.shape[0]
     n = cluster.num_nodes
     rtt = cluster.rtt_matrix()
+    # Host-side static: at the default infinite budget the projection stage
+    # is skipped entirely (capacity=None), keeping Algorithm 3 bit-exact.
+    capacity = (
+        cluster.capacity_vector() if cluster.has_finite_capacity else None
+    )
 
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
@@ -232,11 +269,25 @@ def _simulate(
     )
 
     store = _seed_store(_initial_hosts(natural, num_keys, n, scenario), num_keys, n)
+    obj = jnp.asarray(object_bytes, jnp.float32)
     zero = jnp.float32(0.0)
-    init = (store, jnp.zeros((n,), jnp.float32), zero, zero, zero, zero, zero)
+    init = (
+        store,
+        jnp.zeros((n,), jnp.float32),  # busy
+        zero,  # lat_sum
+        zero,  # hits
+        zero,  # reads
+        zero,  # repl
+        zero,  # drop
+        zero,  # evic (expiry)
+        zero,  # cap_evic
+        # Peak occupancy starts at the initial map; only OPTIMIZED mutates
+        # the map, so only its scan body re-samples occupancy per chunk.
+        _node_occupancy(store.hosts, obj),
+    )
 
     def body(carry, x):
-        store, busy, lat_sum, hits, reads, repl, drop = carry
+        store, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak = carry
         c, ck, cn, cr, cv = x
         lat, read_hits = _chunk_latency(store.hosts, ck, cn, cr, rtt, cluster, scenario)
         lat = jnp.where(cv, lat, 0.0)
@@ -245,16 +296,33 @@ def _simulate(
         hits = hits + jnp.sum((read_hits & cv).astype(jnp.float32))
         reads = reads + jnp.sum((cr & cv).astype(jnp.float32))
         if scenario is Scenario.OPTIMIZED:
+            # Occupancy is sampled on the same frozen-at-chunk-start map the
+            # requests see (the initial placement seeds the peak).
+            peak = jnp.maximum(peak, _node_occupancy(store.hosts, obj))
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, ck, cn, now=c, valid=cv)
-            adds, drops, store = masked_step(
-                store, c, (c % period) == 0, h=h, expiry=expiry, decay=decay
+            stats, store = masked_step(
+                store,
+                c,
+                (c % period) == 0,
+                h=h,
+                expiry=expiry,
+                decay=decay,
+                object_bytes=obj,
+                capacity_bytes=capacity,
+                backend=backend,
             )
-            repl = repl + adds
-            drop = drop + drops
-        return (store, busy, lat_sum, hits, reads, repl, drop), None
+            repl = repl + stats.adds
+            drop = drop + stats.drops
+            evic = evic + stats.expiry_evictions
+            cap_evic = cap_evic + stats.capacity_evictions
+        return (
+            store, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak
+        ), None
 
-    (_, busy, lat_sum, hits, reads, repl, drop), _ = jax.lax.scan(body, init, xs)
+    (_, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), _ = (
+        jax.lax.scan(body, init, xs)
+    )
     makespan_ms = jnp.max(busy)
     return (
         r / (makespan_ms / 1000.0),
@@ -263,6 +331,9 @@ def _simulate(
         busy,
         repl,
         drop,
+        evic,
+        cap_evic,
+        peak,
     )
 
 
@@ -270,10 +341,10 @@ _simulate_jit = partial(jax.jit, static_argnames=_SIM_STATICS)(_simulate)
 
 
 @partial(jax.jit, static_argnames=_SIM_STATICS)
-def _simulate_batch(keys, nodes, is_read, natural, **statics):
+def _simulate_batch(keys, nodes, is_read, natural, object_bytes, **statics):
     """Seed-batched fused engine: vmap over the leading (iteration) axis."""
-    return jax.vmap(lambda a, b, c, d: _simulate(a, b, c, d, **statics))(
-        keys, nodes, is_read, natural
+    return jax.vmap(lambda a, b, c, d, e: _simulate(a, b, c, d, e, **statics))(
+        keys, nodes, is_read, natural, object_bytes
     )
 
 
@@ -293,22 +364,27 @@ def run_scenario(
     expiry_ticks: int | None = None,
     decay: float = 1.0,
     daemon_period: int = 1,
+    backend: str = "jax",
 ) -> SimResult:
     """Simulate one scenario over one generated trace (fused scan engine).
 
     daemon_period: sweep every `daemon_period`-th chunk (1 = every chunk);
     off chunks take the not-due branch of `masked_step`.
+    backend: "jax" or "pallas" — which sweep backend the daemon routes its
+    [K, N] analysis pass through.
     """
     _check_topology(workload, cluster)
     daemon = _make_daemon(
-        workload, ownership_coefficient, expiry_ticks, decay, daemon_period
+        workload, ownership_coefficient, expiry_ticks, decay, daemon_period,
+        backend,
     )
     trace = generate_trace(workload, seed)
-    tput, hit, mean_lat, busy, repl, drop = _simulate_jit(
+    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = _simulate_jit(
         trace.keys,
         trace.nodes,
         trace.is_read,
         trace.natural_node,
+        trace.object_bytes,
         cluster=cluster,
         scenario=scenario,
         daemon_interval=daemon_interval,
@@ -316,6 +392,7 @@ def run_scenario(
         expiry=daemon.expiry,
         decay=daemon.decay,
         period=daemon.period,
+        backend=daemon.backend,
     )
     return SimResult(
         throughput_ops_s=float(tput),
@@ -324,6 +401,9 @@ def run_scenario(
         node_busy_ms=np.asarray(busy, dtype=np.float64),
         replication_moves=float(repl),
         deletion_moves=float(drop),
+        evictions=float(evic),
+        capacity_evictions=float(cap_evic),
+        peak_occupancy_bytes=np.asarray(peak, dtype=np.float64),
     )
 
 
@@ -342,6 +422,7 @@ def run_scenario_reference(
     expiry_ticks: int | None = None,
     decay: float = 1.0,
     daemon_period: int = 1,
+    backend: str = "jax",
 ) -> SimResult:
     """Slow-path reference: one host dispatch per chunk, daemon stepped with
     Python control flow. Semantically identical to :func:`run_scenario`."""
@@ -349,9 +430,13 @@ def run_scenario_reference(
     trace = generate_trace(workload, seed)
     k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
     rtt = cluster.rtt_matrix()
+    capacity = (
+        cluster.capacity_vector() if cluster.has_finite_capacity else None
+    )
 
     daemon = _make_daemon(
-        workload, ownership_coefficient, expiry_ticks, decay, daemon_period
+        workload, ownership_coefficient, expiry_ticks, decay, daemon_period,
+        backend,
     )
     store = _seed_store(
         _initial_hosts(trace.natural_node, k, n, scenario), k, n
@@ -363,6 +448,11 @@ def run_scenario_reference(
     lat_sum = 0.0
     repl_moves = 0.0
     drop_moves = 0.0
+    evictions = 0.0
+    cap_evictions = 0.0
+    peak_occ = np.asarray(
+        _node_occupancy(store.hosts, trace.object_bytes), dtype=np.float64
+    )
 
     num_chunks = (r + daemon_interval - 1) // daemon_interval
     for c in range(num_chunks):
@@ -381,12 +471,28 @@ def run_scenario_reference(
         reads += float(jnp.sum(is_read))
 
         if scenario is Scenario.OPTIMIZED:
+            peak_occ = np.maximum(
+                peak_occ,
+                np.asarray(
+                    _node_occupancy(store.hosts, trace.object_bytes),
+                    dtype=np.float64,
+                ),
+            )
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, keys, nodes, now=c)
             if daemon.due(c):
-                plan, store = daemon.step(store, now=c)
+                plan, store = daemon.step(
+                    store,
+                    now=c,
+                    object_bytes=trace.object_bytes,
+                    capacity_bytes=capacity,
+                )
                 repl_moves += float(jnp.sum(plan.to_add))
                 drop_moves += float(jnp.sum(plan.to_drop))
+                evictions += float(
+                    jnp.sum(plan.to_drop & plan.expired[:, None])
+                )
+                cap_evictions += float(jnp.sum(plan.capacity_evicted))
 
     makespan_ms = float(total_lat.max())
     return SimResult(
@@ -396,6 +502,9 @@ def run_scenario_reference(
         node_busy_ms=total_lat,
         replication_moves=repl_moves,
         deletion_moves=drop_moves,
+        evictions=evictions,
+        capacity_evictions=cap_evictions,
+        peak_occupancy_bytes=peak_occ,
     )
 
 
@@ -417,6 +526,7 @@ def run_experiment(
     cluster: ClusterConfig | None = None,
     engine: str = "scan",
     daemon_interval: int = 1000,
+    backend: str = "jax",
     **workload_kwargs,
 ) -> dict:
     """Paper Figure 2/3: all scenarios × read ratios, with 99% CIs.
@@ -424,6 +534,7 @@ def run_experiment(
     engine="scan" (default) runs every CI iteration of a read-ratio row as
     one vmapped program; engine="reference" replays the retained per-chunk
     Python loop (the oracle the equivalence tests pin the scan engine to).
+    backend selects the daemon's sweep backend ("jax" | "pallas").
     """
     if cluster is None:
         cluster = ClusterConfig()
@@ -445,18 +556,18 @@ def run_experiment(
                     [
                         run_scenario_reference(
                             wl, cluster, scenario, seed=it,
-                            daemon_interval=daemon_interval,
+                            daemon_interval=daemon_interval, backend=backend,
                         ).throughput_ops_s
                         for it in range(iterations)
                     ]
                 )
                 hit = run_scenario_reference(
                     wl, cluster, scenario, seed=0,
-                    daemon_interval=daemon_interval,
+                    daemon_interval=daemon_interval, backend=backend,
                 ).hit_rate
             else:
                 _check_topology(wl, cluster)
-                daemon = _make_daemon(wl, None, None, 1.0)
+                daemon = _make_daemon(wl, None, None, 1.0, 1, backend)
                 traces = _traces_for_seeds(
                     wl, jnp.arange(iterations, dtype=jnp.int32)
                 )
@@ -465,6 +576,7 @@ def run_experiment(
                     traces.nodes,
                     traces.is_read,
                     traces.natural_node,
+                    traces.object_bytes,
                     cluster=cluster,
                     scenario=scenario,
                     daemon_interval=daemon_interval,
@@ -472,6 +584,7 @@ def run_experiment(
                     expiry=daemon.expiry,
                     decay=daemon.decay,
                     period=daemon.period,
+                    backend=daemon.backend,
                 )
                 samples = np.asarray(tput, dtype=np.float64)
                 hit = float(hit_b[0])

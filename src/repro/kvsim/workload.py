@@ -70,6 +70,14 @@ class WorkloadConfig(NamedTuple):
     # requests in phase p originate (natural + p) % n, so the hot region
     # moves and stale placements decay in value.
     diurnal_shifts: int = 0
+    # Per-key payload size distribution, consumed by the placement daemon's
+    # capacity projection (per-node replica-byte budgets). Sizes are
+    # lognormal: object_bytes × exp(sigma · N(0,1)), drawn once per key from
+    # the trace seed; sigma = 0 (default) keeps every object at exactly
+    # `object_bytes` — and with an infinite budget the sizes are inert, so
+    # the paper's experiments are unchanged.
+    object_bytes: float = 1024.0
+    object_bytes_sigma: float = 0.0
 
 
 class Trace(NamedTuple):
@@ -77,6 +85,7 @@ class Trace(NamedTuple):
     nodes: Array  # [R] int32 requesting node
     is_read: Array  # [R] bool
     natural_node: Array  # [K] int32 per-key natural source (ground truth)
+    object_bytes: Array  # [K] f32 per-key payload size
 
 
 def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
@@ -122,8 +131,24 @@ def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
         phase = (jnp.arange(r, dtype=jnp.int32) * cfg.diurnal_shifts) // r
         nodes = ((nodes + phase) % n).astype(jnp.int32)
 
+    if cfg.object_bytes_sigma > 0:
+        # fold_in (not an extra split) so keys/nodes/reads are byte-identical
+        # to traces generated before sizes existed (pinned seed goldens).
+        k_size = jax.random.fold_in(k_other, 2)
+        sizes = cfg.object_bytes * jnp.exp(
+            cfg.object_bytes_sigma * jax.random.normal(k_size, (k,))
+        )
+    else:
+        sizes = jnp.full((k,), cfg.object_bytes, jnp.float32)
+
     is_read = jax.random.bernoulli(k_rw, cfg.read_fraction, (r,))
-    return Trace(keys=keys, nodes=nodes, is_read=is_read, natural_node=natural)
+    return Trace(
+        keys=keys,
+        nodes=nodes,
+        is_read=is_read,
+        natural_node=natural,
+        object_bytes=sizes.astype(jnp.float32),
+    )
 
 
 def wan5_workload(**kwargs) -> WorkloadConfig:

@@ -1,0 +1,368 @@
+"""Capacity-aware scored placement pipeline: projection-stage properties
+(numpy oracle, budget compliance, bit-exact inf reduction to Algorithm 3),
+unified expiry semantics, post-projection plan_moves consistency, and the
+end-to-end hit-rate-vs-capacity degradation axis. Seeded grids always run;
+hypothesis widens the search when installed (CI does)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costmodel import budget_plan, project_capacity
+from repro.core.metadata import create_store
+from repro.core.ownership import ownership_fraction
+from repro.core.placement import PlacementDaemon, sweep
+from repro.core.repartition import plan_moves
+from repro.kvsim import (
+    ClusterConfig,
+    Scenario,
+    WorkloadConfig,
+    run_scenario,
+    wan5_edge_cluster,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _random_inputs(seed, k, n):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 50, size=(k, n)).astype(np.float32)
+    counts[rng.random(k) < 0.2] = 0.0  # zero-traffic rows
+    hosts = rng.random((k, n)) < 0.4
+    live = rng.random(k) < 0.9
+    obj = rng.integers(1, 200, size=k).astype(np.float32)
+    return counts, hosts, live, obj
+
+
+def _projection_oracle(owners, hosts, f, obj, budget):
+    """Per-node admission in plain Python: rank by f descending (held beats
+    add at equal f, then lowest id) and admit while the *running* byte total
+    fits — no skip-and-continue: a too-big candidate blocks everything
+    colder, exactly the fixed-shape cumsum rule the jnp projector computes."""
+    k, n = owners.shape
+    out = np.zeros_like(owners)
+    held = owners & hosts
+    for x in range(n):
+        cands = sorted(
+            np.nonzero(owners[:, x])[0].tolist(),
+            key=lambda i: (-f[i, x], not held[i, x], i),
+        )
+        sizes = np.cumsum([obj[i] for i in cands])
+        for j, i in enumerate(cands):
+            out[i, x] = sizes[j] <= budget[x]
+    return out
+
+
+def check_projection_matches_oracle(seed, k, n):
+    rng = np.random.default_rng(seed)
+    counts, hosts, live, obj = _random_inputs(seed, k, n)
+    owners = rng.random((k, n)) < 0.5
+    f = np.asarray(ownership_fraction(jnp.asarray(counts)))
+    budget = rng.integers(50, 2000, size=n).astype(np.float32)
+
+    projected, evicted, rejected = project_capacity(
+        jnp.asarray(owners), jnp.asarray(hosts), jnp.asarray(f),
+        jnp.asarray(obj), jnp.asarray(budget),
+    )
+    expect = _projection_oracle(owners, hosts, f, obj, budget)
+    np.testing.assert_array_equal(np.asarray(projected), expect)
+    np.testing.assert_array_equal(
+        np.asarray(evicted), (owners & hosts) & ~expect
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rejected), (owners & ~hosts) & ~expect
+    )
+
+
+def check_projection_budget_and_shrink(seed, n, k):
+    counts, hosts, live, obj = _random_inputs(seed, k, n)
+    rng = np.random.default_rng(seed)
+    owners = rng.random((k, n)) < 0.6
+    f = ownership_fraction(jnp.asarray(counts))
+    budget = rng.integers(1, 1500, size=n).astype(np.float32)
+    projected, evicted, rejected = project_capacity(
+        jnp.asarray(owners), jnp.asarray(hosts), f,
+        jnp.asarray(obj), jnp.asarray(budget),
+    )
+    projected = np.asarray(projected)
+    # budget respected exactly, and the projection only ever shrinks
+    occupancy = (projected * obj[:, None]).sum(axis=0)
+    assert np.all(occupancy <= budget + 1e-4), (occupancy, budget)
+    assert np.all(projected <= owners)
+    # evicted/rejected partition the trimmed set
+    trimmed = owners & ~projected
+    np.testing.assert_array_equal(
+        np.asarray(evicted) | np.asarray(rejected), trimmed
+    )
+    assert not np.any(np.asarray(evicted) & np.asarray(rejected))
+
+
+def check_infinite_budget_bit_exact(seed, n, k):
+    """budget = inf ⇒ the paper's Algorithm 3, bit-for-bit: running the
+    projection stage with an infinite budget must equal skipping it."""
+    counts, hosts, live, obj = _random_inputs(seed, k, n)
+    store = create_store(k, n)._replace(
+        access_counts=jnp.asarray(counts, jnp.int32),
+        hosts=jnp.asarray(hosts),
+        live=jnp.asarray(live),
+        last_access=jnp.asarray(
+            np.random.default_rng(seed).integers(0, 90, k), jnp.int32
+        ),
+    )
+    h = 1.0 / n
+    base_plan, base_store = sweep(store, h, 100, 10)
+    inf_plan, inf_store = sweep(
+        store, h, 100, 10,
+        object_bytes=jnp.asarray(obj),
+        capacity_bytes=jnp.full((n,), jnp.inf),
+    )
+    for name, a, b in zip(base_plan._fields, base_plan, inf_plan):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"plan.{name}"
+        )
+    for name, a, b in zip(base_store._fields, base_store, inf_store):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=f"store.{name}"
+        )
+
+
+GRID = [(s, n, k) for s, (n, k) in enumerate(
+    [(2, 4), (3, 60), (4, 17), (5, 48), (8, 33), (2, 1)]
+)]
+
+
+@pytest.mark.parametrize("seed,n,k", GRID)
+def test_project_capacity_matches_numpy_oracle(seed, n, k):
+    check_projection_matches_oracle(1000 + seed, k, n)
+
+
+@pytest.mark.parametrize("seed,n,k", GRID)
+def test_projection_respects_budget_and_only_shrinks(seed, n, k):
+    check_projection_budget_and_shrink(seed, n, k)
+
+
+@pytest.mark.parametrize("seed,n,k", GRID)
+def test_sweep_with_infinite_budget_is_bit_exact_algorithm3(seed, n, k):
+    check_infinite_budget_bit_exact(seed, n, k)
+
+
+if HAVE_HYPOTHESIS:
+    dims = st.tuples(
+        st.integers(0, 10_000), st.integers(2, 8), st.integers(1, 48)
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims)
+    def test_projection_oracle_fuzz(p):
+        check_projection_matches_oracle(p[0], p[2], p[1])
+
+    @settings(max_examples=25, deadline=None)
+    @given(dims)
+    def test_projection_budget_fuzz(p):
+        check_projection_budget_and_shrink(*p)
+
+    @settings(max_examples=20, deadline=None)
+    @given(dims)
+    def test_infinite_budget_bit_exact_fuzz(p):
+        check_infinite_budget_bit_exact(*p)
+
+
+def test_last_replica_eviction_and_readmission():
+    """Bounded-cache semantics: under pressure the projection may evict a
+    key's last replica (budget outranks the starvation guard); the key's
+    counts survive, so a later sweep re-admits it once it ranks above the
+    budget line — and in the meantime the simulator serves it at the
+    topology's worst RTT instead of failing."""
+    k, n = 4, 2
+    # key 3 has the lowest ownership fraction on node 0 (f = .5, pinned to
+    # node 0 only by the starvation guard at H = .6); everyone holds node 0
+    counts = jnp.asarray([[9, 3], [8, 3], [7, 3], [1, 1]], jnp.int32)
+    store = create_store(k, n)._replace(
+        access_counts=counts,
+        hosts=jnp.asarray([[True, False]] * k),
+        live=jnp.ones((k,), bool),
+    )
+    obj = jnp.full((k,), 100.0)
+    cap = jnp.asarray([300.0, 300.0])
+    plan, swept = sweep(store, 0.6, 0, object_bytes=obj, capacity_bytes=cap)
+    owners = np.asarray(plan.owners)
+    assert not owners[3].any()  # last replica evicted — orphaned
+    assert np.asarray(plan.capacity_evicted)[3, 0]
+    # traffic shifts: key 3 becomes hottest -> re-admitted, coldest evicted
+    swept = swept._replace(
+        access_counts=swept.access_counts.at[3, 0].add(100)
+    )
+    plan2, _ = sweep(swept, 0.6, 1, object_bytes=obj, capacity_bytes=cap)
+    assert np.asarray(plan2.owners)[3, 0]  # back above the budget line
+    # the orphan read path is priced, not fatal (worst RTT = flat remote_ms)
+    from repro.kvsim.cluster import nearest_replica_rtt
+
+    rtt = ClusterConfig().rtt_matrix()
+    lat = nearest_replica_rtt(
+        rtt, jnp.zeros((1, 3), bool), jnp.zeros((1,), jnp.int32)
+    )
+    assert float(lat[0]) == 100.0
+
+
+def test_peak_occupancy_static_scenarios_report_initial_map():
+    """LOCAL/REPLICATED never mutate the replica map: their peak occupancy
+    is exactly the full-replication map's bytes (K × object_bytes/node)."""
+    wl = WorkloadConfig(num_requests=2_000)
+    r = run_scenario(wl, ClusterConfig(), Scenario.LOCAL, seed=0)
+    expect = wl.num_keys * wl.object_bytes
+    np.testing.assert_allclose(r.peak_occupancy_bytes, expect)
+    assert r.evictions == 0.0 and r.capacity_evictions == 0.0
+
+
+def test_budget_plan_evicts_coldest_held_when_over_budget():
+    """A node holding more than its budget must shed its coldest replicas
+    (keys ordered by ownership fraction) and keep the hottest."""
+    k, n = 6, 2
+    counts = jnp.asarray(
+        [[60, 0], [50, 0], [40, 0], [30, 0], [20, 0], [10, 0]], jnp.float32
+    )
+    hosts = jnp.ones((k, n), bool)
+    store = create_store(k, n)._replace(
+        access_counts=counts.astype(jnp.int32), hosts=hosts,
+        live=jnp.ones((k,), bool),
+    )
+    plan, _ = sweep(store, 0.5, 0)  # node 0 gets all keys, node 1 none
+    obj = jnp.full((k,), 100.0)
+    trimmed = budget_plan(plan, counts, obj, 300.0)
+    owners = np.asarray(trimmed.owners)
+    # node 0: only the 3 hottest keys (ids 0,1,2) fit 300 bytes
+    np.testing.assert_array_equal(owners[:, 0], [True] * 3 + [False] * 3)
+    evicted = np.asarray(trimmed.capacity_evicted)
+    assert evicted[:, 0].sum() == 3  # cold held replicas evicted
+    np.testing.assert_array_equal(
+        np.asarray(trimmed.to_drop), np.asarray(plan.to_drop) | evicted
+    )
+
+
+def test_expiry_zero_is_disabled_on_every_path():
+    """Unified expiry convention: 0 and None both disable, on both backends
+    (the seed diverged: core treated 0 as 'expire anything untouched')."""
+    counts, hosts, live, _ = _random_inputs(7, 33, 4)
+    store = create_store(33, 4)._replace(
+        access_counts=jnp.asarray(counts, jnp.int32),
+        hosts=jnp.asarray(hosts),
+        live=jnp.asarray(live),
+        last_access=jnp.zeros((33,), jnp.int32),  # all stale vs now=100
+    )
+    plans = [
+        sweep(store, 0.25, 100, exp, backend=bk)[0]
+        for exp in (None, 0)
+        for bk in ("jax", "pallas")
+    ]
+    for p in plans:
+        assert not np.asarray(p.expired).any()
+        np.testing.assert_array_equal(
+            np.asarray(p.owners), np.asarray(plans[0].owners)
+        )
+    # positive expiry still purges
+    plan_on, _ = sweep(store, 0.25, 100, 10)
+    assert np.asarray(plan_on.expired).sum() > 0
+
+
+def test_daemon_validates_expiry_and_backend():
+    with pytest.raises(ValueError, match="expiry"):
+        PlacementDaemon(4, expiry=-1)
+    with pytest.raises(ValueError, match="backend"):
+        PlacementDaemon(4, backend="cuda")
+    PlacementDaemon(4, expiry=0, backend="pallas")  # 0 = disabled, valid
+
+
+def test_plan_moves_respects_post_projection_plan():
+    """plan_moves on a capacity-projected plan must never schedule an
+    evicted replica into a cache slot nor publish a rejected add."""
+    rng = np.random.default_rng(3)
+    k, n = 24, 3
+    counts, hosts, live, obj = _random_inputs(3, k, n)
+    store = create_store(k, n)._replace(
+        access_counts=jnp.asarray(counts, jnp.int32),
+        hosts=jnp.asarray(hosts),
+        live=jnp.ones((k,), bool),
+    )
+    plan, _ = sweep(
+        store, 1.0 / n, 0,
+        object_bytes=jnp.asarray(obj),
+        capacity_bytes=jnp.full((n,), 400.0),
+    )
+    home = jnp.asarray(rng.integers(0, n, k), jnp.int32)
+    moves = plan_moves(
+        plan, home, cache_capacity=8, max_moves=k,
+        object_bytes=jnp.asarray(obj),
+    )
+    owners = np.asarray(plan.owners)
+    home_np = np.asarray(home)
+    slot_ids = np.asarray(moves.slot_ids)
+    for rank in range(n):
+        filled = [i for i in slot_ids[rank].tolist() if i >= 0]
+        wanted = set(np.nonzero(owners[:, rank] & (home_np != rank))[0].tolist())
+        assert set(filled) <= wanted
+        # per-rank cache residency accounting matches the schedule
+        np.testing.assert_allclose(
+            float(moves.slot_bytes[rank]), obj[filled].sum(), rtol=1e-6
+        )
+    published = set(int(i) for i in np.asarray(moves.publish_ids) if i >= 0)
+    surviving_adds = set(np.nonzero(np.asarray(plan.to_add).any(-1))[0].tolist())
+    assert published == surviving_adds
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the new scenario axis (hit-rate vs capacity).
+# ---------------------------------------------------------------------------
+
+CAPACITIES = (float("inf"), 128 * 1024.0, 64 * 1024.0, 32 * 1024.0, 16 * 1024.0)
+
+
+def test_optimized_hit_rate_degrades_monotonically_with_capacity():
+    """Property: shrinking per-node replica budgets can only hurt the
+    OPTIMIZED hit rate; budgets smaller than the hot set must evict
+    (hot set = 100 keys × 1 KiB = 100 KiB per node at convergence)."""
+    wl = WorkloadConfig(num_requests=20_000, skewed=True)
+    hits, evics = [], []
+    for cap in CAPACITIES:
+        r = run_scenario(
+            wl, ClusterConfig(capacity_bytes=cap), Scenario.OPTIMIZED, seed=0
+        )
+        hits.append(r.hit_rate)
+        evics.append(r.capacity_evictions)
+    for smaller, larger in zip(hits[1:], hits[:-1]):
+        assert smaller <= larger + 1e-3, hits
+    assert evics[0] == 0.0  # inf budget: projection never runs
+    assert all(e > 0 for e in evics[1:]), evics  # finite budgets evict
+    # a budget well under the hot set visibly degrades vs Algorithm 3
+    assert hits[-1] < hits[0] - 0.2, hits
+
+
+def test_infinite_capacity_run_is_default_run():
+    """ClusterConfig(capacity_bytes=inf) must be indistinguishable from the
+    pre-refactor engine (the projection stage compiles away)."""
+    wl = WorkloadConfig(num_requests=5_000, skewed=True)
+    base = ClusterConfig()
+    explicit = ClusterConfig(capacity_bytes=float("inf"))
+    for sc in Scenario:
+        a = run_scenario(wl, base, sc, seed=1)
+        b = run_scenario(wl, explicit, sc, seed=1)
+        assert a.throughput_ops_s == b.throughput_ops_s, sc
+        assert a.hit_rate == b.hit_rate, sc
+        assert a.capacity_evictions == 0.0 and b.capacity_evictions == 0.0
+
+
+def test_wan5_edge_node_keeps_core_unconstrained():
+    """Heterogeneous preset: the small edge node evicts while the run still
+    completes, and the new metrics are reported per node."""
+    from repro.kvsim import wan5_workload
+
+    wl = wan5_workload(num_requests=10_000, num_keys=300)
+    cl = wan5_edge_cluster(edge_capacity_bytes=8 * 1024.0)
+    r = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    assert r.capacity_evictions > 0
+    # peak occupancy is reported per node ([N] vector)
+    assert r.peak_occupancy_bytes.shape == (5,)

@@ -57,6 +57,32 @@ def test_scan_matches_reference_wan5_topology():
     assert_results_match(a, b, "wan5")
 
 
+def test_scan_matches_reference_finite_capacity():
+    """Finite per-node replica budgets + a lognormal object-size distribution
+    exercise the capacity-projection stage inside the scan body; the fused
+    engine must still match the per-chunk oracle on every metric, including
+    the new eviction/occupancy fields."""
+    wl = WorkloadConfig(
+        num_requests=4_000, num_keys=200, skewed=True, object_bytes_sigma=0.5
+    )
+    cl = ClusterConfig(capacity_bytes=24 * 1024.0)
+    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=2, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=2, daemon_interval=500)
+    assert_results_match(a, b, "capacity")
+    assert a.capacity_evictions > 0
+
+
+def test_scan_matches_reference_heterogeneous_capacity():
+    """wan5 with one small edge node (heterogeneous budget tuple)."""
+    from repro.kvsim import wan5_edge_cluster
+
+    wl = wan5_workload(num_requests=4_000, num_keys=200)
+    cl = wan5_edge_cluster(edge_capacity_bytes=8 * 1024.0)
+    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    assert_results_match(a, b, "wan5-edge")
+
+
 def test_scan_matches_reference_daemon_options():
     """Expiry + decay + non-unit period take the due-masked branch of
     `masked_step`; they must still match the host-side daemon exactly."""
@@ -87,10 +113,10 @@ def test_masked_step_not_due_is_identity():
     store = record_accesses(
         store, jnp.arange(8, dtype=jnp.int32), jnp.zeros((8,), jnp.int32), now=1
     )
-    adds, drops, out = masked_step(
+    stats, out = masked_step(
         store, 2, jnp.bool_(False), h=1 / 3, expiry=5, decay=0.5
     )
-    assert float(adds) == 0.0 and float(drops) == 0.0
+    assert all(float(v) == 0.0 for v in stats), stats
     for field, a, b in zip(store._fields, store, out):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=field)
 
