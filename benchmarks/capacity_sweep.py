@@ -15,7 +15,14 @@ import argparse
 import time
 
 from benchmarks.common import banner, emit, write_bench_json
-from repro.kvsim import ClusterConfig, Scenario, WorkloadConfig, run_scenario
+from repro.kvsim import (
+    ClusterConfig,
+    RedynisPolicy,
+    WorkloadConfig,
+    describe_policy,
+    parse_policy,
+    run_scenario,
+)
 
 DEFAULT_CAPACITIES_KIB = (float("inf"), 256, 128, 64, 32, 16)
 
@@ -26,8 +33,14 @@ def main(
     object_bytes_sigma: float = 0.5,
     backend: str = "jax",
     seed: int = 0,
+    policy=None,
 ) -> list[dict]:
-    banner(f"capacity_sweep: hit-rate vs per-node replica budget (backend={backend})")
+    if policy is None:
+        policy = RedynisPolicy(backend=backend)
+    banner(
+        f"capacity_sweep: hit-rate vs per-node replica budget "
+        f"(policy={describe_policy(policy)})"
+    )
     wl = WorkloadConfig(
         num_requests=num_requests,
         skewed=True,
@@ -39,7 +52,7 @@ def main(
         cap = float("inf") if cap_kib == float("inf") else cap_kib * 1024.0
         cl = ClusterConfig(capacity_bytes=cap)
         t0 = time.perf_counter()
-        r = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=seed, backend=backend)
+        r = run_scenario(wl, cl, policy, seed=seed)
         wall = time.perf_counter() - t0
         label = "inf" if cap == float("inf") else f"{cap_kib:g}"
         emit(
@@ -68,7 +81,7 @@ def main(
     write_bench_json(
         "capacity_sweep",
         {"rows": rows, "wall_time_s": time.perf_counter() - t_start},
-        backend=backend,
+        policy=describe_policy(policy),
         num_requests=num_requests,
         object_bytes_sigma=object_bytes_sigma,
     )
@@ -79,6 +92,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--num-requests", type=int, default=50_000)
     ap.add_argument("--backend", choices=("jax", "pallas"), default="jax")
+    ap.add_argument(
+        "--policy", type=parse_policy, default=None, metavar="NAME[:k=v,...]",
+        help="placement policy spec, e.g. redynis:h=0.2 or topk:k=50 "
+        "(default: redynis with --backend)",
+    )
     ap.add_argument(
         "--capacities-kib", type=float, nargs="+", default=None,
         help="per-node budgets in KiB (omit for the default ladder incl. inf)",
@@ -93,4 +111,5 @@ if __name__ == "__main__":
         num_requests=args.num_requests,
         capacities_kib=caps,
         backend=args.backend,
+        policy=args.policy,
     )

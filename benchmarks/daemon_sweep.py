@@ -17,15 +17,26 @@ import jax.numpy as jnp
 from benchmarks.common import banner, emit, time_fn, write_bench_json
 from repro.core.metadata import create_store
 from repro.core.placement import masked_step, sweep
+from repro.core.policy import (
+    PolicyContext,
+    describe_policy,
+    parse_policy,
+    policy_masked_step,
+    split_policy,
+)
 
 
 def main(
     sizes=(1_000, 10_000, 100_000, 1_000_000),
     n_nodes: int = 16,
     backend: str = "both",
+    policy=None,
 ) -> list[dict]:
     banner(f"daemon_sweep: Algorithm 3 analysis throughput (backend={backend})")
     backends = ("jax", "pallas") if backend == "both" else (backend,)
+    if policy is not None:
+        policy = policy.resolve(n_nodes)
+        policy.validate(n_nodes)
     rows: list[dict] = []
     t_start = time.perf_counter()
     for k in sizes:
@@ -102,6 +113,44 @@ def main(
                 }
             )
 
+        if policy is not None:
+            # Generic policy engine: decide + shared expiry/capacity stages
+            # through `core.policy.policy_masked_step` (the form the fused
+            # simulator runs for any registered policy).
+            label = describe_policy(policy)
+            static, params = split_policy(policy)
+            rtt = jnp.where(
+                jnp.eye(n_nodes, dtype=bool), 0.0,
+                jnp.full((n_nodes, n_nodes), 100.0),
+            )
+            ctx = PolicyContext(
+                rtt=rtt, object_bytes=obj, capacity_bytes=cap, params=params
+            )
+            pstate = static.init(store, ctx)
+            stepped = jax.jit(
+                lambda s, ps, due: policy_masked_step(static, ps, s, 0, due, ctx)[
+                    2
+                ].hosts
+            )
+            t_policy = time_fn(
+                lambda: stepped(store, pstate, jnp.bool_(True)), iters=5
+            )
+            emit(
+                "daemon_sweep_policy",
+                round(k / t_policy / 1e6, 3),
+                "Mkeys/s",
+                keys=k,
+                policy=label,
+            )
+            rows.append(
+                {
+                    "name": "policy_masked_step",
+                    "policy": label,
+                    "keys": k,
+                    "mkeys_per_s": k / t_policy / 1e6,
+                }
+            )
+
     write_bench_json(
         "daemon_sweep",
         {"rows": rows, "wall_time_s": time.perf_counter() - t_start},
@@ -122,5 +171,13 @@ if __name__ == "__main__":
         default=[1_000, 10_000, 100_000, 1_000_000],
     )
     ap.add_argument("--nodes", type=int, default=16)
+    ap.add_argument(
+        "--policy", type=parse_policy, default=None, metavar="NAME[:k=v,...]",
+        help="additionally time core.policy.policy_masked_step for this "
+        "registry spec (e.g. redynis:h=0.05, topk:k=500, decaylfu)",
+    )
     args = ap.parse_args()
-    main(sizes=tuple(args.sizes), n_nodes=args.nodes, backend=args.backend)
+    main(
+        sizes=tuple(args.sizes), n_nodes=args.nodes, backend=args.backend,
+        policy=args.policy,
+    )

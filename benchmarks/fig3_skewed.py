@@ -15,7 +15,8 @@ import numpy as np
 from benchmarks.common import banner, emit, write_bench_json
 from repro.kvsim import (
     ClusterConfig,
-    Scenario,
+    RedynisPolicy,
+    StaticPolicy,
     WorkloadConfig,
     diurnal_workload,
     run_experiment,
@@ -63,7 +64,7 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
         wl = WorkloadConfig(
             num_requests=num_requests // 2, skewed=True, affinity=affinity
         )
-        r = run_scenario(wl, cluster, Scenario.OPTIMIZED, seed=0)
+        r = run_scenario(wl, cluster, RedynisPolicy(), seed=0)
         emit(
             "fig3b_affinity",
             round(r.throughput_ops_s, 2),
@@ -76,13 +77,17 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
     banner("fig3c: 5-region WAN topology (beyond paper)")
     geo = wan5_cluster()
     wl5 = wan5_workload(num_requests=num_requests // 2)
-    for sc in (Scenario.LOCAL, Scenario.REMOTE, Scenario.OPTIMIZED):
-        r = run_scenario(wl5, geo, sc, seed=0)
+    for label, pol in (
+        ("local", StaticPolicy(mode="local")),
+        ("remote", StaticPolicy(mode="remote")),
+        ("optimized", RedynisPolicy()),
+    ):
+        r = run_scenario(wl5, geo, pol, seed=0)
         emit(
             "fig3c_wan5",
             round(r.throughput_ops_s, 2),
             "ops/s",
-            scenario=sc.value,
+            scenario=label,
             hit_rate=round(r.hit_rate, 4),
             mean_latency_ms=round(r.mean_latency_ms, 2),
         )
@@ -90,7 +95,7 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
     banner("fig3d: diurnal hot region — decay chases moving traffic")
     wld = diurnal_workload(num_requests=num_requests // 2)
     for decay in (1.0, 0.5):
-        r = run_scenario(wld, geo, Scenario.OPTIMIZED, seed=0, decay=decay)
+        r = run_scenario(wld, geo, RedynisPolicy(decay=decay), seed=0)
         emit(
             "fig3d_diurnal",
             round(r.throughput_ops_s, 2),

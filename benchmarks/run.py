@@ -6,10 +6,17 @@ One module per paper table/figure + the beyond-paper integration benches:
   fig3_skewed       paper Figure 3 (zipfian 90/10) + affinity sweep
   daemon_sweep      Algorithm 3 analysis throughput (pure JAX vs Pallas)
   capacity_sweep    hit-rate vs per-node replica budget (beyond paper)
+  policy_matrix     registered-policy head-to-head on the wan5 geo cluster
   moe_placement     hot-expert replica cache on the reduced MoE
   hot_embedding     hot-row cache hit rates + HBM bytes saved
   serving_sessions  session-cache migration vs static placement
   roofline          aggregate the dry-run sweep into the §Roofline table
+
+``--policy NAME[:k=v,...]`` selects a placement policy from the
+``repro.core.policy`` registry (e.g. ``--policy redynis:h=0.05`` or
+``--policy topk:k=50``) and is forwarded to every selected bench whose
+``main`` accepts a ``policy`` kwarg (daemon_sweep, capacity_sweep,
+policy_matrix).
 
 Every line of output in ``RESULT,name,value,unit,k=v`` form is machine
 collectable; EXPERIMENTS.md quotes them directly. The figure / sweep
@@ -20,6 +27,7 @@ wall-time) — the perf-trajectory files CI uploads as artifacts; set
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
@@ -28,6 +36,7 @@ MODULES = [
     "fig3_skewed",
     "daemon_sweep",
     "capacity_sweep",
+    "policy_matrix",
     "moe_placement",
     "hot_embedding",
     "serving_sessions",
@@ -40,19 +49,31 @@ FAST_KWARGS = {
     "fig2_uniform": {"iterations": 3, "num_requests": 50_000},
     "fig3_skewed": {"iterations": 3, "num_requests": 50_000},
     "capacity_sweep": {"num_requests": 20_000},
+    "policy_matrix": {"num_requests": 10_000},
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or MODULES
-    full = "--full" in names
-    names = [n for n in names if not n.startswith("--")]
+    args = sys.argv[1:]
+    policy = None
+    if "--policy" in args:
+        from repro.core.policy import parse_policy
+
+        at = args.index("--policy")
+        if at + 1 >= len(args):
+            raise SystemExit("--policy requires a spec, e.g. redynis:h=0.2")
+        policy = parse_policy(args[at + 1])
+        del args[at : at + 2]
+    full = "--full" in args
+    names = [n for n in args if not n.startswith("--")]
     if not names:
         names = MODULES
     t0 = time.time()
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-        kwargs = {} if full else FAST_KWARGS.get(name, {})
+        kwargs = {} if full else dict(FAST_KWARGS.get(name, {}))
+        if policy is not None and "policy" in inspect.signature(mod.main).parameters:
+            kwargs["policy"] = policy
         mod.main(**kwargs)
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s", flush=True)
 

@@ -2,7 +2,9 @@
 
 Builds a 3-node metadata cluster (the paper's testbed size), streams a
 skewed workload at it, runs the placement daemon, and shows replicas
-following traffic — then the same engine applied to MoE expert placement.
+following traffic — then the placement-policy API racing decision rules
+through the trace simulator, then the same engine applied to MoE expert
+placement.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -47,7 +49,35 @@ print(
     % (hosts[:10].sum(1).mean(), hosts[10:].sum(1).mean())
 )
 
-# --- 2. the same algorithm placing MoE experts ------------------------------
+# --- 2. placement policies as first-class values ----------------------------
+# The decision rule is a value: pass any registered policy to the trace
+# simulator (`scenario=Scenario.X` is the deprecated spelling of the same).
+from repro.kvsim import (
+    ClusterConfig,
+    RedynisPolicy,
+    StaticPolicy,
+    TopKPolicy,
+    WorkloadConfig,
+    describe_policy,
+    run_scenario,
+)
+
+wl = WorkloadConfig(num_requests=5_000, num_keys=200, skewed=True, affinity=0.7)
+cl = ClusterConfig()
+print("\npolicy head-to-head (skewed trace, 3-node testbed):")
+for pol in (
+    StaticPolicy(mode="remote"),  # the paper's worst-case baseline
+    RedynisPolicy(),  # Algorithm 3 at the starvation-safe H = 1/n
+    RedynisPolicy(h=0.05, decay=0.9),  # more replication, decayed counters
+    TopKPolicy(k=20),  # replicate the 20 globally hottest keys
+):
+    r = run_scenario(wl, cl, pol)
+    print(
+        f"  {describe_policy(pol):28s} hit={r.hit_rate:.3f} "
+        f"tput={r.throughput_ops_s:7.1f} ops/s"
+    )
+
+# --- 3. the same algorithm placing MoE experts ------------------------------
 ep = ExpertPlacement(num_layers=2, num_experts=16, num_nodes=4, slots=4, period=5)
 st = ep.init_state()
 for step in range(10):

@@ -5,6 +5,7 @@ The paper's contribution as a composable library:
   ownership   — ownership coefficient math (eqs. 1-3)
   metadata    — the per-key metadata layer (paper §6.2), struct-of-arrays
   placement   — Algorithm 3 sweep + the offline placement daemon
+  policy      — first-class placement policies (registry + shared stages)
   traffic     — access-statistics accumulators for ML-state objects
   costmodel   — TPU replication economics (beyond-paper, reduces to Alg. 3)
   repartition — plan → fused-collective enforcement with double buffering
@@ -37,7 +38,24 @@ from repro.core.placement import (
     SweepStats,
     apply_plan,
     masked_step,
+    redynis_candidates,
     sweep,
+)
+from repro.core.policy import (
+    POLICIES,
+    CostGreedyPolicy,
+    DecayLFUPolicy,
+    PolicyContext,
+    RedynisPolicy,
+    StaticPolicy,
+    TopKPolicy,
+    describe_policy,
+    make_policy,
+    parse_policy,
+    policy_masked_step,
+    policy_sweep,
+    register_policy,
+    split_policy,
 )
 from repro.core.repartition import (
     CommitState,
@@ -76,7 +94,22 @@ __all__ = [
     "SweepStats",
     "apply_plan",
     "masked_step",
+    "redynis_candidates",
     "sweep",
+    "POLICIES",
+    "CostGreedyPolicy",
+    "DecayLFUPolicy",
+    "PolicyContext",
+    "RedynisPolicy",
+    "StaticPolicy",
+    "TopKPolicy",
+    "describe_policy",
+    "make_policy",
+    "parse_policy",
+    "policy_masked_step",
+    "policy_sweep",
+    "register_policy",
+    "split_policy",
     "CommitState",
     "Moves",
     "ReplicaCache",

@@ -61,6 +61,7 @@ __all__ = [
     "PlacementPlan",
     "SweepStats",
     "SWEEP_BACKENDS",
+    "redynis_candidates",
     "sweep",
     "apply_plan",
     "masked_step",
@@ -99,6 +100,20 @@ class SweepStats(NamedTuple):
 def _expiry_enabled(expiry: int | None) -> bool:
     """Unified convention: ``None`` and ``0`` both disable expiry."""
     return expiry is not None and expiry > 0
+
+
+def redynis_candidates(store: MetadataStore, f: Array, h: Array | float) -> Array:
+    """Algorithm 3's candidate replica set from precomputed fractions:
+    eligibility (eq. 2 + starvation guard), silence keeps the current
+    placement, dead keys own nothing. This is the *decide* stage shared by
+    the legacy ``sweep`` jax path and ``core.policy.RedynisPolicy`` — one
+    definition so the two can never drift."""
+    counts, hosts, live = store.access_counts, store.hosts, store.live
+    eligible = eligible_from_fractions(f, counts, h)
+    touched = jnp.sum(counts, axis=-1) > 0
+    # Keys with no traffic keep their current placement (no churn on silence).
+    owners = jnp.where(touched[:, None], eligible, hosts)
+    return owners & live[:, None]
 
 
 @partial(jax.jit, static_argnames=("expiry", "backend"))
@@ -144,11 +159,7 @@ def sweep(
         )
     elif backend == "jax":
         f = ownership_fraction(counts)  # stage 1: fractions (eq. 1)
-        eligible = eligible_from_fractions(f, counts, h)  # stage 2: eq. 2
-        touched = jnp.sum(counts, axis=-1) > 0
-        # Keys with no traffic keep their current placement (no churn on silence).
-        owners = jnp.where(touched[:, None], eligible, hosts)
-        owners = owners & live[:, None]
+        owners = redynis_candidates(store, f, h)  # stage 2: eq. 2 + guard
 
         if _expiry_enabled(expiry):
             expired = live & (

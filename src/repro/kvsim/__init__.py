@@ -9,9 +9,24 @@ geo-distributed scenarios the paper motivates but never measures.
 
 The simulator runs the *same* core engine (metadata/ownership/placement) that
 the ML integrations use; only the latency bookkeeping is simulation-specific.
-``run_scenario`` is a single fused ``lax.scan`` program per scenario;
-``run_scenario_reference`` retains the per-chunk Python loop as the oracle.
+``run_scenario`` is a single fused ``lax.scan`` program per *policy*
+(``repro.core.policy`` — the legacy ``Scenario`` enum survives one release
+behind a deprecation shim); ``run_scenario_reference`` retains the
+per-chunk Python loop as the oracle. The placement policies are re-exported
+here for convenience.
 """
+
+from repro.core.policy import (
+    POLICIES,
+    CostGreedyPolicy,
+    DecayLFUPolicy,
+    RedynisPolicy,
+    StaticPolicy,
+    TopKPolicy,
+    describe_policy,
+    make_policy,
+    parse_policy,
+)
 
 from repro.kvsim.workload import (
     Trace,
@@ -32,6 +47,7 @@ from repro.kvsim.cluster import (
 from repro.kvsim.simulate import (
     SimResult,
     confidence_interval_99,
+    policy_from_scenario,
     run_experiment,
     run_scenario,
     run_scenario_reference,
@@ -55,4 +71,14 @@ __all__ = [
     "run_scenario_reference",
     "run_experiment",
     "confidence_interval_99",
+    "policy_from_scenario",
+    "POLICIES",
+    "CostGreedyPolicy",
+    "DecayLFUPolicy",
+    "RedynisPolicy",
+    "StaticPolicy",
+    "TopKPolicy",
+    "describe_policy",
+    "make_policy",
+    "parse_policy",
 ]

@@ -1,17 +1,28 @@
 """Trace-driven simulation of the paper's experiment (§8–§9).
 
-Reproduces the three scenarios of Figure 2/3 — Local / Remote / Optimized —
-on YCSB-style traces (``workload.py``) with the paper's latency model
-generalised to an ``[N, N]`` RTT topology (``cluster.py``). The OPTIMIZED
-scenario runs the *actual* core engine (metadata layer + ownership
-coefficient + scored placement pipeline), not a model of it: requests fold
-accesses into a :class:`repro.core.MetadataStore` and the placement daemon
-sweeps between request chunks, exactly like the paper's offline
-RedynisDaemon. With finite per-node replica budgets
-(``ClusterConfig.capacity_bytes``) the sweep's capacity projection stage
-trims adds and evicts cold replicas, and the run reports eviction /
-occupancy metrics; at the default infinite budget the projection compiles
-away and the engine is bit-identical to the paper's Algorithm 3.
+Reproduces the paper's Figure 2/3 experiment on YCSB-style traces
+(``workload.py``) with the latency model generalised to an ``[N, N]`` RTT
+topology (``cluster.py``) — under any *placement policy* from
+``repro.core.policy``. The decision rule is a first-class value::
+
+    run_scenario(workload, cluster, RedynisPolicy(h=0.2))
+    run_scenario(workload, cluster, StaticPolicy(mode="remote"))
+
+The legacy ``Scenario`` enum and its kwarg sprawl (``ownership_coefficient``
+/ ``expiry_ticks`` / ``decay`` / ``daemon_period`` / ``backend``) survive
+one release behind a deprecation shim that maps them onto policies and
+warns once with the exact replacement spelled out.
+
+An *active* policy (``policy.is_active``) runs the actual core engine —
+requests fold accesses into a :class:`repro.core.MetadataStore` and the
+policy decides between request chunks through the shared pipeline
+(fractions → decide → expiry → capacity projection), exactly like the
+paper's offline RedynisDaemon. With finite per-node replica budgets
+(``ClusterConfig.capacity_bytes``) the projection stage trims adds and
+evicts cold replicas uniformly for every policy; at the default infinite
+budget it compiles away and ``RedynisPolicy`` is bit-identical to the
+paper's Algorithm 3. Static policies freeze the replica map and the whole
+decision machinery compiles away.
 
 Execution model
 ---------------
@@ -20,19 +31,23 @@ chunk every request sees the replica map *frozen at chunk start* — this is
 the paper's non-blocking property: in-flight requests are never stalled by
 the daemon; they observe the previous placement until the sweep commits.
 Metadata updates (access logging) fold in continuously, as in Algorithm 1.
-Per-node occupancy (replica bytes) is sampled on the same frozen map, and
-``peak_occupancy_bytes`` is its running elementwise max.
+Per-node occupancy (replica bytes) is sampled on the same frozen map for
+*every* policy, and ``peak_occupancy_bytes`` is its running elementwise max
+(static policies never mutate the map, so their per-chunk peak equals the
+initial-map occupancy the seed engine reported).
 
 Two engines with identical semantics:
 
   * ``run_scenario`` — the fused fast path: ONE ``jax.lax.scan`` over
-    fixed-shape chunks with the daemon sweep ``due``-masked inside the scan
-    body (``repro.core.placement.masked_step``), so a whole scenario is a
-    single compiled program instead of one dispatch per chunk.
-    ``run_experiment`` additionally ``vmap``s the seed (CI-iteration)
-    dimension, so a full read-ratio row runs as one batched program.
-    ``backend="pallas"`` routes the sweep's [K, N] pass through the
-    ``kernels.ownership_sweep`` Pallas kernel (interpret mode off-TPU).
+    fixed-shape chunks with the policy step ``due``-masked inside the scan
+    body (``repro.core.policy.policy_masked_step``), so a whole scenario is
+    a single compiled program. The policy's *static key* is the jit static
+    while its dynamic hyperparameters (H, decay, K, thresholds) are traced
+    — re-running with new knob values never recompiles. ``run_experiment``
+    additionally ``vmap``s the seed (CI-iteration) dimension, and its
+    ``policies=[...]`` axis stacks same-family dynamic params and vmaps the
+    *policy* dimension alongside seeds — a head-to-head grid as one batched
+    program.
   * ``run_scenario_reference`` — the retained slow path: the original
     per-chunk Python loop. It exists as the regression oracle for the fused
     engine (see tests/test_simulate_equivalence.py) and accumulates in
@@ -49,6 +64,7 @@ the calibration constant (documented in EXPERIMENTS.md §Repro-assumptions).
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
@@ -58,7 +74,16 @@ import numpy as np
 from jax import Array
 
 from repro.core.metadata import create_store, record_accesses
-from repro.core.placement import PlacementDaemon, masked_step
+from repro.core.policy import (
+    PolicyContext,
+    RedynisPolicy,
+    StaticPolicy,
+    describe_policy,
+    policy_masked_step,
+    policy_repr,
+    policy_sweep,
+    split_policy,
+)
 from repro.kvsim.cluster import (
     ClusterConfig,
     Scenario,
@@ -90,13 +115,16 @@ class SimResult(NamedTuple):
     peak_occupancy_bytes: np.ndarray  # [N] peak replica bytes per node
 
 
-def _initial_hosts(natural_node: Array, num_keys: int, num_nodes: int, scenario: Scenario) -> Array:
-    """Starting replica map per scenario (paper §9 scenario definitions)."""
-    if scenario in (Scenario.LOCAL, Scenario.REPLICATED):
+def _initial_hosts(
+    natural_node: Array, num_keys: int, num_nodes: int, placement: str
+) -> Array:
+    """Starting replica map (paper §9 scenario definitions): ``"full"`` is
+    every-key-everywhere (the idealised baselines); ``"offsite"`` starts
+    each key on a single node that is *not* its natural request source
+    ("requests ... served not available on the local key-value store") —
+    the worst-case placement adaptive policies must dig out of."""
+    if placement == "full":
         return jnp.ones((num_keys, num_nodes), dtype=bool)
-    # REMOTE / OPTIMIZED: each key starts on a single node that is *not* its
-    # natural request source ("requests ... served not available on the local
-    # key-value store"), so both start from the worst-case placement.
     home = (natural_node + 1) % num_nodes
     return jax.nn.one_hot(home, num_nodes, dtype=bool)
 
@@ -108,18 +136,18 @@ def _chunk_latency(
     is_read: Array,  # [B]
     rtt: Array,  # [N, N]
     cluster: ClusterConfig,
-    scenario: Scenario,
+    read_mode: str,  # "ideal" | "no_local" | "map"
 ) -> tuple[Array, Array]:
     """Per-request latency + hit flags for one chunk under a frozen map."""
     b = keys.shape[0]
-    if scenario is Scenario.LOCAL:
+    if read_mode == "ideal":
         # The paper's "theoretically ideal scenario": everything local.
         hit = jnp.ones_like(is_read)
         return jnp.full((b,), cluster.service_ms, jnp.float32), hit & is_read
 
     replicas = hosts[keys]  # [B, N]
     hit = replicas[jnp.arange(b), nodes]
-    if scenario is Scenario.REMOTE:
+    if read_mode == "no_local":
         # "No local replicas ever": the requesting node's own copy (if any)
         # is invisible to reads, so every op pays a WAN hop; with an empty
         # visible set the orphan guard charges the topology's worst RTT —
@@ -132,7 +160,7 @@ def _chunk_latency(
 
     owner_count = jnp.sum(replicas, axis=-1)
     sole_local = hit & (owner_count == 1)
-    if scenario is Scenario.REMOTE:
+    if read_mode == "no_local":
         sole_local = jnp.zeros_like(sole_local)
     w_lat = write_latency_geo(cluster, rtt, replicas, nodes, sole_local)
 
@@ -141,7 +169,7 @@ def _chunk_latency(
 
 
 _chunk_latency_jit = jax.jit(
-    _chunk_latency, static_argnames=("cluster", "scenario")
+    _chunk_latency, static_argnames=("cluster", "read_mode")
 )
 
 
@@ -149,26 +177,6 @@ def _node_occupancy(hosts: Array, object_bytes: Array) -> Array:
     """Per-node replica bytes ``[N]`` under a replica map (both engines use
     this exact expression so their peaks agree bit-for-bit)."""
     return jnp.sum(jnp.where(hosts, object_bytes[:, None], 0.0), axis=0)
-
-
-def _make_daemon(
-    workload: WorkloadConfig,
-    ownership_coefficient: float | None,
-    expiry_ticks: int | None,
-    decay: float,
-    period: int = 1,
-    backend: str = "jax",
-) -> PlacementDaemon:
-    """Host-side construction so H is validated against N (paper eq. 3) and
-    the sweep backend is validated before any tracing happens."""
-    return PlacementDaemon(
-        num_nodes=workload.num_nodes,
-        h=ownership_coefficient,
-        expiry=expiry_ticks,
-        decay=decay,
-        period=period,
-        backend=backend,
-    )
 
 
 def _check_topology(workload: WorkloadConfig, cluster: ClusterConfig) -> None:
@@ -203,19 +211,92 @@ def _seed_store(hosts: Array, num_keys: int, num_nodes: int):
 
 
 # ---------------------------------------------------------------------------
-# Fused engine: one lax.scan over chunks, daemon due-masked inside the body.
+# The legacy Scenario enum + kwarg sprawl -> policy deprecation shim.
 # ---------------------------------------------------------------------------
 
-_SIM_STATICS = (
-    "cluster",
-    "scenario",
-    "daemon_interval",
-    "h",
-    "expiry",
+_LEGACY_KWARGS = (
+    "ownership_coefficient",
+    "expiry_ticks",
     "decay",
-    "period",
+    "daemon_period",
     "backend",
 )
+_WARNED_LEGACY: set[str] = set()
+
+
+def policy_from_scenario(
+    scenario: Scenario,
+    ownership_coefficient: float | None = None,
+    expiry_ticks: int | None = None,
+    decay: float | None = None,
+    daemon_period: int | None = None,
+    backend: str | None = None,
+):
+    """Map a legacy ``Scenario`` (+ daemon kwargs) onto its policy."""
+    if scenario is Scenario.OPTIMIZED:
+        return RedynisPolicy(
+            h=ownership_coefficient,
+            expiry=0 if expiry_ticks is None else expiry_ticks,
+            decay=1.0 if decay is None else decay,
+            period=1 if daemon_period is None else daemon_period,
+            backend="jax" if backend is None else backend,
+        )
+    return StaticPolicy(mode=scenario.value)
+
+
+def _coerce_policy(caller: str, policy, scenario, num_nodes: int, legacy: dict):
+    """Resolve the (policy | legacy scenario/kwargs) call forms into a
+    policy, emitting the one-shot DeprecationWarning for legacy spellings."""
+    if isinstance(policy, Scenario):
+        policy, scenario = None, policy
+    passed = {k: v for k, v in legacy.items() if v is not None}
+    if policy is not None:
+        if scenario is not None or passed:
+            extras = (["scenario"] if scenario is not None else []) + sorted(passed)
+            raise ValueError(
+                f"{caller}: pass either policy= or the legacy scenario=/"
+                f"daemon kwargs, not both (got policy={policy!r} and {extras})"
+            )
+        return policy
+    if scenario is None:
+        raise ValueError(
+            f"{caller}: a policy is required — e.g. RedynisPolicy() or "
+            f"StaticPolicy(mode='local')"
+        )
+    # Legacy daemon kwargs were validated even for static scenarios (the
+    # old engine always constructed a PlacementDaemon); preserve that.
+    probe = policy_from_scenario(Scenario.OPTIMIZED, **legacy)
+    probe.resolve(num_nodes).validate(num_nodes)
+    mapped = policy_from_scenario(scenario, **legacy)
+    old = ", ".join(
+        [f"scenario=Scenario.{scenario.name}"]
+        + [f"{k}={v!r}" for k, v in passed.items()]
+    )
+    msg = (
+        f"{caller}({old}) is deprecated; use {caller}(policy="
+        f"{policy_repr(mapped)}) instead. The scenario= enum and the legacy "
+        f"daemon kwargs ({', '.join(_LEGACY_KWARGS)}) will be removed in "
+        f"the next release."
+    )
+    if msg not in _WARNED_LEGACY:
+        _WARNED_LEGACY.add(msg)
+        warnings.warn(msg, DeprecationWarning, stacklevel=4)
+    return mapped
+
+
+def _prepare(workload, cluster, caller, policy, scenario, legacy):
+    _check_topology(workload, cluster)
+    policy = _coerce_policy(caller, policy, scenario, workload.num_nodes, legacy)
+    policy = policy.resolve(workload.num_nodes)
+    policy.validate(workload.num_nodes)
+    return split_policy(policy)
+
+
+# ---------------------------------------------------------------------------
+# Fused engine: one lax.scan over chunks, policy due-masked inside the body.
+# ---------------------------------------------------------------------------
+
+_SIM_STATICS = ("cluster", "policy", "daemon_interval")
 
 
 def _simulate(
@@ -224,15 +305,11 @@ def _simulate(
     is_read: Array,  # [R]
     natural: Array,  # [K]
     object_bytes: Array,  # [K]
+    params: dict,  # the policy's dynamic hyperparameters (traced)
     *,
     cluster: ClusterConfig,
-    scenario: Scenario,
+    policy,  # static key from split_policy (hashable jit static)
     daemon_interval: int,
-    h: float,
-    expiry: int | None,
-    decay: float,
-    period: int,
-    backend: str,
 ):
     """Whole-scenario simulation as a single fixed-shape scan program.
 
@@ -244,10 +321,14 @@ def _simulate(
     num_keys = natural.shape[0]
     n = cluster.num_nodes
     rtt = cluster.rtt_matrix()
+    obj = jnp.asarray(object_bytes, jnp.float32)
     # Host-side static: at the default infinite budget the projection stage
     # is skipped entirely (capacity=None), keeping Algorithm 3 bit-exact.
     capacity = (
         cluster.capacity_vector() if cluster.has_finite_capacity else None
+    )
+    ctx = PolicyContext(
+        rtt=rtt, object_bytes=obj, capacity_bytes=capacity, params=params
     )
 
     num_chunks = -(-r // daemon_interval)
@@ -268,11 +349,16 @@ def _simulate(
         ),
     )
 
-    store = _seed_store(_initial_hosts(natural, num_keys, n, scenario), num_keys, n)
-    obj = jnp.asarray(object_bytes, jnp.float32)
+    store = _seed_store(
+        _initial_hosts(natural, num_keys, n, policy.initial_placement),
+        num_keys,
+        n,
+    )
+    pstate = policy.init(store, ctx)
     zero = jnp.float32(0.0)
     init = (
         store,
+        pstate,
         jnp.zeros((n,), jnp.float32),  # busy
         zero,  # lat_sum
         zero,  # hits
@@ -281,46 +367,43 @@ def _simulate(
         zero,  # drop
         zero,  # evic (expiry)
         zero,  # cap_evic
-        # Peak occupancy starts at the initial map; only OPTIMIZED mutates
-        # the map, so only its scan body re-samples occupancy per chunk.
-        _node_occupancy(store.hosts, obj),
+        _node_occupancy(store.hosts, obj),  # peak (seeded by the initial map)
     )
 
     def body(carry, x):
-        store, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak = carry
+        (
+            store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
+            cap_evic, peak,
+        ) = carry
         c, ck, cn, cr, cv = x
-        lat, read_hits = _chunk_latency(store.hosts, ck, cn, cr, rtt, cluster, scenario)
+        lat, read_hits = _chunk_latency(
+            store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
+        )
         lat = jnp.where(cv, lat, 0.0)
         busy = busy.at[cn].add(lat)
         lat_sum = lat_sum + jnp.sum(lat)
         hits = hits + jnp.sum((read_hits & cv).astype(jnp.float32))
         reads = reads + jnp.sum((cr & cv).astype(jnp.float32))
-        if scenario is Scenario.OPTIMIZED:
-            # Occupancy is sampled on the same frozen-at-chunk-start map the
-            # requests see (the initial placement seeds the peak).
-            peak = jnp.maximum(peak, _node_occupancy(store.hosts, obj))
+        # Occupancy is sampled per chunk for EVERY policy, on the same
+        # frozen-at-chunk-start map the requests see (the initial placement
+        # seeds the peak; static policies never change it).
+        peak = jnp.maximum(peak, _node_occupancy(store.hosts, obj))
+        if policy.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, ck, cn, now=c, valid=cv)
-            stats, store = masked_step(
-                store,
-                c,
-                (c % period) == 0,
-                h=h,
-                expiry=expiry,
-                decay=decay,
-                object_bytes=obj,
-                capacity_bytes=capacity,
-                backend=backend,
+            stats, pstate, store = policy_masked_step(
+                policy, pstate, store, c, (c % policy.period) == 0, ctx
             )
             repl = repl + stats.adds
             drop = drop + stats.drops
             evic = evic + stats.expiry_evictions
             cap_evic = cap_evic + stats.capacity_evictions
         return (
-            store, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak
+            store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
+            cap_evic, peak,
         ), None
 
-    (_, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), _ = (
+    (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), _ = (
         jax.lax.scan(body, init, xs)
     )
     makespan_ms = jnp.max(busy)
@@ -341,11 +424,25 @@ _simulate_jit = partial(jax.jit, static_argnames=_SIM_STATICS)(_simulate)
 
 
 @partial(jax.jit, static_argnames=_SIM_STATICS)
-def _simulate_batch(keys, nodes, is_read, natural, object_bytes, **statics):
-    """Seed-batched fused engine: vmap over the leading (iteration) axis."""
-    return jax.vmap(lambda a, b, c, d, e: _simulate(a, b, c, d, e, **statics))(
-        keys, nodes, is_read, natural, object_bytes
-    )
+def _simulate_batch(keys, nodes, is_read, natural, object_bytes, params, **statics):
+    """Seed-batched fused engine: vmap over the leading (iteration) axis of
+    the trace; the policy's dynamic params are broadcast."""
+    return jax.vmap(
+        lambda a, b, c, d, e: _simulate(a, b, c, d, e, params, **statics)
+    )(keys, nodes, is_read, natural, object_bytes)
+
+
+@partial(jax.jit, static_argnames=_SIM_STATICS)
+def _simulate_grid(keys, nodes, is_read, natural, object_bytes, params, **statics):
+    """Policy-grid engine: vmap the policy-parameter axis (leading ``[P]``
+    on every ``params`` leaf) around the seed-batched engine — a whole
+    same-family head-to-head grid as ONE compiled program, result leaves
+    shaped ``[P, S, ...]``."""
+    return jax.vmap(
+        lambda p: jax.vmap(
+            lambda a, b, c, d, e: _simulate(a, b, c, d, e, p, **statics)
+        )(keys, nodes, is_read, natural, object_bytes)
+    )(params)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -357,26 +454,37 @@ def _traces_for_seeds(cfg: WorkloadConfig, seeds: Array) -> Trace:
 def run_scenario(
     workload: WorkloadConfig,
     cluster: ClusterConfig,
-    scenario: Scenario,
+    policy=None,
     seed: int = 0,
     daemon_interval: int = 1000,
+    *,
+    scenario: Scenario | None = None,
     ownership_coefficient: float | None = None,
     expiry_ticks: int | None = None,
-    decay: float = 1.0,
-    daemon_period: int = 1,
-    backend: str = "jax",
+    decay: float | None = None,
+    daemon_period: int | None = None,
+    backend: str | None = None,
 ) -> SimResult:
-    """Simulate one scenario over one generated trace (fused scan engine).
+    """Simulate one policy over one generated trace (fused scan engine).
 
-    daemon_period: sweep every `daemon_period`-th chunk (1 = every chunk);
-    off chunks take the not-due branch of `masked_step`.
-    backend: "jax" or "pallas" — which sweep backend the daemon routes its
-    [K, N] analysis pass through.
+    policy: a ``repro.core.policy`` instance — ``RedynisPolicy(...)``,
+        ``StaticPolicy(mode=...)``, ``TopKPolicy(...)``, ... The policy
+        carries every decision hyperparameter (H, expiry, decay, period,
+        sweep backend); ``daemon_interval`` stays an engine argument (the
+        chunking granularity both engines share).
+    scenario / ownership_coefficient / expiry_ticks / decay / daemon_period
+        / backend: DEPRECATED legacy spelling, mapped onto a policy with a
+        one-shot warning quoting the exact replacement.
     """
-    _check_topology(workload, cluster)
-    daemon = _make_daemon(
-        workload, ownership_coefficient, expiry_ticks, decay, daemon_period,
-        backend,
+    static, params = _prepare(
+        workload, cluster, "run_scenario", policy, scenario,
+        dict(
+            ownership_coefficient=ownership_coefficient,
+            expiry_ticks=expiry_ticks,
+            decay=decay,
+            daemon_period=daemon_period,
+            backend=backend,
+        ),
     )
     trace = generate_trace(workload, seed)
     tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = _simulate_jit(
@@ -385,14 +493,10 @@ def run_scenario(
         trace.is_read,
         trace.natural_node,
         trace.object_bytes,
+        params,
         cluster=cluster,
-        scenario=scenario,
+        policy=static,
         daemon_interval=daemon_interval,
-        h=daemon.h,
-        expiry=daemon.expiry,
-        decay=daemon.decay,
-        period=daemon.period,
-        backend=daemon.backend,
     )
     return SimResult(
         throughput_ops_s=float(tput),
@@ -415,32 +519,45 @@ def run_scenario(
 def run_scenario_reference(
     workload: WorkloadConfig,
     cluster: ClusterConfig,
-    scenario: Scenario,
+    policy=None,
     seed: int = 0,
     daemon_interval: int = 1000,
+    *,
+    scenario: Scenario | None = None,
     ownership_coefficient: float | None = None,
     expiry_ticks: int | None = None,
-    decay: float = 1.0,
-    daemon_period: int = 1,
-    backend: str = "jax",
+    decay: float | None = None,
+    daemon_period: int | None = None,
+    backend: str | None = None,
 ) -> SimResult:
-    """Slow-path reference: one host dispatch per chunk, daemon stepped with
-    Python control flow. Semantically identical to :func:`run_scenario`."""
-    _check_topology(workload, cluster)
+    """Slow-path reference: one host dispatch per chunk, the policy stepped
+    with Python control flow. Semantically identical to :func:`run_scenario`
+    (same policy protocol, same shared stages)."""
+    static, params = _prepare(
+        workload, cluster, "run_scenario_reference", policy, scenario,
+        dict(
+            ownership_coefficient=ownership_coefficient,
+            expiry_ticks=expiry_ticks,
+            decay=decay,
+            daemon_period=daemon_period,
+            backend=backend,
+        ),
+    )
     trace = generate_trace(workload, seed)
     k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
     rtt = cluster.rtt_matrix()
     capacity = (
         cluster.capacity_vector() if cluster.has_finite_capacity else None
     )
+    obj = jnp.asarray(trace.object_bytes, jnp.float32)
+    ctx = PolicyContext(
+        rtt=rtt, object_bytes=obj, capacity_bytes=capacity, params=params
+    )
 
-    daemon = _make_daemon(
-        workload, ownership_coefficient, expiry_ticks, decay, daemon_period,
-        backend,
-    )
     store = _seed_store(
-        _initial_hosts(trace.natural_node, k, n, scenario), k, n
+        _initial_hosts(trace.natural_node, k, n, static.initial_placement), k, n
     )
+    pstate = static.init(store, ctx)
 
     total_lat = np.zeros((n,), dtype=np.float64)
     hits = 0.0
@@ -451,7 +568,7 @@ def run_scenario_reference(
     evictions = 0.0
     cap_evictions = 0.0
     peak_occ = np.asarray(
-        _node_occupancy(store.hosts, trace.object_bytes), dtype=np.float64
+        _node_occupancy(store.hosts, obj), dtype=np.float64
     )
 
     num_chunks = (r + daemon_interval - 1) // daemon_interval
@@ -462,7 +579,7 @@ def run_scenario_reference(
         is_read = trace.is_read[lo:hi]
 
         lat, read_hits = _chunk_latency_jit(
-            store.hosts, keys, nodes, is_read, rtt, cluster, scenario
+            store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
@@ -470,22 +587,16 @@ def run_scenario_reference(
         hits += float(jnp.sum(read_hits))
         reads += float(jnp.sum(is_read))
 
-        if scenario is Scenario.OPTIMIZED:
-            peak_occ = np.maximum(
-                peak_occ,
-                np.asarray(
-                    _node_occupancy(store.hosts, trace.object_bytes),
-                    dtype=np.float64,
-                ),
-            )
+        # Per-chunk occupancy sample on the frozen map, for every policy.
+        peak_occ = np.maximum(
+            peak_occ, np.asarray(_node_occupancy(store.hosts, obj), np.float64)
+        )
+        if static.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, keys, nodes, now=c)
-            if daemon.due(c):
-                plan, store = daemon.step(
-                    store,
-                    now=c,
-                    object_bytes=trace.object_bytes,
-                    capacity_bytes=capacity,
+            if c % static.period == 0:
+                plan, pstate, store = policy_sweep(
+                    static, pstate, store, c, ctx
                 )
                 repl_moves += float(jnp.sum(plan.to_add))
                 drop_moves += float(jnp.sum(plan.to_drop))
@@ -518,6 +629,77 @@ def confidence_interval_99(samples: np.ndarray) -> tuple[float, float]:
     return mean, 2.576 * sem
 
 
+# ---------------------------------------------------------------------------
+# Batched experiments: seeds vmapped, same-family policy params vmapped too.
+# ---------------------------------------------------------------------------
+
+
+def _result_from_leaves(leaves, seed_idx: int) -> SimResult:
+    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
+    return SimResult(
+        throughput_ops_s=float(tput[seed_idx]),
+        hit_rate=float(hit[seed_idx]),
+        mean_latency_ms=float(mean_lat[seed_idx]),
+        node_busy_ms=np.asarray(busy[seed_idx], dtype=np.float64),
+        replication_moves=float(repl[seed_idx]),
+        deletion_moves=float(drop[seed_idx]),
+        evictions=float(evic[seed_idx]),
+        capacity_evictions=float(cap_evic[seed_idx]),
+        peak_occupancy_bytes=np.asarray(peak[seed_idx], dtype=np.float64),
+    )
+
+
+def _batched_policy_rows(policies, wl, cluster, iterations, daemon_interval):
+    """All policies × all seeds for one workload: same-family policies
+    (identical static key) have their dynamic params stacked and the policy
+    axis vmapped alongside the seed axis. Returns ``(per-policy leaves,
+    number of compiled-program invocations)``."""
+    traces = _traces_for_seeds(wl, jnp.arange(iterations, dtype=jnp.int32))
+    trace_args = (
+        traces.keys, traces.nodes, traces.is_read, traces.natural_node,
+        traces.object_bytes,
+    )
+    statics = dict(cluster=cluster, daemon_interval=daemon_interval)
+
+    groups: dict = {}  # static key -> list of (position, params)
+    for i, pol in enumerate(policies):
+        static, params = split_policy(pol)
+        groups.setdefault(static, []).append((i, params))
+
+    out: list = [None] * len(policies)
+    calls = 0
+    for static, members in groups.items():
+        if members[0][1] and len(members) > 1:
+            # Same family, different knobs: stack each dynamic field into a
+            # [P] vector and vmap the policy axis — ONE batched program.
+            stacked = {
+                key: jnp.asarray([params[key] for _, params in members],
+                                 jnp.float32)
+                for key in members[0][1]
+            }
+            leaves = _simulate_grid(
+                *trace_args, stacked, policy=static, **statics
+            )
+            calls += 1
+            for p, (i, _) in enumerate(members):
+                out[i] = tuple(leaf[p] for leaf in leaves)
+        else:
+            for i, params in members:
+                out[i] = _simulate_batch(
+                    *trace_args, params, policy=static, **statics
+                )
+                calls += 1
+    return out, calls
+
+
+def _policies_for_scenarios(backend: str):
+    """The legacy default grid — all four Scenario values — as policies."""
+    return [
+        (sc.value, policy_from_scenario(sc, backend=backend))
+        for sc in Scenario
+    ]
+
+
 def run_experiment(
     read_fractions: tuple[float, ...] = (1.0, 0.9, 0.75, 0.5),
     skewed: bool = False,
@@ -527,70 +709,102 @@ def run_experiment(
     engine: str = "scan",
     daemon_interval: int = 1000,
     backend: str = "jax",
+    policies=None,
     **workload_kwargs,
 ) -> dict:
-    """Paper Figure 2/3: all scenarios × read ratios, with 99% CIs.
+    """Paper Figure 2/3 grid — and its generalisation to arbitrary policy
+    head-to-heads — with 99% CIs over repeated iterations.
 
-    engine="scan" (default) runs every CI iteration of a read-ratio row as
-    one vmapped program; engine="reference" replays the retained per-chunk
-    Python loop (the oracle the equivalence tests pin the scan engine to).
-    backend selects the daemon's sweep backend ("jax" | "pallas").
+    policies: optional list of ``repro.core.policy`` instances. When given,
+        the result dict maps each policy's label (``describe_policy``) to
+        its read-fraction rows under ``"policies"``, each row carrying the
+        aggregate stats AND the per-seed :class:`SimResult`s under
+        ``"results"``. Same-family policies (e.g. four ``RedynisPolicy``
+        variants) are batched into ONE compiled program per read ratio: the
+        dynamic-parameter axis is vmapped alongside the seed axis
+        (``"num_batched_calls"`` reports how many programs actually ran).
+        When omitted, the legacy Figure 2/3 grid runs (all four scenarios,
+        reported under ``"scenarios"`` exactly as before).
+    engine: "scan" (default) runs every CI iteration as one vmapped
+        program; "reference" replays the retained per-chunk Python loop
+        (the oracle the equivalence tests pin the scan engine to).
+    backend: legacy-grid only — the Redynis sweep backend ("jax"|"pallas");
+        policies carry their own backend field.
     """
     if cluster is None:
         cluster = ClusterConfig()
     workload_kwargs.setdefault("num_nodes", cluster.num_nodes)
     if engine not in ("scan", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
-    out: dict = {"skewed": skewed, "read_fractions": list(read_fractions), "scenarios": {}}
-    for scenario in Scenario:
-        rows = []
-        for rf in read_fractions:
-            wl = WorkloadConfig(
-                num_requests=num_requests,
-                read_fraction=rf,
-                skewed=skewed,
-                **workload_kwargs,
+
+    legacy = policies is None
+    if legacy:
+        named = [
+            (label, pol.resolve(cluster.num_nodes))
+            for label, pol in _policies_for_scenarios(backend)
+        ]
+    else:
+        named = []
+        for pol in policies:
+            pol = pol.resolve(cluster.num_nodes)
+            pol.validate(cluster.num_nodes)
+            named.append((describe_policy(pol), pol))
+        if len({label for label, _ in named}) != len(named):
+            raise ValueError(
+                f"duplicate policy labels in {[l for l, _ in named]}; "
+                f"vary at least one hyperparameter per entry"
             )
-            if engine == "reference":
-                samples = np.array(
-                    [
-                        run_scenario_reference(
-                            wl, cluster, scenario, seed=it,
-                            daemon_interval=daemon_interval, backend=backend,
-                        ).throughput_ops_s
-                        for it in range(iterations)
-                    ]
-                )
-                hit = run_scenario_reference(
-                    wl, cluster, scenario, seed=0,
-                    daemon_interval=daemon_interval, backend=backend,
-                ).hit_rate
-            else:
-                _check_topology(wl, cluster)
-                daemon = _make_daemon(wl, None, None, 1.0, 1, backend)
-                traces = _traces_for_seeds(
-                    wl, jnp.arange(iterations, dtype=jnp.int32)
-                )
-                tput, hit_b, *_ = _simulate_batch(
-                    traces.keys,
-                    traces.nodes,
-                    traces.is_read,
-                    traces.natural_node,
-                    traces.object_bytes,
-                    cluster=cluster,
-                    scenario=scenario,
-                    daemon_interval=daemon_interval,
-                    h=daemon.h,
-                    expiry=daemon.expiry,
-                    decay=daemon.decay,
-                    period=daemon.period,
-                    backend=daemon.backend,
-                )
-                samples = np.asarray(tput, dtype=np.float64)
-                hit = float(hit_b[0])
+    labels = [label for label, _ in named]
+    pols = [pol for _, pol in named]
+
+    out: dict = {
+        "skewed": skewed,
+        "read_fractions": list(read_fractions),
+        ("scenarios" if legacy else "policies"): {label: [] for label in labels},
+        "num_batched_calls": 0,
+    }
+    table = out["scenarios" if legacy else "policies"]
+    for rf in read_fractions:
+        wl = WorkloadConfig(
+            num_requests=num_requests,
+            read_fraction=rf,
+            skewed=skewed,
+            **workload_kwargs,
+        )
+        _check_topology(wl, cluster)
+        if engine == "reference":
+            per_policy = [
+                [
+                    run_scenario_reference(
+                        wl, cluster, pol, seed=it,
+                        daemon_interval=daemon_interval,
+                    )
+                    for it in range(iterations)
+                ]
+                for pol in pols
+            ]
+        else:
+            leaves, calls = _batched_policy_rows(
+                pols, wl, cluster, iterations, daemon_interval
+            )
+            out["num_batched_calls"] += calls
+            per_policy = [
+                [_result_from_leaves(pl, it) for it in range(iterations)]
+                for pl in leaves
+            ]
+        for label, results in zip(labels, per_policy):
+            samples = np.array([r.throughput_ops_s for r in results])
             mean, ci = confidence_interval_99(samples)
-            rows.append(
-                {"read_fraction": rf, "throughput": mean, "ci99": ci, "hit_rate": hit}
-            )
-        out["scenarios"][scenario.value] = rows
+            row = {
+                "read_fraction": rf,
+                "throughput": mean,
+                "ci99": ci,
+                "hit_rate": results[0].hit_rate,
+            }
+            if not legacy:
+                row["mean_latency_ms"] = float(
+                    np.mean([r.mean_latency_ms for r in results])
+                )
+                row["results"] = results
+            table[label].append(row)
     return out

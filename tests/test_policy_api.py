@@ -1,0 +1,213 @@
+"""Policy registry / CLI parsing / validation / deprecation ergonomics."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.policy import (
+    POLICIES,
+    CostGreedyPolicy,
+    DecayLFUPolicy,
+    RedynisPolicy,
+    StaticPolicy,
+    TopKPolicy,
+    describe_policy,
+    make_policy,
+    parse_policy,
+    policy_repr,
+    split_policy,
+)
+from repro.kvsim import (
+    ClusterConfig,
+    Scenario,
+    WorkloadConfig,
+    run_scenario,
+)
+from repro.kvsim.simulate import _WARNED_LEGACY, policy_from_scenario
+
+
+def test_registry_contains_all_builtins():
+    assert set(POLICIES) >= {"redynis", "static", "topk", "costgreedy", "decaylfu"}
+    for name, cls in POLICIES.items():
+        pol = cls().resolve(4)
+        pol.validate(4)
+        assert describe_policy(pol).startswith(name)
+
+
+def test_parse_policy_specs():
+    assert parse_policy("redynis") == RedynisPolicy()
+    assert parse_policy("redynis:h=0.2,decay=0.9") == RedynisPolicy(h=0.2, decay=0.9)
+    assert parse_policy("topk:k=50") == TopKPolicy(k=50)
+    assert parse_policy("static:mode=remote") == StaticPolicy(mode="remote")
+    assert parse_policy("decaylfu:alpha=0.3,period=2") == DecayLFUPolicy(
+        alpha=0.3, period=2
+    )
+    # Bare scenario-style aliases.
+    assert parse_policy("local") == StaticPolicy(mode="local")
+    assert parse_policy("remote") == StaticPolicy(mode="remote")
+    assert parse_policy("replicated") == StaticPolicy(mode="replicated")
+    with pytest.raises(ValueError, match="unknown policy"):
+        parse_policy("nope")
+    with pytest.raises(ValueError, match="expected k=v"):
+        parse_policy("redynis:h")
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("bogus")
+
+
+def test_policies_are_distinct_by_class():
+    """Equal field tuples across families must NOT compare equal (they are
+    jit statics and grouping keys)."""
+    a = TopKPolicy(k=1.0, decay=1.0, period=1)
+    b = CostGreedyPolicy(min_saved_ms_per_kib=1.0, decay=1.0, period=1)
+    assert tuple(a) == tuple(b)  # the trap this guards against
+    assert a != b
+    assert hash(a) != hash(b)
+    assert a == TopKPolicy(k=1.0)
+    sa, _ = split_policy(a)
+    sb, _ = split_policy(b)
+    assert sa != sb and len({sa, sb}) == 2
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="ownership coefficient"):
+        RedynisPolicy(h=0.9).validate(3)
+    with pytest.raises(ValueError, match="decay"):
+        RedynisPolicy(decay=0.0).resolve(3).validate(3)
+    with pytest.raises(ValueError, match="backend"):
+        RedynisPolicy(backend="cuda").resolve(3).validate(3)
+    with pytest.raises(ValueError, match="expiry"):
+        RedynisPolicy(expiry=-1).resolve(3).validate(3)
+    with pytest.raises(ValueError, match="mode"):
+        StaticPolicy(mode="weird").validate(3)
+    with pytest.raises(ValueError, match="alpha"):
+        DecayLFUPolicy(alpha=1.5).resolve(3).validate(3)
+    with pytest.raises(ValueError, match="non-negative"):
+        TopKPolicy(k=-3).validate(3)
+    with pytest.raises(ValueError, match="period"):
+        TopKPolicy(period=0).validate(3)
+
+
+def test_split_policy_round_trip():
+    pol = RedynisPolicy(h=0.2, expiry=5, decay=0.7, period=3, backend="jax")
+    static, params = split_policy(pol)
+    assert params == {"h": 0.2, "decay": 0.7}
+    assert static.expiry == 5 and static.period == 3
+    # Same family, different knobs -> SAME static key (shared jit cache).
+    static2, params2 = split_policy(RedynisPolicy(h=0.1, expiry=5, period=3))
+    assert static == static2
+    assert params2["h"] == 0.1
+
+
+def test_describe_and_repr_show_non_defaults_only():
+    assert describe_policy(RedynisPolicy()) == "redynis"
+    assert describe_policy(RedynisPolicy(h=0.2)) == "redynis(h=0.2)"
+    assert policy_repr(RedynisPolicy(h=0.2, decay=0.5)) == (
+        "RedynisPolicy(h=0.2, decay=0.5)"
+    )
+    assert policy_repr(StaticPolicy(mode="remote")) == "StaticPolicy(mode='remote')"
+    # mode is ALWAYS labelled, so the 'local' baseline is never ambiguous.
+    assert describe_policy(StaticPolicy()) == "static(mode='local')"
+    assert policy_repr(StaticPolicy()) == "StaticPolicy(mode='local')"
+
+
+def test_policy_from_scenario_mapping():
+    assert policy_from_scenario(Scenario.LOCAL) == StaticPolicy(mode="local")
+    assert policy_from_scenario(Scenario.REMOTE) == StaticPolicy(mode="remote")
+    assert policy_from_scenario(Scenario.REPLICATED) == StaticPolicy(
+        mode="replicated"
+    )
+    assert policy_from_scenario(
+        Scenario.OPTIMIZED, ownership_coefficient=0.2, decay=0.5
+    ) == RedynisPolicy(h=0.2, decay=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation ergonomics (satellite: exact replacement, warns once).
+# ---------------------------------------------------------------------------
+
+_WL = WorkloadConfig(num_requests=500, num_keys=50)
+_CL = ClusterConfig()
+
+
+def test_legacy_scenario_warns_with_exact_replacement():
+    _WARNED_LEGACY.clear()
+    with pytest.warns(DeprecationWarning) as rec:
+        run_scenario(
+            _WL, _CL, Scenario.OPTIMIZED, seed=0, ownership_coefficient=0.25
+        )
+    (w,) = rec.list
+    msg = str(w.message)
+    assert "run_scenario(scenario=Scenario.OPTIMIZED, ownership_coefficient=0.25)" in msg
+    assert "policy=RedynisPolicy(h=0.25)" in msg
+    assert "removed in the next release" in msg
+
+
+def test_legacy_scenario_warns_once_per_spelling():
+    _WARNED_LEGACY.clear()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_scenario(_WL, _CL, Scenario.LOCAL, seed=0)
+        run_scenario(_WL, _CL, Scenario.LOCAL, seed=1)  # same spelling: silent
+        run_scenario(_WL, _CL, scenario=Scenario.REMOTE, seed=0)  # new spelling
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 2
+    assert "StaticPolicy(mode='local')" in str(dep[0].message)
+    assert "StaticPolicy(mode='remote')" in str(dep[1].message)
+
+
+def test_policy_and_legacy_kwargs_are_mutually_exclusive():
+    with pytest.raises(ValueError, match="not both"):
+        run_scenario(_WL, _CL, RedynisPolicy(), ownership_coefficient=0.2)
+    with pytest.raises(ValueError, match="not both"):
+        run_scenario(_WL, _CL, RedynisPolicy(), scenario=Scenario.OPTIMIZED)
+    with pytest.raises(ValueError, match="policy is required"):
+        run_scenario(_WL, _CL)
+
+
+def test_legacy_kwargs_still_validated_for_static_scenarios():
+    """The old engine constructed (and validated) a daemon even for static
+    scenarios; the shim preserves those errors."""
+    with pytest.raises(ValueError, match="ownership coefficient"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            run_scenario(_WL, _CL, Scenario.LOCAL, ownership_coefficient=0.9)
+
+
+# ---------------------------------------------------------------------------
+# Behavioural sanity of the new decision rules.
+# ---------------------------------------------------------------------------
+
+
+def test_topk_replicates_globally_hottest_keys():
+    wl = WorkloadConfig(num_requests=4_000, num_keys=100, skewed=True, affinity=0.5)
+    cl = ClusterConfig()
+    few = run_scenario(wl, cl, TopKPolicy(k=5), seed=0)
+    many = run_scenario(wl, cl, TopKPolicy(k=100), seed=0)
+    assert many.hit_rate > few.hit_rate
+    assert many.replication_moves > few.replication_moves
+
+
+def test_costgreedy_threshold_gates_growth():
+    wl = WorkloadConfig(num_requests=4_000, num_keys=100, skewed=True, affinity=0.6)
+    cl = ClusterConfig()
+    eager = run_scenario(wl, cl, CostGreedyPolicy(min_saved_ms_per_kib=10.0), seed=0)
+    frugal = run_scenario(
+        wl, cl, CostGreedyPolicy(min_saved_ms_per_kib=1e6), seed=0
+    )
+    assert eager.replication_moves > frugal.replication_moves
+    assert eager.hit_rate >= frugal.hit_rate
+    assert frugal.replication_moves == 0.0  # nothing ever clears the bar
+
+
+def test_decaylfu_chases_moving_traffic():
+    """On a diurnal workload a fast-decaying LFU must beat raw counters
+    (the same reason the engine-level count decay exists)."""
+    from repro.kvsim import diurnal_workload, wan5_cluster
+
+    wl = diurnal_workload(num_requests=8_000, num_keys=200)
+    cl = wan5_cluster()
+    sticky = run_scenario(wl, cl, DecayLFUPolicy(alpha=1.0), seed=0)
+    chasing = run_scenario(wl, cl, DecayLFUPolicy(alpha=0.2), seed=0)
+    assert chasing.hit_rate >= sticky.hit_rate - 1e-6
+    assert np.isfinite(chasing.throughput_ops_s)

@@ -1,0 +1,310 @@
+"""Policy-API regression guards.
+
+1. ``RedynisPolicy`` / ``StaticPolicy`` must reproduce the legacy
+   ``Scenario`` enum paths *field-for-field* on all four scenarios, through
+   BOTH engines (fused scan + per-chunk reference) and BOTH sweep backends
+   (jax + pallas) — the enum shim and the policy-native spelling are the
+   same program, so results are bit-identical, not merely close.
+2. Every registered policy respects per-node capacity budgets: the shared
+   projection stage is not optional (hypothesis property test).
+3. The batched ``run_experiment(policies=[...])`` grid agrees with
+   single-policy runs and vmaps same-family dynamic params into one
+   compiled program.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metadata import create_store
+from repro.core.policy import (
+    POLICIES,
+    PolicyContext,
+    RedynisPolicy,
+    StaticPolicy,
+    policy_sweep,
+    split_policy,
+)
+from repro.kvsim import (
+    ClusterConfig,
+    Scenario,
+    SimResult,
+    WorkloadConfig,
+    run_experiment,
+    run_scenario,
+    run_scenario_reference,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def assert_results_equal(a: SimResult, b: SimResult, ctx: str = ""):
+    """Bit-identical, not allclose: both spellings must be the same program."""
+    for field, x, y in zip(SimResult._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{ctx} {field}"
+        )
+
+
+def _legacy(runner, wl, cl, scenario, **kwargs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return runner(wl, cl, scenario, **kwargs)
+
+
+ENUM_TO_POLICY = [
+    (Scenario.LOCAL, StaticPolicy(mode="local")),
+    (Scenario.REMOTE, StaticPolicy(mode="remote")),
+    (Scenario.REPLICATED, StaticPolicy(mode="replicated")),
+    (Scenario.OPTIMIZED, RedynisPolicy()),
+]
+
+
+@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
+@pytest.mark.parametrize("scenario,policy", ENUM_TO_POLICY)
+def test_policy_matches_legacy_enum_both_engines(runner, scenario, policy):
+    wl = WorkloadConfig(num_requests=3_000, num_keys=150, skewed=True)
+    cl = ClusterConfig()
+    a = _legacy(runner, wl, cl, scenario, seed=2, daemon_interval=500)
+    b = runner(wl, cl, policy, seed=2, daemon_interval=500)
+    assert_results_equal(a, b, f"{runner.__name__} {scenario.value}")
+
+
+@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
+def test_redynis_policy_matches_legacy_kwargs(runner):
+    """The full legacy kwarg sprawl maps onto RedynisPolicy fields."""
+    wl = WorkloadConfig(num_requests=2_000, num_keys=100, skewed=True, affinity=0.8)
+    cl = ClusterConfig()
+    a = _legacy(
+        runner, wl, cl, Scenario.OPTIMIZED, seed=1, daemon_interval=250,
+        ownership_coefficient=0.2, expiry_ticks=4, decay=0.5, daemon_period=2,
+    )
+    b = runner(
+        wl, cl, RedynisPolicy(h=0.2, expiry=4, decay=0.5, period=2),
+        seed=1, daemon_interval=250,
+    )
+    assert_results_equal(a, b, runner.__name__)
+
+
+@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
+def test_redynis_policy_matches_legacy_pallas_backend(runner):
+    wl = WorkloadConfig(num_requests=1_000, num_keys=100, skewed=True)
+    cl = ClusterConfig(capacity_bytes=16 * 1024.0)
+    a = _legacy(
+        runner, wl, cl, Scenario.OPTIMIZED, seed=3, daemon_interval=500,
+        backend="pallas",
+    )
+    b = runner(
+        wl, cl, RedynisPolicy(backend="pallas"), seed=3, daemon_interval=500
+    )
+    assert_results_equal(a, b, f"{runner.__name__} pallas")
+
+
+def test_policy_scan_matches_reference_with_capacity():
+    """Fused vs reference oracle for the NEW policies (the legacy ones are
+    covered by test_simulate_equivalence) under a finite budget."""
+    from repro.core.policy import CostGreedyPolicy, DecayLFUPolicy, TopKPolicy
+
+    wl = WorkloadConfig(
+        num_requests=3_000, num_keys=150, skewed=True, affinity=0.7,
+        object_bytes_sigma=0.5,
+    )
+    cl = ClusterConfig(capacity_bytes=24 * 1024.0)
+    for pol in (
+        TopKPolicy(k=40, decay=0.8),
+        CostGreedyPolicy(min_saved_ms_per_kib=500.0),
+        DecayLFUPolicy(alpha=0.4, period=2),
+    ):
+        a = run_scenario(wl, cl, pol, seed=2, daemon_interval=500)
+        b = run_scenario_reference(wl, cl, pol, seed=2, daemon_interval=500)
+        for field, x, y in zip(SimResult._fields, a, b):
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), rtol=1e-4,
+                err_msg=f"{pol} {field}",
+            )
+
+
+def test_peak_occupancy_is_per_chunk_for_every_policy():
+    """Unified sampling: static policies report the (constant) per-chunk
+    peak — identical to the seed engine's initial-map value — and active
+    policies report a genuine running max that dominates it."""
+    wl = WorkloadConfig(num_requests=4_000, skewed=True)
+    cl = ClusterConfig()
+    full = run_scenario(wl, cl, StaticPolicy(mode="local"), seed=0)
+    np.testing.assert_allclose(
+        full.peak_occupancy_bytes, wl.num_keys * wl.object_bytes
+    )
+    offsite = run_scenario(wl, cl, StaticPolicy(mode="remote"), seed=0)
+    assert offsite.peak_occupancy_bytes.max() <= wl.num_keys * wl.object_bytes
+    opt = run_scenario(wl, cl, RedynisPolicy(), seed=0)
+    # Replication grows occupancy past the one-replica-per-key start.
+    assert opt.peak_occupancy_bytes.max() > offsite.peak_occupancy_bytes.max()
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-policy grids.
+# ---------------------------------------------------------------------------
+
+
+def test_run_experiment_policy_grid_batches_one_call():
+    """Acceptance: a >=4-policy x >=3-seed same-family grid runs as ONE
+    batched program (policy axis vmapped alongside seeds) and returns
+    per-policy SimResults."""
+    policies = [RedynisPolicy(h=h) for h in (1 / 3, 0.25, 0.15, 0.05)]
+    res = run_experiment(
+        policies=policies,
+        read_fractions=(1.0,),
+        iterations=3,
+        num_requests=3_000,
+        num_keys=150,
+        skewed=True,
+        affinity=0.7,
+    )
+    assert res["num_batched_calls"] == 1
+    assert len(res["policies"]) == 4
+    hits = []
+    for rows in res["policies"].values():
+        (row,) = rows
+        assert len(row["results"]) == 3
+        assert all(isinstance(r, SimResult) for r in row["results"])
+        assert np.isfinite(row["throughput"]) and row["throughput"] > 0
+        hits.append(row["hit_rate"])
+    # Lower H admits more hosts: hit rate monotone as H decreases.
+    assert hits == sorted(hits), hits
+
+
+def test_run_experiment_policy_grid_matches_single_runs():
+    """Grid rows must equal the corresponding single-policy runs — the
+    policy-axis vmap changes batching, not semantics."""
+    policies = [RedynisPolicy(h=1 / 3), RedynisPolicy(h=0.1)]
+    res = run_experiment(
+        policies=policies,
+        read_fractions=(0.9,),
+        iterations=2,
+        num_requests=2_000,
+        num_keys=100,
+        skewed=True,
+        affinity=0.7,
+    )
+    for pol, (label, rows) in zip(policies, res["policies"].items()):
+        for seed, got in enumerate(rows[0]["results"]):
+            wl = WorkloadConfig(
+                num_requests=2_000, num_keys=100, skewed=True, affinity=0.7,
+                read_fraction=0.9,
+            )
+            want = run_scenario(wl, ClusterConfig(), pol, seed=seed)
+            for field, x, y in zip(SimResult._fields, want, got):
+                np.testing.assert_allclose(
+                    np.asarray(x), np.asarray(y), rtol=1e-5,
+                    err_msg=f"{label} seed={seed} {field}",
+                )
+
+
+def test_run_experiment_heterogeneous_policy_grid():
+    from repro.core.policy import DecayLFUPolicy, TopKPolicy
+
+    res = run_experiment(
+        policies=[
+            RedynisPolicy(),
+            StaticPolicy(mode="local"),
+            StaticPolicy(mode="remote"),
+            TopKPolicy(k=20),
+            DecayLFUPolicy(),
+        ],
+        read_fractions=(1.0,),
+        iterations=2,
+        num_requests=2_000,
+        num_keys=100,
+        skewed=True,
+    )
+    rows = {label: r[0] for label, r in res["policies"].items()}
+    assert len(rows) == 5
+    assert rows["static(mode='local')"]["hit_rate"] == 1.0
+    assert rows["static(mode='remote')"]["hit_rate"] == 0.0
+    assert all(0.0 <= r["hit_rate"] <= 1.0 for r in rows.values())
+
+
+def test_run_experiment_legacy_grid_still_keyed_by_scenario():
+    res = run_experiment(
+        read_fractions=(1.0,), iterations=2, num_requests=1_000
+    )
+    assert set(res["scenarios"]) == {s.value for s in Scenario}
+
+
+# ---------------------------------------------------------------------------
+# Property: every registered policy respects capacity budgets.
+# ---------------------------------------------------------------------------
+
+
+def _active_policy_instances():
+    out = []
+    for name, cls in sorted(POLICIES.items()):
+        pol = cls()
+        if pol.is_active:
+            out.append(pol)
+        else:
+            out.extend(cls(mode=m) for m in cls.MODES)
+    return out
+
+
+def check_policy_respects_budget(policy, seed: int, k: int, n: int, budget: float):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 200, size=(k, n)).astype(np.int32)
+    counts[rng.random(k) < 0.2] = 0
+    store = create_store(k, n)._replace(
+        access_counts=jnp.asarray(counts),
+        hosts=jnp.asarray(rng.random((k, n)) < 0.5),
+        live=jnp.asarray(rng.random(k) < 0.9),
+        last_access=jnp.asarray(rng.integers(0, 50, k).astype(np.int32)),
+    )
+    obj = jnp.asarray(rng.uniform(10.0, 400.0, k), jnp.float32)
+    cap = jnp.full((n,), budget, jnp.float32)
+    rtt = jnp.asarray(
+        np.where(np.eye(n, dtype=bool), 0.0, 100.0), jnp.float32
+    )
+    pol = policy.resolve(n)
+    pol.validate(n)
+    static, params = split_policy(pol)
+    ctx = PolicyContext(rtt=rtt, object_bytes=obj, capacity_bytes=cap, params=params)
+    state = static.init(store, ctx)
+    plan, _, new_store = policy_sweep(static, state, store, 60, ctx)
+    occupancy = np.asarray(
+        jnp.sum(jnp.where(plan.owners, obj[:, None], 0.0), axis=0)
+    )
+    assert (occupancy <= budget + 1e-3).all(), (
+        f"{type(policy).__name__}: node occupancy {occupancy} exceeds "
+        f"budget {budget}"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(new_store.hosts), np.asarray(plan.owners)
+    )
+
+
+@pytest.mark.parametrize(
+    "policy", _active_policy_instances(), ids=lambda p: type(p).__name__ + str(getattr(p, "mode", ""))
+)
+def test_every_registered_policy_respects_budget_fixed(policy):
+    check_policy_respects_budget(policy, seed=7, k=60, n=4, budget=1500.0)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.integers(1, 50),
+        st.integers(2, 6),
+        st.floats(50.0, 5000.0),
+        st.sampled_from(_active_policy_instances()),
+    )
+    def test_every_registered_policy_respects_budget_fuzz(
+        seed, k, n, budget, policy
+    ):
+        check_policy_respects_budget(policy, seed=seed, k=k, n=n, budget=budget)
