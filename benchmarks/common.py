@@ -11,7 +11,39 @@ from typing import Callable
 import jax
 import numpy as np
 
-__all__ = ["time_fn", "emit", "banner", "write_bench_json"]
+__all__ = [
+    "time_fn",
+    "emit",
+    "banner",
+    "write_bench_json",
+    "dedupe_policies",
+    "WAN5_WORKLOAD_KWARGS",
+]
+
+# The wan5 geo-traffic preset the policy benchmarks share (policy_matrix,
+# tail_latency): skewed sources concentrated in two hot regions. Kept here
+# so the cross-benchmark numbers stay comparable; run_experiment builds its
+# own WorkloadConfig per read fraction from these kwargs.
+WAN5_WORKLOAD_KWARGS = dict(
+    num_nodes=5,
+    region_weights=(0.35, 0.25, 0.20, 0.12, 0.08),
+    affinity=0.8,
+)
+
+
+def dedupe_policies(candidates, num_nodes: int) -> list:
+    """Drop policies whose *resolved* label (at this cluster size) repeats —
+    a forwarded ``--policy`` that coincides with a default entry must not
+    trip ``run_experiment``'s duplicate-label check."""
+    from repro.kvsim import describe_policy
+
+    seen, out = set(), []
+    for p in candidates:
+        label = describe_policy(p.resolve(num_nodes))
+        if label not in seen:
+            seen.add(label)
+            out.append(p)
+    return out
 
 
 def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
@@ -36,11 +68,19 @@ def banner(title: str) -> None:
     print(f"\n=== {title} ===", flush=True)
 
 
-def write_bench_json(name: str, metrics: dict, **meta) -> str:
+def write_bench_json(
+    name: str, metrics: dict, quantiles: dict | None = None, **meta
+) -> str:
     """Persist one benchmark's results as ``BENCH_<name>.json``.
 
     metrics: the measured values (throughput, hit-rate, wall-time, ... —
         anything JSON-serialisable; numpy scalars are coerced via float).
+    quantiles: optional top-level tail-latency block — per-entry
+        P50/P90/P95/P99/P99.9 dicts in ms (``SimTrace.tail_summary()``
+        shape), keyed however the benchmark groups them (policy label,
+        topology, ...). Kept out of ``metrics`` so trajectory scrapers can
+        diff the distribution summaries without parsing benchmark-specific
+        row schemas.
     meta: run parameters worth keeping next to the numbers (backend,
         num_requests, ...).
     Output directory: ``$BENCH_DIR`` if set, else the current directory.
@@ -51,6 +91,8 @@ def write_bench_json(name: str, metrics: dict, **meta) -> str:
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
     payload = {"bench": name, "unix_time": time.time(), **meta, "metrics": metrics}
+    if quantiles is not None:
+        payload["quantiles"] = quantiles
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True, default=float)
         fh.write("\n")

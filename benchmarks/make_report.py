@@ -1,9 +1,13 @@
 """Fill EXPERIMENTS.md placeholders from the results JSONs.
 
 Usage: PYTHONPATH=src python benchmarks/make_report.py
-Replaces <!-- DRYRUN_TABLE --> and <!-- ROOFLINE_TABLE --> with generated
-markdown; §Perf and figure sections are authored by hand from the logged
-runs (benchmarks/results/perf/*.json).
+Replaces <!-- DRYRUN_TABLE -->, <!-- ROOFLINE_TABLE --> and
+<!-- TAIL_LATENCY_TABLE --> with generated markdown; §Perf and figure
+sections are authored by hand from the logged runs
+(benchmarks/results/perf/*.json). The tail-latency table is rebuilt from
+``BENCH_tail_latency.json`` (searched in $BENCH_DIR, then the repo root)
+whenever that artifact exists — re-run ``benchmarks/tail_latency.py`` then
+this script to refresh the quantile columns in §Telemetry.
 """
 
 from __future__ import annotations
@@ -11,6 +15,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import re
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN = os.path.join(ROOT, "benchmarks", "results", "dryrun")
@@ -88,6 +93,41 @@ def roofline_table(res) -> str:
     return "\n".join(lines)
 
 
+def find_tail_latency_json():
+    """BENCH_tail_latency.json from $BENCH_DIR, else the repo root."""
+    for d in filter(None, [os.environ.get("BENCH_DIR"), ROOT]):
+        p = os.path.join(d, "BENCH_tail_latency.json")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+TAIL_BEGIN = "<!-- TAIL_LATENCY_TABLE_BEGIN -->"
+TAIL_END = "<!-- TAIL_LATENCY_TABLE_END -->"
+
+
+def tail_latency_table(bench) -> str:
+    """§Telemetry quantile matrix from the tail_latency benchmark rows."""
+    lines = [
+        "| topology | policy | hit rate | P50 ms | P99 ms (±CI99) | P99.9 ms | conv. chunk | post-conv moves/seed |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in bench["metrics"]["rows"]:
+        lines.append(
+            f"| {r['topology']} | `{r['policy']}` | {r['hit_rate']:.3f} | "
+            f"{r['p50_ms']:.1f} | {r['p99_ms']:.1f} (±{r['p99_ci99']:.1f}) | "
+            f"{r['p999_ms']:.1f} | {r['convergence_chunk']} | "
+            f"{r['post_convergence_moves_per_seed']:.0f} |"
+        )
+    lines.append("")
+    lines.append(
+        f"(from `BENCH_tail_latency.json`: {bench['num_requests']} requests × "
+        f"{bench['iterations']} seeds, read fraction {bench['read_fraction']}, "
+        f"{bench['num_bins']} bins)"
+    )
+    return "\n".join(lines)
+
+
 def main() -> None:
     res = all_results()
     path = os.path.join(ROOT, "EXPERIMENTS.md")
@@ -95,6 +135,16 @@ def main() -> None:
         doc = f.read()
     doc = doc.replace("<!-- DRYRUN_TABLE -->", dryrun_table(res))
     doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_table(res))
+    tail_json = find_tail_latency_json()
+    if tail_json is not None and TAIL_BEGIN in doc and TAIL_END in doc:
+        # The rendered table lives BETWEEN the markers (which stay in the
+        # doc), so re-running this script refreshes it in place.
+        doc = re.sub(
+            re.escape(TAIL_BEGIN) + r".*?" + re.escape(TAIL_END),
+            f"{TAIL_BEGIN}\n{tail_latency_table(load(tail_json))}\n{TAIL_END}",
+            doc,
+            flags=re.DOTALL,
+        )
     with open(path, "w") as f:
         f.write(doc)
     print(f"EXPERIMENTS.md updated with {len(res)} cells")

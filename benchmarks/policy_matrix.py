@@ -13,8 +13,19 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import banner, emit, write_bench_json
-from repro.kvsim import describe_policy, parse_policy, run_experiment, wan5_cluster
+from benchmarks.common import (
+    WAN5_WORKLOAD_KWARGS,
+    banner,
+    dedupe_policies,
+    emit,
+    write_bench_json,
+)
+from repro.kvsim import (
+    TelemetryConfig,
+    parse_policy,
+    run_experiment,
+    wan5_cluster,
+)
 
 # Spec strings (registry-parsed) so the matrix is CLI-overridable.
 DEFAULT_POLICIES = (
@@ -26,14 +37,6 @@ DEFAULT_POLICIES = (
     "topk:k=100",
     "costgreedy",
     "decaylfu:alpha=0.5",
-)
-
-# wan5_workload preset knobs, inlined because run_experiment builds its own
-# WorkloadConfig per read fraction.
-WAN5_WORKLOAD_KWARGS = dict(
-    num_nodes=5,
-    region_weights=(0.35, 0.25, 0.20, 0.12, 0.08),
-    affinity=0.8,
 )
 
 
@@ -48,15 +51,7 @@ def main(
     candidates = [parse_policy(s) for s in policy_specs]
     if policy is not None:
         candidates.append(policy)
-    # Dedupe on *resolved* labels (n=5 wan5): a forwarded --policy that
-    # resolves equal to a default entry must not trip run_experiment's
-    # duplicate-label check.
-    seen, policies = set(), []
-    for p in candidates:
-        label = describe_policy(p.resolve(5))
-        if label not in seen:
-            seen.add(label)
-            policies.append(p)
+    policies = dedupe_policies(candidates, 5)
     t_start = time.perf_counter()
     res = run_experiment(
         read_fractions=(read_fraction,),
@@ -65,9 +60,10 @@ def main(
         num_requests=num_requests,
         cluster=wan5_cluster(),
         policies=policies,
+        telemetry=TelemetryConfig(),
         **WAN5_WORKLOAD_KWARGS,
     )
-    rows = []
+    rows, quantiles = [], {}
     for label, policy_rows in res["policies"].items():
         row = policy_rows[0]
         emit(
@@ -76,15 +72,20 @@ def main(
             "hit_rate",
             policy=label,
             mean_latency_ms=round(row["mean_latency_ms"], 2),
+            p99_latency_ms=round(row["p99_latency_ms"], 2),
+            p99_ci99=round(row["p99_ci99"], 2),
             throughput=round(row["throughput"], 2),
             ci99=round(row["ci99"], 2),
         )
+        quantiles[label] = row["quantiles"]
         rows.append(
             {
                 "policy": label,
                 "read_fraction": row["read_fraction"],
                 "hit_rate": row["hit_rate"],
                 "mean_latency_ms": row["mean_latency_ms"],
+                "p99_latency_ms": row["p99_latency_ms"],
+                "p99_ci99": row["p99_ci99"],
                 "throughput_ops_s": row["throughput"],
                 "ci99": row["ci99"],
             }
@@ -96,6 +97,7 @@ def main(
             "num_batched_calls": res["num_batched_calls"],
             "wall_time_s": time.perf_counter() - t_start,
         },
+        quantiles=quantiles,
         num_requests=num_requests,
         iterations=iterations,
         read_fraction=read_fraction,

@@ -7,6 +7,7 @@ One module per paper table/figure + the beyond-paper integration benches:
   daemon_sweep      Algorithm 3 analysis throughput (pure JAX vs Pallas)
   capacity_sweep    hit-rate vs per-node replica budget (beyond paper)
   policy_matrix     registered-policy head-to-head on the wan5 geo cluster
+  tail_latency      P50/P99/P99.9 per policy x topology (in-scan telemetry)
   moe_placement     hot-expert replica cache on the reduced MoE
   hot_embedding     hot-row cache hit rates + HBM bytes saved
   serving_sessions  session-cache migration vs static placement
@@ -16,7 +17,7 @@ One module per paper table/figure + the beyond-paper integration benches:
 ``repro.core.policy`` registry (e.g. ``--policy redynis:h=0.05`` or
 ``--policy topk:k=50``) and is forwarded to every selected bench whose
 ``main`` accepts a ``policy`` kwarg (daemon_sweep, capacity_sweep,
-policy_matrix).
+policy_matrix, tail_latency).
 
 Every line of output in ``RESULT,name,value,unit,k=v`` form is machine
 collectable; EXPERIMENTS.md quotes them directly. The figure / sweep
@@ -37,6 +38,7 @@ MODULES = [
     "daemon_sweep",
     "capacity_sweep",
     "policy_matrix",
+    "tail_latency",
     "moe_placement",
     "hot_embedding",
     "serving_sessions",
@@ -50,6 +52,7 @@ FAST_KWARGS = {
     "fig3_skewed": {"iterations": 3, "num_requests": 50_000},
     "capacity_sweep": {"num_requests": 20_000},
     "policy_matrix": {"num_requests": 10_000},
+    "tail_latency": {"num_requests": 10_000, "iterations": 2},
 }
 
 

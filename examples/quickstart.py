@@ -56,6 +56,7 @@ from repro.kvsim import (
     ClusterConfig,
     RedynisPolicy,
     StaticPolicy,
+    TelemetryConfig,
     TopKPolicy,
     WorkloadConfig,
     describe_policy,
@@ -75,6 +76,25 @@ for pol in (
     print(
         f"  {describe_policy(pol):28s} hit={r.hit_rate:.3f} "
         f"tput={r.throughput_ops_s:7.1f} ops/s"
+    )
+
+# --- 2b. tails, not means: in-scan telemetry --------------------------------
+# Means hide exactly what geo round-trips inflate. telemetry= makes the
+# fused engine accumulate log-bin latency histograms and per-chunk series
+# inside the scan; run_scenario then also returns a SimTrace with
+# interpolated quantiles and convergence diagnostics.
+print("\np99 head-to-head (same trace, telemetry enabled):")
+for pol in (
+    StaticPolicy(mode="remote"),
+    RedynisPolicy(),
+    RedynisPolicy(h=0.05, decay=0.9),
+    TopKPolicy(k=20),
+):
+    r, trace = run_scenario(wl, cl, pol, telemetry=TelemetryConfig())
+    p50, p99 = trace.quantiles([0.5, 0.99])
+    print(
+        f"  {describe_policy(pol):28s} p50={p50:6.1f} ms  p99={p99:6.1f} ms  "
+        f"converged@chunk {trace.convergence_chunk()}"
     )
 
 # --- 3. the same algorithm placing MoE experts ------------------------------

@@ -1,0 +1,119 @@
+"""Pallas latency histogram (TPU): fused bucketize + grouped scatter-add.
+
+One grid step ingests a ``[TR]`` tile of per-request latencies and folds it
+into a single ``[G, B]`` grouped histogram that lives in VMEM across the
+whole grid (every step maps to the same output block; step 0 zeroes it).
+Scatter-add is hostile to the VPU, so the accumulation is recast as a
+matmul the MXU eats natively:
+
+    onehot_g [TR, G] (weighted) ∙ onehot_b [TR, B]  ->  [G, B]
+
+With 0/1 weights every partial sum is an integer, so f32 accumulation is
+exact below 2**24 regardless of summation order — the kernel matches the
+pure-jnp scatter-add oracle (``ref.py``) bit-for-bit, which the parity
+tests pin. ``lo`` / ``hi`` arrive as scalar *inputs* (like the ownership
+sweep's H) so a jitted telemetry pipeline can trace the bin range without
+recompiling; ``num_bins`` / ``num_groups`` / ``tr`` stay static.
+
+VMEM budget per step: lat/group/weight tiles (3·TR·4B) + the two one-hot
+planes (TR·(G+B)·4B) + the [G, B] accumulator — TR = 1024 at B = 128,
+G ≤ 32 is well under 1 MB, leaving the pipeline room to double-buffer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import compiler_params, interpret_default, pl
+from repro.kernels.latency_histogram.ref import bin_index
+
+__all__ = ["latency_histogram_kernel", "latency_histogram_call"]
+
+DEFAULT_TR = 1024
+
+
+def latency_histogram_kernel(
+    lat_ref,  # [TR, 1] f32
+    group_ref,  # [TR, 1] i32
+    w_ref,  # [TR, 1] f32 (0 masks padded rows)
+    lo_ref,  # [1, 1] f32 — lowest interior bin edge
+    hi_ref,  # [1, 1] f32 — overflow threshold
+    hist_ref,  # out [G, B] f32, accumulated across the whole grid
+    *,
+    num_groups: int,
+    num_bins: int,
+    tr: int,
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    lo = lo_ref[0, 0]
+    hi = hi_ref[0, 0]
+    idx = bin_index(lat_ref[...], lo, hi, num_bins)  # [TR, 1]
+
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (tr, num_bins), 1)
+    onehot_b = (iota_b == idx).astype(jnp.float32)
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, (tr, num_groups), 1)
+    onehot_g = (iota_g == group_ref[...]).astype(jnp.float32) * w_ref[...]
+
+    hist_ref[...] += jax.lax.dot_general(
+        onehot_g,
+        onehot_b,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def latency_histogram_call(
+    lat: jax.Array,  # [R] f32
+    group: jax.Array,  # [R] i32
+    weight: jax.Array,  # [R] f32
+    *,
+    num_groups: int,
+    num_bins: int,
+    lo,
+    hi,
+    tr: int = DEFAULT_TR,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = interpret_default()
+    r = lat.shape[0]
+    tr = min(tr, r)
+    assert r % tr == 0, (r, tr)
+    grid = (r // tr,)
+    kernel = functools.partial(
+        latency_histogram_kernel,
+        num_groups=num_groups,
+        num_bins=num_bins,
+        tr=tr,
+    )
+    row = lambda i: (i, 0)
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, 1), row),
+            pl.BlockSpec((tr, 1), row),
+            pl.BlockSpec((tr, 1), row),
+            scalar,
+            scalar,
+        ],
+        # Every grid step accumulates into the SAME [G, B] block, so the
+        # grid dimension is sequential ("arbitrary"), not parallel.
+        out_specs=pl.BlockSpec((num_groups, num_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_groups, num_bins), jnp.float32),
+        compiler_params=compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(
+        lat.astype(jnp.float32).reshape(r, 1),
+        group.astype(jnp.int32).reshape(r, 1),
+        weight.astype(jnp.float32).reshape(r, 1),
+        jnp.asarray(lo, jnp.float32).reshape(1, 1),
+        jnp.asarray(hi, jnp.float32).reshape(1, 1),
+    )

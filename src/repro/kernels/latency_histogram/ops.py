@@ -1,0 +1,51 @@
+"""jit'd wrapper: R padded to the tile size transparently (weight-0 rows).
+
+``lo`` / ``hi`` are *traced* arguments (the kernel reads them from scalar
+input refs), so jitted telemetry pipelines can sweep bin ranges without
+recompiling; ``num_groups`` / ``num_bins`` / ``tr`` / ``interpret`` stay
+static. ``interpret=None`` auto-selects from the platform (interpret
+off-TPU), matching the ``ownership_sweep`` convention.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.latency_histogram.kernel import (
+    DEFAULT_TR,
+    latency_histogram_call,
+)
+
+__all__ = ["latency_histogram"]
+
+
+@partial(
+    jax.jit, static_argnames=("num_groups", "num_bins", "tr", "interpret")
+)
+def latency_histogram(
+    lat: jax.Array,  # [R] latency per request (ms)
+    group: jax.Array,  # [R] int group id in [0, num_groups)
+    weight: jax.Array,  # [R] weight per request (0 masks padding)
+    *,
+    num_groups: int,
+    num_bins: int = 128,
+    lo: jax.Array | float = 1.0,
+    hi: jax.Array | float = 10_000.0,
+    tr: int = DEFAULT_TR,
+    interpret: bool | None = None,
+):
+    """Returns the ``[num_groups, num_bins]`` f32 grouped latency histogram."""
+    r = lat.shape[0]
+    tr = min(tr, r)
+    pad = (-r) % tr
+    if pad:
+        zpad = lambda a: jnp.pad(a, (0, pad))
+        lat, group, weight = zpad(lat), zpad(group), zpad(weight)
+    return latency_histogram_call(
+        lat, group, weight,
+        num_groups=num_groups, num_bins=num_bins,
+        lo=lo, hi=hi, tr=tr, interpret=interpret,
+    )

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the fused latency-histogram pass.
+
+One chunk of per-request latencies is bucketized into log-spaced bins and
+scatter-added into a ``[G, B]`` grouped histogram in a single pass. The
+group id encodes (node, read/write) — ``g = node * 2 + is_read`` — so the
+global, per-node, and read/write-split histograms the telemetry layer
+exposes are all *sums over rows* of this one output, and histograms from
+different chunks / seeds / policy rows merge by plain summation.
+
+Binning scheme (shared with the Pallas kernel via :func:`bin_index`):
+bin 0 is the underflow bucket (< ``lo``), bin ``B-1`` the overflow bucket
+(>= ``hi``), and the ``B-2`` interior bins are log-spaced on ``[lo, hi)`` —
+constant *relative* width ``(hi/lo)**(1/(B-2)) - 1``, which is what bounds
+the quantile interpolation error (EXPERIMENTS.md §Telemetry).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bin_index", "bin_edges", "latency_histogram_ref"]
+
+
+def bin_index(lat, lo, hi, num_bins: int):
+    """Log-spaced bucket index, elementwise (int32, same shape as ``lat``).
+
+    The kernel inlines this exact expression, so the two implementations
+    agree bit-for-bit on bucket boundaries (same f32 log/rounding path).
+    """
+    inner = num_bins - 2
+    t = jnp.log(jnp.maximum(lat, 1e-30) / lo) / jnp.log(hi / lo)
+    raw = jnp.floor(t * inner).astype(jnp.int32) + 1
+    raw = jnp.clip(raw, 1, inner)
+    return jnp.where(
+        lat < lo, 0, jnp.where(lat >= hi, num_bins - 1, raw)
+    ).astype(jnp.int32)
+
+
+def bin_edges(lo: float, hi: float, num_bins: int):
+    """Host-side ``[B+1]`` bin edges: ``[0, lo, ..., hi, inf]``."""
+    import numpy as np
+
+    inner = num_bins - 2
+    interior = lo * (hi / lo) ** (np.arange(inner + 1) / inner)
+    return np.concatenate([[0.0], interior, [np.inf]])
+
+
+def latency_histogram_ref(
+    lat: jnp.ndarray,  # [R] f32 per-request latency (ms)
+    group: jnp.ndarray,  # [R] i32 group id in [0, G)
+    weight: jnp.ndarray,  # [R] f32 per-request weight (0 masks padding)
+    *,
+    num_groups: int,
+    num_bins: int,
+    lo,
+    hi,
+):
+    """Fused bucketize + grouped scatter-add: ``[G, B]`` f32 counts."""
+    idx = bin_index(lat.astype(jnp.float32), lo, hi, num_bins)
+    hist = jnp.zeros((num_groups, num_bins), jnp.float32)
+    return hist.at[group, idx].add(weight.astype(jnp.float32))

@@ -12,8 +12,12 @@ the ML integrations use; only the latency bookkeeping is simulation-specific.
 ``run_scenario`` is a single fused ``lax.scan`` program per *policy*
 (``repro.core.policy`` — the legacy ``Scenario`` enum survives one release
 behind a deprecation shim); ``run_scenario_reference`` retains the
-per-chunk Python loop as the oracle. The placement policies are re-exported
-here for convenience.
+per-chunk Python loop as the oracle. ``telemetry=TelemetryConfig()`` makes
+either engine additionally accumulate log-bin latency histograms and
+per-chunk convergence series *inside* the scan, returned as a ``SimTrace``
+(tail quantiles P50–P99.9, convergence/oscillation diagnostics — see
+``telemetry.py``). The placement policies are re-exported here for
+convenience.
 """
 
 from repro.core.policy import (
@@ -52,6 +56,12 @@ from repro.kvsim.simulate import (
     run_scenario,
     run_scenario_reference,
 )
+from repro.kvsim.telemetry import (
+    QUANTILE_LABELS,
+    SimTrace,
+    TelemetryConfig,
+    histogram_quantile,
+)
 
 __all__ = [
     "Trace",
@@ -67,6 +77,10 @@ __all__ = [
     "WAN5_REGIONS",
     "WAN5_RTT_MS",
     "SimResult",
+    "SimTrace",
+    "TelemetryConfig",
+    "histogram_quantile",
+    "QUANTILE_LABELS",
     "run_scenario",
     "run_scenario_reference",
     "run_experiment",

@@ -90,10 +90,22 @@ from repro.kvsim.cluster import (
     read_latency_geo,
     write_latency_geo,
 )
+from repro.kvsim.telemetry import (
+    SimTrace,
+    TelemetryConfig,
+    TelemetryLeaves,
+    build_trace,
+    chunk_histogram,
+    leaves_quantile,
+    merge_leaves,
+    normalize_telemetry,
+)
 from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
 
 __all__ = [
     "SimResult",
+    "SimTrace",
+    "TelemetryConfig",
     "run_scenario",
     "run_scenario_reference",
     "run_experiment",
@@ -296,7 +308,7 @@ def _prepare(workload, cluster, caller, policy, scenario, legacy):
 # Fused engine: one lax.scan over chunks, policy due-masked inside the body.
 # ---------------------------------------------------------------------------
 
-_SIM_STATICS = ("cluster", "policy", "daemon_interval")
+_SIM_STATICS = ("cluster", "policy", "daemon_interval", "telemetry")
 
 
 def _simulate(
@@ -310,12 +322,21 @@ def _simulate(
     cluster: ClusterConfig,
     policy,  # static key from split_policy (hashable jit static)
     daemon_interval: int,
+    telemetry: TelemetryConfig | None = None,
 ):
     """Whole-scenario simulation as a single fixed-shape scan program.
 
     The trace is padded to ``num_chunks * daemon_interval`` with ``valid``-
     masked rows (zero latency, zero metadata weight), so every chunk has one
     shape and the Python loop collapses into ``jax.lax.scan``.
+
+    Returns ``(aggregate leaves, telemetry leaves | None)``. With
+    ``telemetry`` (a normalised :class:`TelemetryConfig` static) the scan
+    body additionally folds each chunk's latencies into a grouped log-bin
+    histogram and emits per-chunk series as the scan's ``ys``; the carry —
+    and therefore every aggregate result — is untouched, which is what
+    keeps the telemetry-off AND telemetry-on aggregates bit-exact with the
+    pre-telemetry engine (pinned by tests/test_telemetry.py).
     """
     r = keys.shape[0]
     num_keys = natural.shape[0]
@@ -380,14 +401,20 @@ def _simulate(
             store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
         )
         lat = jnp.where(cv, lat, 0.0)
+        chunk_lat = jnp.sum(lat)
+        chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
+        chunk_reads = jnp.sum((cr & cv).astype(jnp.float32))
         busy = busy.at[cn].add(lat)
-        lat_sum = lat_sum + jnp.sum(lat)
-        hits = hits + jnp.sum((read_hits & cv).astype(jnp.float32))
-        reads = reads + jnp.sum((cr & cv).astype(jnp.float32))
+        lat_sum = lat_sum + chunk_lat
+        hits = hits + chunk_hits
+        reads = reads + chunk_reads
         # Occupancy is sampled per chunk for EVERY policy, on the same
         # frozen-at-chunk-start map the requests see (the initial placement
         # seeds the peak; static policies never change it).
-        peak = jnp.maximum(peak, _node_occupancy(store.hosts, obj))
+        occ = _node_occupancy(store.hosts, obj)
+        peak = jnp.maximum(peak, occ)
+        zero = jnp.float32(0.0)
+        chunk_moves = (zero, zero, zero, zero)
         if policy.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, ck, cn, now=c, valid=cv)
@@ -398,12 +425,36 @@ def _simulate(
             drop = drop + stats.drops
             evic = evic + stats.expiry_evictions
             cap_evic = cap_evic + stats.capacity_evictions
+            chunk_moves = (
+                stats.adds, stats.drops, stats.expiry_evictions,
+                stats.capacity_evictions,
+            )
+        if telemetry is None:
+            ys = None
+        else:
+            # In-scan telemetry: fused bucketize+scatter-add over the chunk
+            # (group id = node * 2 + is_read), padding masked by weight 0.
+            w = cv.astype(jnp.float32)
+            ys = TelemetryLeaves(
+                hist=chunk_histogram(
+                    lat, cn * 2 + cr.astype(jnp.int32), w, telemetry, n
+                ),
+                hits=chunk_hits,
+                reads=chunk_reads,
+                lat_sum=chunk_lat,
+                count=jnp.sum(w),
+                adds=chunk_moves[0],
+                drops=chunk_moves[1],
+                expiry_evictions=chunk_moves[2],
+                capacity_evictions=chunk_moves[3],
+                occupancy=occ,
+            )
         return (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
             cap_evic, peak,
-        ), None
+        ), ys
 
-    (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), _ = (
+    (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), ys = (
         jax.lax.scan(body, init, xs)
     )
     makespan_ms = jnp.max(busy)
@@ -417,7 +468,7 @@ def _simulate(
         evic,
         cap_evic,
         peak,
-    )
+    ), ys
 
 
 _simulate_jit = partial(jax.jit, static_argnames=_SIM_STATICS)(_simulate)
@@ -458,13 +509,14 @@ def run_scenario(
     seed: int = 0,
     daemon_interval: int = 1000,
     *,
+    telemetry: TelemetryConfig | None = None,
     scenario: Scenario | None = None,
     ownership_coefficient: float | None = None,
     expiry_ticks: int | None = None,
     decay: float | None = None,
     daemon_period: int | None = None,
     backend: str | None = None,
-) -> SimResult:
+) -> SimResult | tuple[SimResult, SimTrace]:
     """Simulate one policy over one generated trace (fused scan engine).
 
     policy: a ``repro.core.policy`` instance — ``RedynisPolicy(...)``,
@@ -472,6 +524,12 @@ def run_scenario(
         carries every decision hyperparameter (H, expiry, decay, period,
         sweep backend); ``daemon_interval`` stays an engine argument (the
         chunking granularity both engines share).
+    telemetry: optional :class:`TelemetryConfig`. When enabled the scan
+        additionally accumulates grouped log-bin latency histograms and
+        per-chunk convergence series *inside* the fused program and the
+        return value becomes ``(SimResult, SimTrace)``; when ``None`` (the
+        default) the engine and its results are bit-identical to the
+        pre-telemetry code path.
     scenario / ownership_coefficient / expiry_ticks / decay / daemon_period
         / backend: DEPRECATED legacy spelling, mapped onto a policy with a
         one-shot warning quoting the exact replacement.
@@ -486,8 +544,9 @@ def run_scenario(
             backend=backend,
         ),
     )
+    telemetry = normalize_telemetry(telemetry)
     trace = generate_trace(workload, seed)
-    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = _simulate_jit(
+    leaves, telem = _simulate_jit(
         trace.keys,
         trace.nodes,
         trace.is_read,
@@ -497,8 +556,10 @@ def run_scenario(
         cluster=cluster,
         policy=static,
         daemon_interval=daemon_interval,
+        telemetry=telemetry,
     )
-    return SimResult(
+    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
+    result = SimResult(
         throughput_ops_s=float(tput),
         hit_rate=float(hit),
         mean_latency_ms=float(mean_lat),
@@ -509,6 +570,9 @@ def run_scenario(
         capacity_evictions=float(cap_evic),
         peak_occupancy_bytes=np.asarray(peak, dtype=np.float64),
     )
+    if telemetry is None:
+        return result
+    return result, build_trace(telem, telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -516,33 +580,20 @@ def run_scenario(
 # ---------------------------------------------------------------------------
 
 
-def run_scenario_reference(
+def _reference_engine(
     workload: WorkloadConfig,
     cluster: ClusterConfig,
-    policy=None,
-    seed: int = 0,
-    daemon_interval: int = 1000,
-    *,
-    scenario: Scenario | None = None,
-    ownership_coefficient: float | None = None,
-    expiry_ticks: int | None = None,
-    decay: float | None = None,
-    daemon_period: int | None = None,
-    backend: str | None = None,
-) -> SimResult:
-    """Slow-path reference: one host dispatch per chunk, the policy stepped
-    with Python control flow. Semantically identical to :func:`run_scenario`
-    (same policy protocol, same shared stages)."""
-    static, params = _prepare(
-        workload, cluster, "run_scenario_reference", policy, scenario,
-        dict(
-            ownership_coefficient=ownership_coefficient,
-            expiry_ticks=expiry_ticks,
-            decay=decay,
-            daemon_period=daemon_period,
-            backend=backend,
-        ),
-    )
+    static,
+    params: dict,
+    seed: int,
+    daemon_interval: int,
+    telemetry: TelemetryConfig | None,
+) -> tuple[SimResult, TelemetryLeaves | None, np.ndarray | None]:
+    """The retained per-chunk Python loop. Returns ``(result, telemetry
+    leaves | None, raw per-request latencies | None)`` — the raw latencies
+    are what the histogram-quantile tests compare ``np.percentile``
+    against, and only this engine materialises them (the fused scan never
+    leaves the device)."""
     trace = generate_trace(workload, seed)
     k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
     rtt = cluster.rtt_matrix()
@@ -570,6 +621,8 @@ def run_scenario_reference(
     peak_occ = np.asarray(
         _node_occupancy(store.hosts, obj), dtype=np.float64
     )
+    telem: list = []
+    raw_lats: list = []
 
     num_chunks = (r + daemon_interval - 1) // daemon_interval
     for c in range(num_chunks):
@@ -583,14 +636,17 @@ def run_scenario_reference(
         )
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
-        lat_sum += float(jnp.sum(lat))
-        hits += float(jnp.sum(read_hits))
-        reads += float(jnp.sum(is_read))
+        chunk_lat = float(jnp.sum(lat))
+        chunk_hits = float(jnp.sum(read_hits))
+        chunk_reads = float(jnp.sum(is_read))
+        lat_sum += chunk_lat
+        hits += chunk_hits
+        reads += chunk_reads
 
         # Per-chunk occupancy sample on the frozen map, for every policy.
-        peak_occ = np.maximum(
-            peak_occ, np.asarray(_node_occupancy(store.hosts, obj), np.float64)
-        )
+        occ = np.asarray(_node_occupancy(store.hosts, obj), np.float64)
+        peak_occ = np.maximum(peak_occ, occ)
+        chunk_moves = (0.0, 0.0, 0.0, 0.0)
         if static.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, keys, nodes, now=c)
@@ -598,15 +654,37 @@ def run_scenario_reference(
                 plan, pstate, store = policy_sweep(
                     static, pstate, store, c, ctx
                 )
-                repl_moves += float(jnp.sum(plan.to_add))
-                drop_moves += float(jnp.sum(plan.to_drop))
-                evictions += float(
-                    jnp.sum(plan.to_drop & plan.expired[:, None])
+                chunk_moves = (
+                    float(jnp.sum(plan.to_add)),
+                    float(jnp.sum(plan.to_drop)),
+                    float(jnp.sum(plan.to_drop & plan.expired[:, None])),
+                    float(jnp.sum(plan.capacity_evicted)),
                 )
-                cap_evictions += float(jnp.sum(plan.capacity_evicted))
+                repl_moves += chunk_moves[0]
+                drop_moves += chunk_moves[1]
+                evictions += chunk_moves[2]
+                cap_evictions += chunk_moves[3]
+        if telemetry is not None:
+            group = nodes * 2 + is_read.astype(jnp.int32)
+            w = jnp.ones(lat.shape, jnp.float32)
+            telem.append(TelemetryLeaves(
+                hist=np.asarray(
+                    chunk_histogram(lat, group, w, telemetry, n), np.float64
+                ),
+                hits=chunk_hits,
+                reads=chunk_reads,
+                lat_sum=chunk_lat,
+                count=float(lat.shape[0]),
+                adds=chunk_moves[0],
+                drops=chunk_moves[1],
+                expiry_evictions=chunk_moves[2],
+                capacity_evictions=chunk_moves[3],
+                occupancy=occ,
+            ))
+            raw_lats.append(np.asarray(lat, np.float64))
 
     makespan_ms = float(total_lat.max())
-    return SimResult(
+    result = SimResult(
         throughput_ops_s=r / (makespan_ms / 1000.0),
         hit_rate=hits / max(reads, 1.0),
         mean_latency_ms=lat_sum / r,
@@ -617,16 +695,72 @@ def run_scenario_reference(
         capacity_evictions=cap_evictions,
         peak_occupancy_bytes=peak_occ,
     )
+    if telemetry is None:
+        return result, None, None
+    leaves = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *telem)
+    return result, leaves, np.concatenate(raw_lats)
 
 
-def confidence_interval_99(samples: np.ndarray) -> tuple[float, float]:
+def run_scenario_reference(
+    workload: WorkloadConfig,
+    cluster: ClusterConfig,
+    policy=None,
+    seed: int = 0,
+    daemon_interval: int = 1000,
+    *,
+    telemetry: TelemetryConfig | None = None,
+    scenario: Scenario | None = None,
+    ownership_coefficient: float | None = None,
+    expiry_ticks: int | None = None,
+    decay: float | None = None,
+    daemon_period: int | None = None,
+    backend: str | None = None,
+) -> SimResult | tuple[SimResult, SimTrace]:
+    """Slow-path reference: one host dispatch per chunk, the policy stepped
+    with Python control flow. Semantically identical to :func:`run_scenario`
+    (same policy protocol, same shared stages). With ``telemetry`` the
+    return value becomes ``(SimResult, SimTrace)``, and the trace carries
+    ``raw_latency_ms`` — the exact per-request latencies the histogram
+    quantiles are validated against."""
+    static, params = _prepare(
+        workload, cluster, "run_scenario_reference", policy, scenario,
+        dict(
+            ownership_coefficient=ownership_coefficient,
+            expiry_ticks=expiry_ticks,
+            decay=decay,
+            daemon_period=daemon_period,
+            backend=backend,
+        ),
+    )
+    telemetry = normalize_telemetry(telemetry)
+    result, leaves, raw = _reference_engine(
+        workload, cluster, static, params, seed, daemon_interval, telemetry
+    )
+    if telemetry is None:
+        return result
+    return result, build_trace(leaves, telemetry, raw_latency_ms=raw)
+
+
+def confidence_interval_99(samples: np.ndarray) -> tuple:
     """Mean ± 99% CI half-width (normal approx — matches the paper's error
-    bars over repeated iterations)."""
-    mean = float(np.mean(samples))
-    if len(samples) < 2:
-        return mean, 0.0
-    sem = float(np.std(samples, ddof=1) / np.sqrt(len(samples)))
-    return mean, 2.576 * sem
+    bars over repeated iterations).
+
+    ``samples`` is per-seed: a ``[S]`` vector of scalars (the legacy
+    throughput use) or an ``[S, ...]`` stack of per-seed statistic vectors —
+    e.g. per-seed quantile samples ``[S, Q]`` — reduced along axis 0, in
+    which case the mean/half-width come back as arrays of the trailing
+    shape. Scalars still return plain floats."""
+    samples = np.asarray(samples, dtype=np.float64)
+    s = samples.shape[0]
+    mean = np.mean(samples, axis=0)
+    if s < 2:
+        ci = np.zeros_like(mean)
+    else:
+        sem = np.std(samples, axis=0, ddof=1) / np.sqrt(s)
+        ci = 2.576 * sem
+    if mean.ndim == 0:
+        return float(mean), float(ci)
+    return mean, ci
 
 
 # ---------------------------------------------------------------------------
@@ -649,17 +783,24 @@ def _result_from_leaves(leaves, seed_idx: int) -> SimResult:
     )
 
 
-def _batched_policy_rows(policies, wl, cluster, iterations, daemon_interval):
+def _batched_policy_rows(
+    policies, wl, cluster, iterations, daemon_interval, telemetry=None
+):
     """All policies × all seeds for one workload: same-family policies
     (identical static key) have their dynamic params stacked and the policy
-    axis vmapped alongside the seed axis. Returns ``(per-policy leaves,
-    number of compiled-program invocations)``."""
+    axis vmapped alongside the seed axis. Returns ``(per-policy
+    (aggregate leaves, telemetry leaves | None), number of compiled-program
+    invocations)`` — telemetry histograms vmap across seeds (and the policy
+    axis) exactly like the aggregates, so each policy row's leaves carry a
+    leading ``[S]`` seed axis that merges by summation."""
     traces = _traces_for_seeds(wl, jnp.arange(iterations, dtype=jnp.int32))
     trace_args = (
         traces.keys, traces.nodes, traces.is_read, traces.natural_node,
         traces.object_bytes,
     )
-    statics = dict(cluster=cluster, daemon_interval=daemon_interval)
+    statics = dict(
+        cluster=cluster, daemon_interval=daemon_interval, telemetry=telemetry
+    )
 
     groups: dict = {}  # static key -> list of (position, params)
     for i, pol in enumerate(policies):
@@ -682,7 +823,7 @@ def _batched_policy_rows(policies, wl, cluster, iterations, daemon_interval):
             )
             calls += 1
             for p, (i, _) in enumerate(members):
-                out[i] = tuple(leaf[p] for leaf in leaves)
+                out[i] = jax.tree_util.tree_map(lambda leaf: leaf[p], leaves)
         else:
             for i, params in members:
                 out[i] = _simulate_batch(
@@ -710,6 +851,7 @@ def run_experiment(
     daemon_interval: int = 1000,
     backend: str = "jax",
     policies=None,
+    telemetry: TelemetryConfig | None = None,
     **workload_kwargs,
 ) -> dict:
     """Paper Figure 2/3 grid — and its generalisation to arbitrary policy
@@ -730,12 +872,19 @@ def run_experiment(
         (the oracle the equivalence tests pin the scan engine to).
     backend: legacy-grid only — the Redynis sweep backend ("jax"|"pallas");
         policies carry their own backend field.
+    telemetry: optional :class:`TelemetryConfig`. When enabled each row
+        additionally reports ``p99_latency_ms`` with a ``p99_ci99`` CI band
+        (99% CI over the per-seed interpolated P99 samples), the canonical
+        ``quantiles`` block, and a seed-merged :class:`SimTrace` under
+        ``"trace"`` (histograms summed across seeds — the merge the
+        associativity tests pin).
     """
     if cluster is None:
         cluster = ClusterConfig()
     workload_kwargs.setdefault("num_nodes", cluster.num_nodes)
     if engine not in ("scan", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
+    telemetry = normalize_telemetry(telemetry)
 
     legacy = policies is None
     if legacy:
@@ -773,26 +922,35 @@ def run_experiment(
         )
         _check_topology(wl, cluster)
         if engine == "reference":
-            per_policy = [
-                [
-                    run_scenario_reference(
-                        wl, cluster, pol, seed=it,
-                        daemon_interval=daemon_interval,
+            per_policy, per_telem = [], []
+            for pol in pols:
+                static, params = split_policy(pol)
+                results, leaves = [], []
+                for it in range(iterations):
+                    res, lv, _ = _reference_engine(
+                        wl, cluster, static, params, it, daemon_interval,
+                        telemetry,
                     )
-                    for it in range(iterations)
-                ]
-                for pol in pols
-            ]
+                    results.append(res)
+                    leaves.append(lv)
+                per_policy.append(results)
+                per_telem.append(
+                    None if telemetry is None
+                    else jax.tree_util.tree_map(
+                        lambda *xs: np.stack(xs), *leaves
+                    )
+                )
         else:
-            leaves, calls = _batched_policy_rows(
-                pols, wl, cluster, iterations, daemon_interval
+            rows_leaves, calls = _batched_policy_rows(
+                pols, wl, cluster, iterations, daemon_interval, telemetry
             )
             out["num_batched_calls"] += calls
             per_policy = [
-                [_result_from_leaves(pl, it) for it in range(iterations)]
-                for pl in leaves
+                [_result_from_leaves(sim, it) for it in range(iterations)]
+                for sim, _ in rows_leaves
             ]
-        for label, results in zip(labels, per_policy):
+            per_telem = [telem for _, telem in rows_leaves]
+        for label, results, telem in zip(labels, per_policy, per_telem):
             samples = np.array([r.throughput_ops_s for r in results])
             mean, ci = confidence_interval_99(samples)
             row = {
@@ -806,5 +964,21 @@ def run_experiment(
                     np.mean([r.mean_latency_ms for r in results])
                 )
                 row["results"] = results
+            if telemetry is not None:
+                # Per-seed P99 samples feed the CI band; the row's trace is
+                # the seed-merged aggregate (histograms sum across seeds).
+                p99s = np.array([
+                    leaves_quantile(
+                        jax.tree_util.tree_map(lambda a, s=s: a[s], telem),
+                        telemetry, 0.99,
+                    )
+                    for s in range(iterations)
+                ])
+                p99_mean, p99_ci = confidence_interval_99(p99s)
+                trace = build_trace(merge_leaves(telem), telemetry)
+                row["p99_latency_ms"] = p99_mean
+                row["p99_ci99"] = p99_ci
+                row["quantiles"] = trace.tail_summary()
+                row["trace"] = trace
             table[label].append(row)
     return out

@@ -1,0 +1,356 @@
+"""In-scan telemetry: fused latency histograms + per-tick convergence traces.
+
+The paper's stated objective is protecting *end-user response latency*, yet
+a whole simulated run used to collapse into one ``mean_latency_ms`` — and
+means hide exactly the tail behaviour geo-distributed round-trips inflate
+(Didona & Zwaenepoel, 1802.00696, argue P95/P99 are the metric that matters
+for in-memory KV stores; TurboKV, 2010.14931, evaluates repartitioning by
+latency *distribution*). This module is the observability layer both
+simulation engines share:
+
+  * **Latency histograms**, accumulated *inside* the fused ``lax.scan``
+    (no trace re-walk, no host round-trips): per chunk the engine folds the
+    request latencies into a ``[2N, B]`` grouped histogram whose group id
+    encodes ``(node, read/write)`` — global, per-node, and read/write-split
+    views are all row-sums of that one array, so histograms merge across
+    chunks, seeds, and vmapped policy rows by plain summation. The hot path
+    is the ``kernels/latency_histogram`` trio (bucketize + grouped
+    scatter-add fused into one pass, MXU-friendly one-hot matmul on TPU);
+    ``TelemetryConfig.backend`` selects the pure-JAX reference or the
+    Pallas kernel, parity-pinned by tests.
+
+  * **Per-chunk time series** (hit rate, mean/p99 latency, moves applied,
+    occupancy, evictions), emitted as the scan's ``ys`` — the convergence /
+    oscillation diagnostics a repartitioning policy is judged by.
+
+Both surface as a :class:`SimTrace` returned alongside ``SimResult``.
+Telemetry is **off by default** and the disabled path is structurally
+identical to the pre-telemetry engine (no extra carry entries, no ys), so
+results stay bit-exact — pinned by tests/test_telemetry.py.
+
+Quantiles are interpolated from the log-spaced histogram: bins have
+constant *relative* width ``rho = (hi/lo)**(1/(B-2))``, so any interpolated
+quantile is within one bin width (a factor of ``rho``) of the exact
+order-statistic — at the default 128 bins over [1 ms, 10 s] that is ~7.6%
+relative error, and the acceptance tests verify P99 against
+``np.percentile`` of the reference engine's raw latencies.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.kernels.latency_histogram.ref import bin_edges, latency_histogram_ref
+
+__all__ = [
+    "TelemetryConfig",
+    "TelemetryLeaves",
+    "SimTrace",
+    "chunk_histogram",
+    "merge_leaves",
+    "build_trace",
+    "leaves_quantile",
+    "histogram_quantile",
+    "quantile_summary",
+    "normalize_telemetry",
+    "QUANTILE_LABELS",
+]
+
+TELEMETRY_BACKENDS = ("jax", "pallas")
+
+# The canonical report quantiles: label -> q.
+QUANTILE_LABELS = {"p50": 0.5, "p90": 0.9, "p95": 0.95, "p99": 0.99, "p999": 0.999}
+
+
+class TelemetryConfig(NamedTuple):
+    """Histogram/trace collection knobs (hashable — a valid jit static).
+
+    Telemetry is off by default at the engine level (``telemetry=None``);
+    constructing a config turns it on unless ``enabled=False`` (useful for
+    threading one kwarg through sweep drivers). ``num_bins`` includes the
+    underflow (< ``lo_ms``) and overflow (>= ``hi_ms``) buckets; the
+    ``num_bins - 2`` interior bins are log-spaced, so the quantile
+    interpolation error is one *relative* bin width
+    ``(hi_ms/lo_ms)**(1/(num_bins-2))``. ``backend`` routes the per-chunk
+    bucketize+scatter-add through the pure-JAX reference or the Pallas
+    ``latency_histogram`` kernel (interpret auto-selected off-TPU).
+    """
+
+    enabled: bool = True
+    num_bins: int = 128
+    lo_ms: float = 1.0
+    hi_ms: float = 10_000.0
+    backend: str = "jax"
+
+    def validate(self) -> None:
+        if self.num_bins < 4:
+            raise ValueError(
+                f"num_bins must be >= 4 (2 interior + under/overflow), "
+                f"got {self.num_bins}"
+            )
+        if not (0.0 < self.lo_ms < self.hi_ms):
+            raise ValueError(
+                f"need 0 < lo_ms < hi_ms, got lo_ms={self.lo_ms} "
+                f"hi_ms={self.hi_ms}"
+            )
+        if self.backend not in TELEMETRY_BACKENDS:
+            raise ValueError(
+                f"unknown telemetry backend {self.backend!r}; expected one "
+                f"of {TELEMETRY_BACKENDS}"
+            )
+
+    def edges(self) -> np.ndarray:
+        """Host-side ``[num_bins + 1]`` bin edges: ``[0, lo, ..., hi, inf]``."""
+        return bin_edges(self.lo_ms, self.hi_ms, self.num_bins)
+
+
+def normalize_telemetry(telemetry) -> TelemetryConfig | None:
+    """``None``-or-disabled collapses to ``None`` so the jit static cache
+    (and the structural no-op guarantee) treats both spellings identically."""
+    if telemetry is None or not telemetry.enabled:
+        return None
+    telemetry.validate()
+    return telemetry
+
+
+class TelemetryLeaves(NamedTuple):
+    """Raw per-chunk accumulators, the scan's ``ys`` (leading axis = chunk;
+    batched engines add seed / policy axes in front). Every field is a sum
+    over requests — except ``occupancy``, a point sample of the chunk's
+    frozen map — so merging across seeds or policy rows sums the counters
+    and averages the occupancy (:func:`merge_leaves`); associativity of
+    the merge is pinned by tests."""
+
+    hist: Array  # [C, 2N, B] grouped latency histogram per chunk
+    hits: Array  # [C] read hits
+    reads: Array  # [C] valid reads
+    lat_sum: Array  # [C] summed latency (ms)
+    count: Array  # [C] valid requests
+    adds: Array  # [C] replicas created by the policy sweep
+    drops: Array  # [C] replicas dropped (all causes)
+    expiry_evictions: Array  # [C] drops caused by key expiry
+    capacity_evictions: Array  # [C] held replicas evicted by the budget
+    occupancy: Array  # [C, N] replica bytes on the chunk's frozen map
+
+
+def chunk_histogram(
+    lat: Array,  # [R] per-request latency (ms)
+    group: Array,  # [R] i32 group id = node * 2 + is_read
+    weight: Array,  # [R] f32, 0 masks padded rows
+    cfg: TelemetryConfig,
+    num_nodes: int,
+) -> Array:
+    """One chunk's ``[2N, B]`` grouped histogram via the configured backend."""
+    kwargs = dict(
+        num_groups=2 * num_nodes,
+        num_bins=cfg.num_bins,
+        lo=jnp.float32(cfg.lo_ms),
+        hi=jnp.float32(cfg.hi_ms),
+    )
+    if cfg.backend == "pallas":
+        from repro.kernels.latency_histogram.ops import latency_histogram
+
+        return latency_histogram(lat, group, weight, **kwargs)
+    return latency_histogram_ref(lat, group, weight, **kwargs)
+
+
+def merge_leaves(leaves: TelemetryLeaves, axis: int = 0) -> TelemetryLeaves:
+    """Merge a batch axis away (seeds, policy rows). Histograms and
+    counters are additive and *sum*; the derived rates/quantiles are then
+    recomputed from the merged sums by :func:`build_trace`. ``occupancy``
+    is a point sample, not a counter — summing would inflate it by the
+    batch size — so it *averages* across the batch instead."""
+    n = np.asarray(leaves.occupancy).shape[axis]
+    merged = jax.tree_util.tree_map(
+        lambda a: np.asarray(a, dtype=np.float64).sum(axis=axis), leaves
+    )
+    return merged._replace(occupancy=merged.occupancy / n)
+
+
+# ---------------------------------------------------------------------------
+# Quantile interpolation on log-spaced histograms.
+# ---------------------------------------------------------------------------
+
+
+def histogram_quantile(hist: np.ndarray, edges: np.ndarray, q: float) -> float:
+    """Interpolated quantile from binned counts.
+
+    Within the target bucket the mass is spread geometrically (uniform in
+    log-latency — the natural prior for log-spaced bins), so the result is
+    within one bin width of the exact order statistic. The unbounded
+    under/overflow buckets clamp to their finite edge.
+    """
+    hist = np.asarray(hist, dtype=np.float64)
+    total = hist.sum()
+    if total <= 0:
+        return float("nan")
+    target = q * total
+    cum = np.cumsum(hist)
+    b = int(np.searchsorted(cum, target, side="left"))
+    b = min(b, len(hist) - 1)
+    if b == 0:
+        return float(edges[1])  # underflow bucket: clamp to lo
+    if not np.isfinite(edges[b + 1]):
+        return float(edges[b])  # overflow bucket: clamp to hi
+    prev = cum[b - 1]
+    frac = (target - prev) / max(hist[b], 1e-12)
+    frac = min(max(frac, 0.0), 1.0)
+    lo_e, hi_e = float(edges[b]), float(edges[b + 1])
+    if lo_e <= 0.0:
+        return hi_e * frac  # degenerate [0, lo) bucket: linear
+    return lo_e * (hi_e / lo_e) ** frac
+
+
+def quantile_summary(hist: np.ndarray, edges: np.ndarray) -> dict:
+    """The canonical P50/P90/P95/P99/P99.9 block (BENCH json ``quantiles``)."""
+    return {
+        label: histogram_quantile(hist, edges, q)
+        for label, q in QUANTILE_LABELS.items()
+    }
+
+
+def leaves_quantile(
+    leaves: TelemetryLeaves, cfg: TelemetryConfig, q: float
+) -> float:
+    """Global quantile straight from raw leaves (no SimTrace built) — the
+    per-seed samples ``run_experiment`` feeds into the p99 CI bands."""
+    hist = np.asarray(leaves.hist, dtype=np.float64)  # [C, 2N, B]
+    return histogram_quantile(hist.sum(axis=(0, 1)), cfg.edges(), q)
+
+
+# ---------------------------------------------------------------------------
+# SimTrace: the user-facing view.
+# ---------------------------------------------------------------------------
+
+
+class SimTrace(NamedTuple):
+    """Telemetry for one run (or a seed-merged aggregate): the grouped
+    latency histogram plus per-chunk convergence/oscillation time series.
+
+    ``hist_group`` rows follow ``g = node * 2 + is_read``: even rows are
+    writes, odd rows reads; the ``hist`` / ``hist_read`` / ``hist_write`` /
+    ``hist_node`` views are row-sums. ``raw_latency_ms`` is populated only
+    by the reference engine (the oracle the quantile tests compare
+    against); the fused engine never materialises per-request latencies.
+    """
+
+    edges: np.ndarray  # [B+1] bin edges (ms): [0, lo, ..., hi, inf]
+    hist_group: np.ndarray  # [2N, B] whole-run grouped histogram
+    chunk_hist: np.ndarray  # [C, B] global histogram per chunk
+    hit_rate: np.ndarray  # [C] per-chunk read hit rate
+    mean_latency_ms: np.ndarray  # [C]
+    p99_latency_ms: np.ndarray  # [C] interpolated per-chunk P99
+    moves: np.ndarray  # [C] replicas created per chunk
+    drops: np.ndarray  # [C] replicas dropped per chunk
+    evictions: np.ndarray  # [C] expiry evictions per chunk
+    capacity_evictions: np.ndarray  # [C]
+    occupancy_bytes: np.ndarray  # [C, N] frozen-map replica bytes
+    requests: np.ndarray  # [C] valid requests per chunk
+    raw_latency_ms: np.ndarray | None = None  # reference engine only
+
+    # -- histogram views (all simple row-sums of hist_group) ---------------
+
+    @property
+    def num_nodes(self) -> int:
+        return self.hist_group.shape[0] // 2
+
+    @property
+    def hist(self) -> np.ndarray:
+        """Global ``[B]`` latency histogram."""
+        return self.hist_group.sum(axis=0)
+
+    @property
+    def hist_read(self) -> np.ndarray:
+        return self.hist_group[1::2].sum(axis=0)
+
+    @property
+    def hist_write(self) -> np.ndarray:
+        return self.hist_group[0::2].sum(axis=0)
+
+    @property
+    def hist_node(self) -> np.ndarray:
+        """``[N, B]`` per-requesting-node histogram (reads + writes)."""
+        b = self.hist_group.shape[1]
+        return self.hist_group.reshape(self.num_nodes, 2, b).sum(axis=1)
+
+    @property
+    def relative_bin_width(self) -> float:
+        """One interior bin's relative width — the quantile error bound."""
+        return float(self.edges[2] / self.edges[1]) - 1.0
+
+    # -- quantiles ----------------------------------------------------------
+
+    def _select(self, split) -> np.ndarray:
+        if isinstance(split, (int, np.integer)):
+            return self.hist_node[int(split)]
+        return {"all": self.hist, "read": self.hist_read,
+                "write": self.hist_write}[split]
+
+    def quantile(self, q: float, split="all") -> float:
+        """Interpolated latency quantile; ``split`` is ``"all"`` / ``"read"``
+        / ``"write"`` or a node index."""
+        return histogram_quantile(self._select(split), self.edges, q)
+
+    def quantiles(self, qs, split="all") -> list[float]:
+        hist = self._select(split)
+        return [histogram_quantile(hist, self.edges, q) for q in qs]
+
+    def tail_summary(self, split="all") -> dict:
+        """P50/P90/P95/P99/P99.9 as a dict (the BENCH ``quantiles`` block)."""
+        return quantile_summary(self._select(split), self.edges)
+
+    # -- convergence / oscillation diagnostics ------------------------------
+
+    def convergence_chunk(self, eps: float = 0.01) -> int:
+        """First chunk whose hit rate is within ``eps`` of the terminal
+        (final-chunk) hit rate — the convergence-time definition in
+        EXPERIMENTS.md §Telemetry. The final chunk trivially qualifies."""
+        terminal = self.hit_rate[-1]
+        within = np.abs(self.hit_rate - terminal) <= eps
+        return int(np.argmax(within))
+
+    def post_convergence_moves(self, eps: float = 0.01) -> float:
+        """Replica moves committed *after* convergence — an oscillation
+        index: a stable policy goes quiet once placement has converged, an
+        oscillating one keeps churning replicas. On a seed-merged trace the
+        move counters are summed across seeds; divide by the seed count for
+        an iteration-invariant per-run figure (benchmarks do)."""
+        return float(self.moves[self.convergence_chunk(eps):].sum())
+
+
+def build_trace(
+    leaves: TelemetryLeaves,
+    cfg: TelemetryConfig,
+    raw_latency_ms: np.ndarray | None = None,
+) -> SimTrace:
+    """Materialise a :class:`SimTrace` from raw (chunk-leading) leaves —
+    either one run's, or a seed-merged aggregate from :func:`merge_leaves`."""
+    edges = cfg.edges()
+    hist_c = np.asarray(leaves.hist, dtype=np.float64)  # [C, 2N, B]
+    chunk_hist = hist_c.sum(axis=1)  # [C, B]
+    reads = np.asarray(leaves.reads, dtype=np.float64)
+    count = np.asarray(leaves.count, dtype=np.float64)
+    return SimTrace(
+        edges=edges,
+        hist_group=hist_c.sum(axis=0),
+        chunk_hist=chunk_hist,
+        hit_rate=np.asarray(leaves.hits, np.float64) / np.maximum(reads, 1.0),
+        mean_latency_ms=(
+            np.asarray(leaves.lat_sum, np.float64) / np.maximum(count, 1.0)
+        ),
+        p99_latency_ms=np.array(
+            [histogram_quantile(h, edges, 0.99) for h in chunk_hist]
+        ),
+        moves=np.asarray(leaves.adds, np.float64),
+        drops=np.asarray(leaves.drops, np.float64),
+        evictions=np.asarray(leaves.expiry_evictions, np.float64),
+        capacity_evictions=np.asarray(leaves.capacity_evictions, np.float64),
+        occupancy_bytes=np.asarray(leaves.occupancy, np.float64),
+        requests=count,
+        raw_latency_ms=raw_latency_ms,
+    )
