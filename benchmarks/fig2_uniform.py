@@ -24,6 +24,7 @@ def main(
     num_requests: int = 100_000,
     engine: str = "scan",
     compare_engines: bool = False,
+    replay_backend: str = "jax",
 ) -> dict:
     banner("fig2: uniform object access distribution (paper Figure 2)")
     t_start = time.perf_counter()
@@ -33,6 +34,7 @@ def main(
         iterations=iterations,
         num_requests=num_requests,
         engine=engine,
+        replay_backend=replay_backend,
     )
     wall_s = time.perf_counter() - t_start
     for scenario, rows in res["scenarios"].items():
@@ -65,6 +67,7 @@ def main(
         engine=engine,
         iterations=iterations,
         num_requests=num_requests,
+        replay_backend=replay_backend,
     )
 
     if compare_engines:

@@ -26,7 +26,11 @@ from repro.kvsim import (
 )
 
 
-def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
+def main(
+    iterations: int = 5,
+    num_requests: int = 100_000,
+    replay_backend: str = "jax",
+) -> dict:
     banner("fig3: skewed (zipfian 90/10) object access (paper Figure 3)")
     t_start = time.perf_counter()
     res = run_experiment(
@@ -34,6 +38,7 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
         skewed=True,
         iterations=iterations,
         num_requests=num_requests,
+        replay_backend=replay_backend,
     )
     for scenario, rows in res["scenarios"].items():
         for row in rows:
@@ -64,7 +69,10 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
         wl = WorkloadConfig(
             num_requests=num_requests // 2, skewed=True, affinity=affinity
         )
-        r = run_scenario(wl, cluster, RedynisPolicy(), seed=0)
+        r = run_scenario(
+            wl, cluster, RedynisPolicy(), seed=0,
+            replay_backend=replay_backend,
+        )
         emit(
             "fig3b_affinity",
             round(r.throughput_ops_s, 2),
@@ -82,7 +90,7 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
         ("remote", StaticPolicy(mode="remote")),
         ("optimized", RedynisPolicy()),
     ):
-        r = run_scenario(wl5, geo, pol, seed=0)
+        r = run_scenario(wl5, geo, pol, seed=0, replay_backend=replay_backend)
         emit(
             "fig3c_wan5",
             round(r.throughput_ops_s, 2),
@@ -95,7 +103,10 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
     banner("fig3d: diurnal hot region — decay chases moving traffic")
     wld = diurnal_workload(num_requests=num_requests // 2)
     for decay in (1.0, 0.5):
-        r = run_scenario(wld, geo, RedynisPolicy(decay=decay), seed=0)
+        r = run_scenario(
+            wld, geo, RedynisPolicy(decay=decay), seed=0,
+            replay_backend=replay_backend,
+        )
         emit(
             "fig3d_diurnal",
             round(r.throughput_ops_s, 2),
@@ -112,6 +123,7 @@ def main(iterations: int = 5, num_requests: int = 100_000) -> dict:
         },
         iterations=iterations,
         num_requests=num_requests,
+        replay_backend=replay_backend,
     )
     return res
 

@@ -46,6 +46,7 @@ def main(
     read_fraction: float = 0.9,
     policy_specs=DEFAULT_POLICIES,
     policy=None,
+    replay_backend: str = "jax",
 ) -> dict:
     banner("policy_matrix: policy head-to-head on the wan5 geo cluster")
     candidates = [parse_policy(s) for s in policy_specs]
@@ -61,6 +62,7 @@ def main(
         cluster=wan5_cluster(),
         policies=policies,
         telemetry=TelemetryConfig(),
+        replay_backend=replay_backend,
         **WAN5_WORKLOAD_KWARGS,
     )
     rows, quantiles = [], {}
@@ -102,6 +104,7 @@ def main(
         iterations=iterations,
         read_fraction=read_fraction,
         cluster="wan5",
+        replay_backend=replay_backend,
     )
     return res
 
@@ -116,10 +119,15 @@ if __name__ == "__main__":
         metavar="NAME[:k=v,...]",
         help="registry policy specs to race (default: all built-ins)",
     )
+    ap.add_argument(
+        "--replay-backend", choices=["jax", "pallas"], default="jax",
+        help="chunk-replay backend for the fused engine",
+    )
     args = ap.parse_args()
     main(
         num_requests=args.num_requests,
         iterations=args.iterations,
         read_fraction=args.read_fraction,
         policy_specs=tuple(args.policies),
+        replay_backend=args.replay_backend,
     )

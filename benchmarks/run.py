@@ -17,7 +17,9 @@ One module per paper table/figure + the beyond-paper integration benches:
 ``repro.core.policy`` registry (e.g. ``--policy redynis:h=0.05`` or
 ``--policy topk:k=50``) and is forwarded to every selected bench whose
 ``main`` accepts a ``policy`` kwarg (daemon_sweep, capacity_sweep,
-policy_matrix, tail_latency).
+policy_matrix, tail_latency). ``--replay-backend jax|pallas`` selects the
+fused engine's chunk-replay backend the same way (fig2_uniform,
+fig3_skewed, policy_matrix, tail_latency, engine_throughput).
 
 Every line of output in ``RESULT,name,value,unit,k=v`` form is machine
 collectable; EXPERIMENTS.md quotes them directly. The figure / sweep
@@ -39,6 +41,7 @@ MODULES = [
     "capacity_sweep",
     "policy_matrix",
     "tail_latency",
+    "engine_throughput",
     "moe_placement",
     "hot_embedding",
     "serving_sessions",
@@ -53,6 +56,7 @@ FAST_KWARGS = {
     "capacity_sweep": {"num_requests": 20_000},
     "policy_matrix": {"num_requests": 10_000},
     "tail_latency": {"num_requests": 10_000, "iterations": 2},
+    "engine_throughput": {"num_requests": 50_000, "repeats": 3},
 }
 
 
@@ -67,6 +71,13 @@ def main() -> None:
             raise SystemExit("--policy requires a spec, e.g. redynis:h=0.2")
         policy = parse_policy(args[at + 1])
         del args[at : at + 2]
+    replay_backend = None
+    if "--replay-backend" in args:
+        at = args.index("--replay-backend")
+        if at + 1 >= len(args):
+            raise SystemExit("--replay-backend requires jax or pallas")
+        replay_backend = args[at + 1]
+        del args[at : at + 2]
     full = "--full" in args
     names = [n for n in args if not n.startswith("--")]
     if not names:
@@ -75,8 +86,11 @@ def main() -> None:
     for name in names:
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
         kwargs = {} if full else dict(FAST_KWARGS.get(name, {}))
-        if policy is not None and "policy" in inspect.signature(mod.main).parameters:
+        sig = inspect.signature(mod.main).parameters
+        if policy is not None and "policy" in sig:
             kwargs["policy"] = policy
+        if replay_backend is not None and "replay_backend" in sig:
+            kwargs["replay_backend"] = replay_backend
         mod.main(**kwargs)
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s", flush=True)
 

@@ -60,6 +60,7 @@ def main(
     topologies=tuple(TOPOLOGIES),
     num_bins: int = 128,
     policy=None,
+    replay_backend: str = "jax",
 ) -> dict:
     banner("tail_latency: P50/P99/P99.9 per policy x topology")
     telemetry = TelemetryConfig(num_bins=num_bins)
@@ -79,6 +80,7 @@ def main(
             cluster=cluster,
             policies=policies,
             telemetry=telemetry,
+            replay_backend=replay_backend,
             **wl_kwargs,
         )
         out[topo] = res
@@ -132,6 +134,7 @@ def main(
         read_fraction=read_fraction,
         num_bins=num_bins,
         topologies=list(topologies),
+        replay_backend=replay_backend,
     )
     return out
 
@@ -151,6 +154,10 @@ if __name__ == "__main__":
         metavar="NAME[:k=v,...]",
         help="registry policy specs to race (default: the matrix built-ins)",
     )
+    ap.add_argument(
+        "--replay-backend", choices=["jax", "pallas"], default="jax",
+        help="chunk-replay backend for the fused engine",
+    )
     args = ap.parse_args()
     main(
         num_requests=args.num_requests,
@@ -159,4 +166,5 @@ if __name__ == "__main__":
         policy_specs=tuple(args.policies),
         topologies=tuple(args.topologies),
         num_bins=args.num_bins,
+        replay_backend=args.replay_backend,
     )

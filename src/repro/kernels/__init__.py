@@ -1,23 +1,31 @@
 """Pallas TPU kernels for the perf-critical layers, each with a jit'd
 wrapper (ops.py) and a pure-jnp oracle (ref.py):
 
-  ownership_sweep — the paper's Algorithm 3 analysis loop over [K, N]
-  flash_attention — causal/windowed GQA flash attention (train/prefill)
-  flash_decode    — one-token attention over a long KV cache (decode)
-  moe_router      — fused softmax/top-k routing + Redynis traffic histogram
-  hot_gather      — two-level (VMEM-hot / HBM-cold) embedding lookup
+  ownership_sweep   — the paper's Algorithm 3 analysis loop over [K, N]
+  chunk_replay      — the simulator's fused per-chunk request path
+                      (gather → latency → hits → busy → histogram)
+  latency_histogram — grouped log-bin latency histogram fold (telemetry)
+  flash_attention   — causal/windowed GQA flash attention (train/prefill)
+  flash_decode      — one-token attention over a long KV cache (decode)
+  moe_router        — fused softmax/top-k routing + Redynis traffic histogram
+  hot_gather        — two-level (VMEM-hot / HBM-cold) embedding lookup
 """
 
+from repro.kernels.chunk_replay.ops import chunk_latency, chunk_replay
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_decode.ops import flash_decode
 from repro.kernels.hot_gather.ops import hot_gather
+from repro.kernels.latency_histogram.ops import latency_histogram
 from repro.kernels.moe_router.ops import moe_router
 from repro.kernels.ownership_sweep.ops import ownership_sweep
 
 __all__ = [
+    "chunk_latency",
+    "chunk_replay",
     "flash_attention",
     "flash_decode",
     "hot_gather",
+    "latency_histogram",
     "moe_router",
     "ownership_sweep",
 ]

@@ -1,0 +1,137 @@
+"""jit'd chunk-replay wrappers: the simulation engines' per-chunk dispatch.
+
+Two entry points, both with the latency-model scalars (service cost,
+transfer charges, histogram bin range) *traced* so retuned clusters never
+recompile, and ``read_mode`` / ``master`` / bin count / tile sizes static:
+
+  * :func:`chunk_latency` — the per-request ``(lat [B], read_hits [B])``
+    pass shared by both engines' pure-JAX path (and the reference engine's
+    raw-latency oracle). A jit of ``ref.chunk_latency_ref`` — the engines
+    keep their exact pre-fusion f32 op sequence (seed goldens pin bits).
+  * :func:`chunk_replay` — the whole fused pass returning chunk
+    aggregates ``(busy [N], lat_sum, hits, reads, count, hist)``;
+    ``backend="jax"`` composes the oracle, ``backend="pallas"`` runs the
+    one-pass Mosaic kernel with the request axis padded to the tile
+    (weight-0 rows) and the key axis padded to the gather tile.
+    ``interpret=None`` auto-selects from the platform (interpret off-TPU),
+    matching the ``ownership_sweep`` convention.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_replay.kernel import (
+    DEFAULT_TKEY,
+    DEFAULT_TR,
+    chunk_replay_call,
+)
+from repro.kernels.chunk_replay.ref import (
+    READ_MODES,
+    chunk_latency_ref,
+    chunk_replay_ref,
+)
+
+__all__ = ["REPLAY_BACKENDS", "chunk_latency", "chunk_replay"]
+
+REPLAY_BACKENDS = ("jax", "pallas")
+
+
+@partial(jax.jit, static_argnames=("master", "read_mode"))
+def chunk_latency(
+    hosts: jax.Array,  # [K, N] bool
+    keys: jax.Array,  # [B] i32
+    nodes: jax.Array,  # [B] i32
+    is_read: jax.Array,  # [B] bool
+    rtt: jax.Array,  # [N, N] f32
+    *,
+    service_ms,
+    master: int,
+    xfer_read_ms,
+    xfer_write_ms,
+    read_mode: str,
+):
+    """Per-request latency + read-hit flags: ``(lat [B] f32, hits [B] bool)``."""
+    return chunk_latency_ref(
+        hosts, keys, nodes, is_read, rtt,
+        service_ms=service_ms, master=master,
+        xfer_read_ms=xfer_read_ms, xfer_write_ms=xfer_write_ms,
+        read_mode=read_mode,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "master", "read_mode", "num_bins", "backend", "tr", "tkey", "interpret",
+    ),
+)
+def chunk_replay(
+    hosts: jax.Array,  # [K, N] bool frozen replica map
+    keys: jax.Array,  # [B] i32
+    nodes: jax.Array,  # [B] i32
+    is_read: jax.Array,  # [B] bool
+    valid: jax.Array,  # [B] bool (False masks padded rows)
+    rtt: jax.Array,  # [N, N] f32
+    *,
+    service_ms,
+    master: int,
+    xfer_read_ms,
+    xfer_write_ms,
+    read_mode: str,
+    num_bins: int = 0,
+    lo=1.0,
+    hi=10_000.0,
+    backend: str = "jax",
+    tr: int = DEFAULT_TR,
+    tkey: int = DEFAULT_TKEY,
+    interpret: bool | None = None,
+):
+    """One chunk's fused request path.
+
+    Returns ``(busy [N], lat_sum, hits, reads, count, hist)`` — ``hist`` is
+    the ``[2N, num_bins]`` grouped latency histogram, ``None`` when
+    ``num_bins == 0`` (telemetry off).
+    """
+    if read_mode not in READ_MODES:
+        raise ValueError(
+            f"unknown read_mode {read_mode!r}; expected one of {READ_MODES}"
+        )
+    if backend not in REPLAY_BACKENDS:
+        raise ValueError(
+            f"unknown chunk-replay backend {backend!r}; expected one of "
+            f"{REPLAY_BACKENDS}"
+        )
+    if backend == "jax":
+        return chunk_replay_ref(
+            hosts, keys, nodes, is_read, valid, rtt,
+            service_ms=service_ms, master=master,
+            xfer_read_ms=xfer_read_ms, xfer_write_ms=xfer_write_ms,
+            read_mode=read_mode, num_bins=num_bins, lo=lo, hi=hi,
+        )
+
+    b = keys.shape[0]
+    k, n = hosts.shape
+    tr = min(tr, b)
+    pad_b = (-b) % tr
+    if pad_b:
+        zpad = lambda a: jnp.pad(a, (0, pad_b))
+        keys, nodes = zpad(keys), zpad(nodes)
+        is_read, valid = zpad(is_read), zpad(valid)
+    tkey = min(tkey, k)
+    pad_k = (-k) % tkey
+    if pad_k:
+        hosts = jnp.pad(hosts, ((0, pad_k), (0, 0)))
+    out = chunk_replay_call(
+        hosts, keys, nodes, is_read, valid, rtt,
+        service_ms=service_ms, xfer_read_ms=xfer_read_ms,
+        xfer_write_ms=xfer_write_ms, lo=lo, hi=hi,
+        master=master, read_mode=read_mode, num_bins=num_bins,
+        tr=tr, tkey=tkey, interpret=interpret,
+    )
+    busy, stats = out[0][0], out[1][0]
+    hist = out[2] if num_bins > 0 else None
+    return busy, stats[0], stats[1], stats[2], stats[3], hist

@@ -1,0 +1,191 @@
+"""Pure-jnp oracle for the fused chunk-replay pass.
+
+One simulation chunk is a ``[B]`` slab of requests replayed against a
+``[K, N]`` replica map frozen at chunk start. The request path is:
+
+  1. replica-row gather           ``replicas = hosts[keys]``        [B, N]
+  2. nearest-replica read latency (Algorithm 1 over the RTT row, plus the
+     size-aware transfer charge when the serving replica is remote)
+  3. relay+broadcast write latency (Algorithm 2: relay to the master
+     propagator, parallel post completing at the farthest owner)
+  4. read-hit flags               ``replicas[b, nodes[b]]``
+  5. per-node busy accumulation   ``busy[nodes[b]] += lat[b]``
+  6. optional grouped ``[2N, B]`` latency-histogram fold
+     (group id = node * 2 + is_read — the telemetry layer's encoding)
+
+This module is the canonical scalar-argument form of the latency model:
+``repro.kvsim.cluster.read_latency_geo`` / ``write_latency_geo`` delegate
+here, and the simulation engines' per-chunk latency pass is exactly
+:func:`chunk_latency_ref` — so the Pallas kernel (``kernel.py``), the
+engines, and the standalone latency functions can never drift apart.
+Expressions are kept in the precise order the pre-fusion engine used (the
+f32 op sequence determines bits, and the seed goldens pin bits).
+
+``read_mode`` semantics (paper §9 scenario definitions):
+
+  * ``"map"``      reads consult the replica map (Redynis / replicated)
+  * ``"no_local"`` the requesting node's own copy is invisible — every op
+                   pays a WAN hop; an empty visible set charges the
+                   topology's worst RTT (backing-store fetch)
+  * ``"ideal"``    the paper's theoretically-ideal scenario: every request
+                   is served locally at pure service cost
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.kernels.latency_histogram.ref import bin_index
+
+__all__ = [
+    "READ_MODES",
+    "nearest_replica_rtt_ref",
+    "read_latency_ref",
+    "write_latency_ref",
+    "chunk_latency_ref",
+    "chunk_replay_ref",
+]
+
+READ_MODES = ("map", "no_local", "ideal")
+
+
+def nearest_replica_rtt_ref(rtt: Array, replicas: Array, nodes: Array) -> Array:
+    """RTT from each requesting node to its nearest replica ``[B]``; an
+    empty replica mask charges the worst RTT in the topology (the modelled
+    backing-store fetch — see ``cluster.nearest_replica_rtt``)."""
+    row = rtt[nodes]  # [B, N]
+    masked = jnp.where(replicas, row, jnp.inf)
+    nearest = jnp.min(masked, axis=-1)
+    return jnp.where(jnp.isfinite(nearest), nearest, jnp.max(rtt))
+
+
+def read_latency_ref(
+    rtt: Array,
+    replicas: Array,
+    nodes: Array,
+    *,
+    service_ms,
+    xfer_ms,
+) -> Array:
+    """Geo read path: service + RTT to the nearest replica, + the payload
+    transfer charge when the requesting node holds no visible copy."""
+    nearest = nearest_replica_rtt_ref(rtt, replicas, nodes)
+    has_local = replicas[jnp.arange(replicas.shape[0]), nodes]
+    return service_ms + nearest + jnp.where(has_local, 0.0, xfer_ms)
+
+
+def write_latency_ref(
+    rtt: Array,
+    replicas: Array,
+    nodes: Array,
+    sole_local_owner: Array,
+    *,
+    service_ms,
+    master: int,
+    xfer_ms,
+) -> Array:
+    """Geo write path (Algorithm 2): relay to the master propagator, then a
+    parallel post completing when the farthest owner acks; ``cost > 0``
+    means a payload genuinely crossed a link and pays the transfer charge."""
+    n = rtt.shape[0]
+    relay = jnp.where(nodes == master, 0.0, rtt[nodes, master])
+    non_master_owners = replicas & (jnp.arange(n)[None, :] != master)
+    post = jnp.max(
+        jnp.where(non_master_owners, rtt[master][None, :], 0.0), axis=-1
+    )
+    cost = relay + post
+    cost = cost + jnp.where(cost > 0, xfer_ms, 0.0)
+    return service_ms + jnp.where(sole_local_owner, 0.0, cost)
+
+
+def chunk_latency_ref(
+    hosts: Array,  # [K, N] bool frozen replica map
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    *,
+    service_ms,
+    master: int,
+    xfer_read_ms,
+    xfer_write_ms,
+    read_mode: str,
+) -> tuple[Array, Array]:
+    """Per-request latency + read-hit flags for one chunk: ``(lat [B] f32,
+    read_hits [B] bool)``. This is the engines' per-chunk latency pass."""
+    b = keys.shape[0]
+    if read_mode == "ideal":
+        hit = jnp.ones_like(is_read)
+        return jnp.full((b,), service_ms, jnp.float32), hit & is_read
+
+    replicas = hosts[keys]  # [B, N]
+    hit = replicas[jnp.arange(b), nodes]
+    if read_mode == "no_local":
+        read_replicas = replicas & (
+            jnp.arange(hosts.shape[1])[None, :] != nodes[:, None]
+        )
+        hit = jnp.zeros_like(hit)
+    else:
+        read_replicas = replicas
+    r_lat = read_latency_ref(
+        rtt, read_replicas, nodes, service_ms=service_ms, xfer_ms=xfer_read_ms
+    )
+
+    owner_count = jnp.sum(replicas, axis=-1)
+    sole_local = hit & (owner_count == 1)
+    if read_mode == "no_local":
+        sole_local = jnp.zeros_like(sole_local)
+    w_lat = write_latency_ref(
+        rtt, replicas, nodes, sole_local,
+        service_ms=service_ms, master=master, xfer_ms=xfer_write_ms,
+    )
+
+    lat = jnp.where(is_read, r_lat, w_lat)
+    return lat, hit & is_read
+
+
+def chunk_replay_ref(
+    hosts: Array,  # [K, N] bool
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    valid: Array,  # [B] bool (False masks padded rows)
+    rtt: Array,  # [N, N] f32
+    *,
+    service_ms,
+    master: int,
+    xfer_read_ms,
+    xfer_write_ms,
+    read_mode: str,
+    num_bins: int = 0,
+    lo=1.0,
+    hi=10_000.0,
+):
+    """The whole fused pass as one jnp composition — the oracle the Pallas
+    kernel is parity-pinned against.
+
+    Returns ``(busy [N], lat_sum, hits, reads, count, hist)`` where ``hist``
+    is the ``[2N, num_bins]`` grouped latency histogram (``None`` when
+    ``num_bins == 0`` — telemetry off).
+    """
+    n = rtt.shape[0]
+    lat, read_hits = chunk_latency_ref(
+        hosts, keys, nodes, is_read, rtt,
+        service_ms=service_ms, master=master,
+        xfer_read_ms=xfer_read_ms, xfer_write_ms=xfer_write_ms,
+        read_mode=read_mode,
+    )
+    lat = jnp.where(valid, lat, 0.0)
+    busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
+    lat_sum = jnp.sum(lat)
+    hits = jnp.sum((read_hits & valid).astype(jnp.float32))
+    reads = jnp.sum((is_read & valid).astype(jnp.float32))
+    w = valid.astype(jnp.float32)
+    count = jnp.sum(w)
+    if num_bins == 0:
+        return busy, lat_sum, hits, reads, count, None
+    group = nodes * 2 + is_read.astype(jnp.int32)
+    idx = bin_index(lat.astype(jnp.float32), lo, hi, num_bins)
+    hist = jnp.zeros((2 * n, num_bins), jnp.float32).at[group, idx].add(w)
+    return busy, lat_sum, hits, reads, count, hist

@@ -49,6 +49,7 @@ from repro.kvsim.cluster import (
     wan5_edge_cluster,
 )
 from repro.kvsim.simulate import (
+    REPLAY_BACKENDS,
     SimResult,
     confidence_interval_99,
     policy_from_scenario,
@@ -76,6 +77,7 @@ __all__ = [
     "wan5_edge_cluster",
     "WAN5_REGIONS",
     "WAN5_RTT_MS",
+    "REPLAY_BACKENDS",
     "SimResult",
     "SimTrace",
     "TelemetryConfig",

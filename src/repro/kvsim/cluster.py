@@ -46,6 +46,12 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import Array
 
+from repro.kernels.chunk_replay.ref import (
+    nearest_replica_rtt_ref,
+    read_latency_ref,
+    write_latency_ref,
+)
+
 __all__ = [
     "ClusterConfig",
     "Scenario",
@@ -215,11 +221,12 @@ def nearest_replica_rtt(rtt: Array, replicas: Array, nodes: Array) -> Array:
     replica, and this worst-RTT charge *is* the modelled cost of fetching
     it from the backing store (in the flat testbed: exactly ``remote_ms``,
     an ordinary miss).
+
+    The canonical expression lives in ``repro.kernels.chunk_replay.ref``
+    (the oracle the fused Pallas kernel is parity-pinned against); this is
+    the config-level spelling of the same math.
     """
-    row = rtt[nodes]  # [B, N]
-    masked = jnp.where(replicas, row, jnp.inf)
-    nearest = jnp.min(masked, axis=-1)
-    return jnp.where(jnp.isfinite(nearest), nearest, jnp.max(rtt))
+    return nearest_replica_rtt_ref(rtt, replicas, nodes)
 
 
 def read_latency_geo(
@@ -229,10 +236,11 @@ def read_latency_geo(
     when the serving replica is remote — i.e. the requesting node holds no
     visible copy; a nonzero RTT diagonal models intra-node latency, not a
     network hop, so it never triggers the transfer charge)."""
-    nearest = nearest_replica_rtt(rtt, replicas, nodes)
-    has_local = replicas[jnp.arange(replicas.shape[0]), nodes]
-    xfer = cfg.transfer_ms(cfg.value_bytes)
-    return cfg.service_ms + nearest + jnp.where(has_local, 0.0, xfer)
+    return read_latency_ref(
+        rtt, replicas, nodes,
+        service_ms=cfg.service_ms,
+        xfer_ms=cfg.transfer_ms(cfg.value_bytes),
+    )
 
 
 def write_latency_geo(
@@ -251,13 +259,9 @@ def write_latency_geo(
     when a nonzero RTT diagonal models intra-node latency, so ``cost > 0``
     means a payload genuinely crossed a link (and pays the transfer charge).
     """
-    n = rtt.shape[0]
-    relay = jnp.where(nodes == cfg.master, 0.0, rtt[nodes, cfg.master])
-    non_master_owners = replicas & (jnp.arange(n)[None, :] != cfg.master)
-    post = jnp.max(
-        jnp.where(non_master_owners, rtt[cfg.master][None, :], 0.0), axis=-1
+    return write_latency_ref(
+        rtt, replicas, nodes, sole_local_owner,
+        service_ms=cfg.service_ms,
+        master=cfg.master,
+        xfer_ms=cfg.transfer_ms(cfg.value_bytes + cfg.key_bytes),
     )
-    cost = relay + post
-    xfer = cfg.transfer_ms(cfg.value_bytes + cfg.key_bytes)
-    cost = cost + jnp.where(cost > 0, xfer, 0.0)
-    return cfg.service_ms + jnp.where(sole_local_owner, 0.0, cost)

@@ -53,6 +53,31 @@ Two engines with identical semantics:
     engine (see tests/test_simulate_equivalence.py) and accumulates in
     float64; equivalence is allclose, not bit-identical.
 
+Chunk-replay backends
+---------------------
+The per-chunk request path (replica gather → read/write latency → hit
+flags → busy accumulation → telemetry histogram fold) is the hot loop of
+every experiment, and lives in the ``repro.kernels.chunk_replay`` trio.
+``replay_backend`` selects its implementation, mirroring the ownership
+sweep's backend plumbing:
+
+  * ``"jax"`` (default) — the pure-jnp composition, kept op-for-op
+    identical to the pre-fusion engine so every aggregate stays bit-exact
+    with the seed goldens. The engine additionally hoists the O(K·N)
+    per-chunk occupancy sample out of the scan body for *inactive*
+    policies (a static map never changes, so its occupancy is a loop
+    constant) — this is where static baselines win big.
+  * ``"pallas"`` — the fused one-pass Mosaic kernel: one grid step per
+    request tile, gathers and folds recast as MXU matmuls, and — with
+    telemetry on — the grouped latency histogram folded in the same pass
+    (subsuming the separate ``latency_histogram`` dispatch). Histogram
+    counts stay bit-exact; busy/latency reductions re-associate across
+    tiles, so engine-level results are allclose to the jax backend
+    (pinned by tests/test_chunk_replay.py).
+
+``run_scenario_reference`` always replays through the jnp path — it *is*
+the oracle the kernel is pinned against.
+
 Throughput model
 ----------------
 Nodes serve their request streams concurrently (the paper's three
@@ -65,7 +90,7 @@ the calibration constant (documented in EXPERIMENTS.md §Repro-assumptions).
 from __future__ import annotations
 
 import warnings
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import jax
@@ -74,6 +99,12 @@ import numpy as np
 from jax import Array
 
 from repro.core.metadata import create_store, record_accesses
+from repro.kernels.chunk_replay.ops import (
+    REPLAY_BACKENDS,
+    chunk_latency,
+    chunk_replay,
+)
+from repro.kernels.latency_histogram.ref import bin_index
 from repro.core.policy import (
     PolicyContext,
     RedynisPolicy,
@@ -84,12 +115,7 @@ from repro.core.policy import (
     policy_sweep,
     split_policy,
 )
-from repro.kvsim.cluster import (
-    ClusterConfig,
-    Scenario,
-    read_latency_geo,
-    write_latency_geo,
-)
+from repro.kvsim.cluster import ClusterConfig, Scenario
 from repro.kvsim.telemetry import (
     SimTrace,
     TelemetryConfig,
@@ -99,10 +125,12 @@ from repro.kvsim.telemetry import (
     leaves_quantile,
     merge_leaves,
     normalize_telemetry,
+    trace_histogram,
 )
 from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
 
 __all__ = [
+    "REPLAY_BACKENDS",
     "SimResult",
     "SimTrace",
     "TelemetryConfig",
@@ -141,6 +169,18 @@ def _initial_hosts(
     return jax.nn.one_hot(home, num_nodes, dtype=bool)
 
 
+def _replay_scalars(cluster: ClusterConfig) -> dict:
+    """The latency-model scalars the chunk-replay trio consumes (host-side
+    floats — traced by the jit'd wrappers, so retuned clusters never
+    recompile)."""
+    return dict(
+        service_ms=cluster.service_ms,
+        master=cluster.master,
+        xfer_read_ms=cluster.transfer_ms(cluster.value_bytes),
+        xfer_write_ms=cluster.transfer_ms(cluster.value_bytes + cluster.key_bytes),
+    )
+
+
 def _chunk_latency(
     hosts: Array,  # [K, N] frozen replica map
     keys: Array,  # [B]
@@ -150,39 +190,13 @@ def _chunk_latency(
     cluster: ClusterConfig,
     read_mode: str,  # "ideal" | "no_local" | "map"
 ) -> tuple[Array, Array]:
-    """Per-request latency + hit flags for one chunk under a frozen map."""
-    b = keys.shape[0]
-    if read_mode == "ideal":
-        # The paper's "theoretically ideal scenario": everything local.
-        hit = jnp.ones_like(is_read)
-        return jnp.full((b,), cluster.service_ms, jnp.float32), hit & is_read
-
-    replicas = hosts[keys]  # [B, N]
-    hit = replicas[jnp.arange(b), nodes]
-    if read_mode == "no_local":
-        # "No local replicas ever": the requesting node's own copy (if any)
-        # is invisible to reads, so every op pays a WAN hop; with an empty
-        # visible set the orphan guard charges the topology's worst RTT —
-        # exactly the flat model's unconditional remote_ms.
-        read_replicas = replicas & (jnp.arange(hosts.shape[1])[None, :] != nodes[:, None])
-        hit = jnp.zeros_like(hit)
-    else:
-        read_replicas = replicas
-    r_lat = read_latency_geo(cluster, rtt, read_replicas, nodes)
-
-    owner_count = jnp.sum(replicas, axis=-1)
-    sole_local = hit & (owner_count == 1)
-    if read_mode == "no_local":
-        sole_local = jnp.zeros_like(sole_local)
-    w_lat = write_latency_geo(cluster, rtt, replicas, nodes, sole_local)
-
-    lat = jnp.where(is_read, r_lat, w_lat)
-    return lat, hit & is_read
-
-
-_chunk_latency_jit = jax.jit(
-    _chunk_latency, static_argnames=("cluster", "read_mode")
-)
+    """Per-request latency + hit flags for one chunk under a frozen map —
+    a thin dispatch onto ``repro.kernels.chunk_replay`` (the canonical
+    implementation both engines and the Pallas kernel share)."""
+    return chunk_latency(
+        hosts, keys, nodes, is_read, rtt,
+        read_mode=read_mode, **_replay_scalars(cluster),
+    )
 
 
 def _node_occupancy(hosts: Array, object_bytes: Array) -> Array:
@@ -308,7 +322,17 @@ def _prepare(workload, cluster, caller, policy, scenario, legacy):
 # Fused engine: one lax.scan over chunks, policy due-masked inside the body.
 # ---------------------------------------------------------------------------
 
-_SIM_STATICS = ("cluster", "policy", "daemon_interval", "telemetry")
+_SIM_STATICS = (
+    "cluster", "policy", "daemon_interval", "telemetry", "replay_backend"
+)
+
+
+def _check_replay_backend(caller: str, replay_backend: str) -> None:
+    if replay_backend not in REPLAY_BACKENDS:
+        raise ValueError(
+            f"{caller}: unknown replay_backend {replay_backend!r}; expected "
+            f"one of {REPLAY_BACKENDS}"
+        )
 
 
 def _simulate(
@@ -323,6 +347,7 @@ def _simulate(
     policy,  # static key from split_policy (hashable jit static)
     daemon_interval: int,
     telemetry: TelemetryConfig | None = None,
+    replay_backend: str = "jax",
 ):
     """Whole-scenario simulation as a single fixed-shape scan program.
 
@@ -355,19 +380,20 @@ def _simulate(
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
 
-    def chunked(x: Array) -> Array:
+    def padded(x: Array) -> Array:
         if pad:
             x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-        return x.reshape(num_chunks, daemon_interval)
+        return x
 
+    pk, pn, pr = padded(keys), padded(nodes), padded(is_read)
+    pv = jnp.arange(num_chunks * daemon_interval) < r
+    chunked = lambda x: x.reshape(num_chunks, daemon_interval)
     xs = (
         jnp.arange(num_chunks, dtype=jnp.int32),
-        chunked(keys),
-        chunked(nodes),
-        chunked(is_read),
-        (jnp.arange(num_chunks * daemon_interval) < r).reshape(
-            num_chunks, daemon_interval
-        ),
+        chunked(pk),
+        chunked(pn),
+        chunked(pr),
+        chunked(pv),
     )
 
     store = _seed_store(
@@ -377,6 +403,112 @@ def _simulate(
     )
     pstate = policy.init(store, ctx)
     zero = jnp.float32(0.0)
+    # The O(K·N) occupancy sample is a loop constant for inactive policies
+    # (a static map never changes) — hoisted out of the scan body; active
+    # policies re-sample it per chunk on the frozen-at-chunk-start map.
+    occ0 = _node_occupancy(store.hosts, obj)
+    # Whole-trace replay materialises O(R·N) planes (one-hot busy fold,
+    # replica/RTT rows); past this element budget (~256 MB of f32) the
+    # per-chunk scan's bounded O(B·N) footprint is the safer trade.
+    static_fast = r * n <= 64 * 1024 * 1024
+    if not policy.is_active and replay_backend == "jax" and static_fast:
+        # Static fast path: a frozen map makes the ENTIRE request path
+        # loop-invariant, so the scan collapses into one vectorized pass
+        # over the whole trace — no per-chunk program iterations at all
+        # (the strong form of the occupancy hoist: the O(K·N) sample AND
+        # the [B, N] latency passes leave the loop together). Latencies
+        # come from the exact same _chunk_latency expressions (identical
+        # f32 bits); the reductions below (matmul busy fold, whole-trace
+        # sums) re-associate relative to the scan's per-chunk
+        # accumulation, so aggregates are exact for integer-ms latency
+        # sums below 2**24 (every golden config) and allclose otherwise
+        # (pinned by the seed goldens and tests/test_chunk_replay.py).
+        slot_idx = None
+        if num_keys * n * 2 <= r:
+            # A frozen map also makes latency a pure function of the
+            # (key, node, is_read) triple — when that grid is smaller
+            # than the trace, evaluate _chunk_latency ONCE per distinct
+            # triple and gather per request (elementwise ops on the grid
+            # produce the identical f32 bits the direct evaluation would).
+            grid = jnp.arange(num_keys * n * 2, dtype=jnp.int32)
+            tlat, thit = _chunk_latency(
+                store.hosts,
+                grid // (n * 2),
+                (grid // 2) % n,
+                (grid % 2).astype(bool),
+                rtt, cluster, policy.read_mode,
+            )
+            slot_idx = pk * (n * 2) + pn * 2 + pr.astype(jnp.int32)
+            lat, read_hits = tlat[slot_idx], thit[slot_idx]
+        else:
+            lat, read_hits = _chunk_latency(
+                store.hosts, pk, pn, pr, rtt, cluster, policy.read_mode
+            )
+        if pad:
+            # Padding exists only when the trace doesn't divide into
+            # chunks; with none, the validity masks are static no-ops.
+            lat = jnp.where(pv, lat, 0.0)
+            read_hits = read_hits & pv
+            read_flags = pr & pv
+        else:
+            read_flags = pr
+        # Per-node busy fold as a [1, R] ∙ [R, N] one-hot matmul — an
+        # order of magnitude faster than a length-R scatter on CPU, and
+        # exact for the integer-ms latency sums the goldens pin.
+        onehot_n = (pn[:, None] == jnp.arange(n)[None, :]).astype(jnp.float32)
+        busy = jax.lax.dot_general(
+            lat[None, :], onehot_n, (((1,), (0,)), ((), ())),
+            # Full-f32 accumulation everywhere: TPU/GPU matmuls otherwise
+            # truncate operands (bf16/TF32) and break the documented
+            # exactness of static-policy aggregates vs the scan engine.
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=jnp.float32,
+        )[0]
+        lat_sum = jnp.sum(lat)
+        hits = jnp.sum(read_hits.astype(jnp.float32))
+        reads = jnp.sum(read_flags.astype(jnp.float32))
+        leaves = (
+            r / (jnp.max(busy) / 1000.0),
+            hits / jnp.maximum(reads, 1.0),
+            lat_sum / r,
+            busy,
+            zero,  # repl
+            zero,  # drop
+            zero,  # evic
+            zero,  # cap_evic
+            occ0,  # a static map's peak IS the initial-map occupancy
+        )
+        if telemetry is None:
+            return leaves, None
+        w = pv.astype(jnp.float32)
+        zeros_c = jnp.zeros((num_chunks,), jnp.float32)
+        if slot_idx is not None and telemetry.backend != "pallas":
+            # Bin indices are a pure function of the triple too: bucketize
+            # the grid once, gather per request (saves R log evals).
+            bin_idx = bin_index(
+                tlat, telemetry.lo_ms, telemetry.hi_ms, telemetry.num_bins
+            )[slot_idx]
+        else:
+            bin_idx = None
+        ys = TelemetryLeaves(
+            # All C per-chunk histograms in ONE flat bincount pass (or the
+            # vmapped Pallas kernel under backend="pallas").
+            hist=trace_histogram(
+                lat, pn * 2 + pr.astype(jnp.int32), w, telemetry, n,
+                num_chunks, bin_idx=bin_idx,
+            ),
+            hits=jnp.sum(chunked(read_hits.astype(jnp.float32)), axis=1),
+            reads=jnp.sum(chunked(read_flags.astype(jnp.float32)), axis=1),
+            lat_sum=jnp.sum(chunked(lat), axis=1),
+            count=jnp.sum(chunked(w), axis=1),
+            adds=zeros_c,
+            drops=zeros_c,
+            expiry_evictions=zeros_c,
+            capacity_evictions=zeros_c,
+            occupancy=jnp.broadcast_to(occ0, (num_chunks, n)),
+        )
+        return leaves, ys
+
     init = (
         store,
         pstate,
@@ -388,8 +520,9 @@ def _simulate(
         zero,  # drop
         zero,  # evic (expiry)
         zero,  # cap_evic
-        _node_occupancy(store.hosts, obj),  # peak (seeded by the initial map)
+        occ0,  # peak (seeded by the initial map)
     )
+    scalars = _replay_scalars(cluster)
 
     def body(carry, x):
         (
@@ -397,21 +530,43 @@ def _simulate(
             cap_evic, peak,
         ) = carry
         c, ck, cn, cr, cv = x
-        lat, read_hits = _chunk_latency(
-            store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
-        )
-        lat = jnp.where(cv, lat, 0.0)
-        chunk_lat = jnp.sum(lat)
-        chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
-        chunk_reads = jnp.sum((cr & cv).astype(jnp.float32))
-        busy = busy.at[cn].add(lat)
+        if replay_backend == "pallas":
+            # The fused one-pass kernel: gather, latency, hit flags, busy
+            # fold — and the telemetry histogram when enabled — in one
+            # pass over request tiles (no [B, N] HBM intermediates).
+            d_busy, chunk_lat, chunk_hits, chunk_reads, chunk_count, hist = (
+                chunk_replay(
+                    store.hosts, ck, cn, cr, cv, rtt,
+                    read_mode=policy.read_mode,
+                    num_bins=0 if telemetry is None else telemetry.num_bins,
+                    lo=1.0 if telemetry is None else telemetry.lo_ms,
+                    hi=10_000.0 if telemetry is None else telemetry.hi_ms,
+                    backend="pallas",
+                    **scalars,
+                )
+            )
+            busy = busy + d_busy
+        else:
+            # Pure-jnp path, op-for-op the pre-fusion engine (bit-exact
+            # with the seed goldens, including the carry-scatter busy).
+            lat, read_hits = _chunk_latency(
+                store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
+            )
+            lat = jnp.where(cv, lat, 0.0)
+            chunk_lat = jnp.sum(lat)
+            chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
+            chunk_reads = jnp.sum((cr & cv).astype(jnp.float32))
+            chunk_count = jnp.sum(cv.astype(jnp.float32))
+            busy = busy.at[cn].add(lat)
+            hist = None
         lat_sum = lat_sum + chunk_lat
         hits = hits + chunk_hits
         reads = reads + chunk_reads
         # Occupancy is sampled per chunk for EVERY policy, on the same
         # frozen-at-chunk-start map the requests see (the initial placement
-        # seeds the peak; static policies never change it).
-        occ = _node_occupancy(store.hosts, obj)
+        # seeds the peak); for inactive policies the sample is the hoisted
+        # loop constant — numerically identical, O(K·N) cheaper per chunk.
+        occ = _node_occupancy(store.hosts, obj) if policy.is_active else occ0
         peak = jnp.maximum(peak, occ)
         zero = jnp.float32(0.0)
         chunk_moves = (zero, zero, zero, zero)
@@ -432,17 +587,22 @@ def _simulate(
         if telemetry is None:
             ys = None
         else:
-            # In-scan telemetry: fused bucketize+scatter-add over the chunk
-            # (group id = node * 2 + is_read), padding masked by weight 0.
-            w = cv.astype(jnp.float32)
+            if hist is None:
+                # jax replay path: fused bucketize+scatter-add over the
+                # chunk (group id = node * 2 + is_read), padding masked by
+                # weight 0 — dispatched per TelemetryConfig.backend. The
+                # pallas replay path already folded the histogram inside
+                # the chunk-replay kernel.
+                hist = chunk_histogram(
+                    lat, cn * 2 + cr.astype(jnp.int32),
+                    cv.astype(jnp.float32), telemetry, n,
+                )
             ys = TelemetryLeaves(
-                hist=chunk_histogram(
-                    lat, cn * 2 + cr.astype(jnp.int32), w, telemetry, n
-                ),
+                hist=hist,
                 hits=chunk_hits,
                 reads=chunk_reads,
                 lat_sum=chunk_lat,
-                count=jnp.sum(w),
+                count=chunk_count,
                 adds=chunk_moves[0],
                 drops=chunk_moves[1],
                 expiry_evictions=chunk_moves[2],
@@ -471,7 +631,22 @@ def _simulate(
     ), ys
 
 
-_simulate_jit = partial(jax.jit, static_argnames=_SIM_STATICS)(_simulate)
+@lru_cache(maxsize=1)
+def _simulate_jit():
+    """The jitted single-seed engine, built lazily so importing this
+    module never initialises the XLA backend as a side effect.
+
+    The trace buffers ([R] keys/nodes/is_read) are consumed by the
+    reshape at the top of _simulate and never read again by the caller
+    (run_scenario regenerates the trace per call), so they are donated —
+    XLA reuses their HBM for the chunked copies instead of
+    double-buffering a whole trace. Donation is a no-op (with a warning)
+    on CPU, so it is gated on the backend. The batched/grid engines share
+    traces across policy groups and must NOT donate."""
+    donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+    return partial(
+        jax.jit, static_argnames=_SIM_STATICS, donate_argnums=donate
+    )(_simulate)
 
 
 @partial(jax.jit, static_argnames=_SIM_STATICS)
@@ -502,6 +677,12 @@ def _traces_for_seeds(cfg: WorkloadConfig, seeds: Array) -> Trace:
     return jax.vmap(lambda s: generate_trace(cfg, s))(seeds)
 
 
+# Single-seed trace generation, jitted: the eager spelling dispatched ~10
+# device ops per call, a measurable slice of a warm 1M-request run (PRNG
+# is deterministic, so the jitted trace is bit-identical).
+_generate_trace_jit = partial(jax.jit, static_argnames=("cfg",))(generate_trace)
+
+
 def run_scenario(
     workload: WorkloadConfig,
     cluster: ClusterConfig,
@@ -510,6 +691,7 @@ def run_scenario(
     daemon_interval: int = 1000,
     *,
     telemetry: TelemetryConfig | None = None,
+    replay_backend: str = "jax",
     scenario: Scenario | None = None,
     ownership_coefficient: float | None = None,
     expiry_ticks: int | None = None,
@@ -530,10 +712,15 @@ def run_scenario(
         return value becomes ``(SimResult, SimTrace)``; when ``None`` (the
         default) the engine and its results are bit-identical to the
         pre-telemetry code path.
+    replay_backend: the per-chunk request-path implementation — ``"jax"``
+        (the bit-exact jnp composition, default) or ``"pallas"`` (the
+        fused one-pass ``kernels.chunk_replay`` kernel; aggregates are
+        allclose, histogram counts bit-exact). See the module docstring.
     scenario / ownership_coefficient / expiry_ticks / decay / daemon_period
         / backend: DEPRECATED legacy spelling, mapped onto a policy with a
         one-shot warning quoting the exact replacement.
     """
+    _check_replay_backend("run_scenario", replay_backend)
     static, params = _prepare(
         workload, cluster, "run_scenario", policy, scenario,
         dict(
@@ -545,8 +732,8 @@ def run_scenario(
         ),
     )
     telemetry = normalize_telemetry(telemetry)
-    trace = generate_trace(workload, seed)
-    leaves, telem = _simulate_jit(
+    trace = _generate_trace_jit(workload, seed)
+    leaves, telem = _simulate_jit()(
         trace.keys,
         trace.nodes,
         trace.is_read,
@@ -557,6 +744,7 @@ def run_scenario(
         policy=static,
         daemon_interval=daemon_interval,
         telemetry=telemetry,
+        replay_backend=replay_backend,
     )
     tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
     result = SimResult(
@@ -631,7 +819,7 @@ def _reference_engine(
         nodes = trace.nodes[lo:hi]
         is_read = trace.is_read[lo:hi]
 
-        lat, read_hits = _chunk_latency_jit(
+        lat, read_hits = _chunk_latency(
             store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
@@ -784,7 +972,8 @@ def _result_from_leaves(leaves, seed_idx: int) -> SimResult:
 
 
 def _batched_policy_rows(
-    policies, wl, cluster, iterations, daemon_interval, telemetry=None
+    policies, wl, cluster, iterations, daemon_interval, telemetry=None,
+    replay_backend="jax",
 ):
     """All policies × all seeds for one workload: same-family policies
     (identical static key) have their dynamic params stacked and the policy
@@ -799,7 +988,8 @@ def _batched_policy_rows(
         traces.object_bytes,
     )
     statics = dict(
-        cluster=cluster, daemon_interval=daemon_interval, telemetry=telemetry
+        cluster=cluster, daemon_interval=daemon_interval, telemetry=telemetry,
+        replay_backend=replay_backend,
     )
 
     groups: dict = {}  # static key -> list of (position, params)
@@ -852,6 +1042,7 @@ def run_experiment(
     backend: str = "jax",
     policies=None,
     telemetry: TelemetryConfig | None = None,
+    replay_backend: str = "jax",
     **workload_kwargs,
 ) -> dict:
     """Paper Figure 2/3 grid — and its generalisation to arbitrary policy
@@ -872,6 +1063,10 @@ def run_experiment(
         (the oracle the equivalence tests pin the scan engine to).
     backend: legacy-grid only — the Redynis sweep backend ("jax"|"pallas");
         policies carry their own backend field.
+    replay_backend: the scan engine's per-chunk request path —
+        ``"jax"`` (bit-exact jnp, default) or ``"pallas"`` (the fused
+        ``kernels.chunk_replay`` kernel). The reference engine is the jnp
+        oracle by definition and rejects ``"pallas"``.
     telemetry: optional :class:`TelemetryConfig`. When enabled each row
         additionally reports ``p99_latency_ms`` with a ``p99_ci99`` CI band
         (99% CI over the per-seed interpolated P99 samples), the canonical
@@ -884,6 +1079,12 @@ def run_experiment(
     workload_kwargs.setdefault("num_nodes", cluster.num_nodes)
     if engine not in ("scan", "reference"):
         raise ValueError(f"unknown engine {engine!r}")
+    _check_replay_backend("run_experiment", replay_backend)
+    if engine == "reference" and replay_backend != "jax":
+        raise ValueError(
+            "run_experiment: engine='reference' is the jnp oracle and only "
+            "supports replay_backend='jax'"
+        )
     telemetry = normalize_telemetry(telemetry)
 
     legacy = policies is None
@@ -942,7 +1143,8 @@ def run_experiment(
                 )
         else:
             rows_leaves, calls = _batched_policy_rows(
-                pols, wl, cluster, iterations, daemon_interval, telemetry
+                pols, wl, cluster, iterations, daemon_interval, telemetry,
+                replay_backend,
             )
             out["num_batched_calls"] += calls
             per_policy = [
@@ -953,11 +1155,19 @@ def run_experiment(
         for label, results, telem in zip(labels, per_policy, per_telem):
             samples = np.array([r.throughput_ops_s for r in results])
             mean, ci = confidence_interval_99(samples)
+            # hit_rate is the seed MEAN with its own 99% CI band — the
+            # seed-0 point estimate it replaces was biased for any policy
+            # whose convergence depends on the trace (EXPERIMENTS.md
+            # §Engine-performance notes the change).
+            hit_mean, hit_ci = confidence_interval_99(
+                np.array([r.hit_rate for r in results])
+            )
             row = {
                 "read_fraction": rf,
                 "throughput": mean,
                 "ci99": ci,
-                "hit_rate": results[0].hit_rate,
+                "hit_rate": hit_mean,
+                "hit_rate_ci99": hit_ci,
             }
             if not legacy:
                 row["mean_latency_ms"] = float(

@@ -1,0 +1,332 @@
+"""Chunk-replay fusion guard rails (ISSUE-5 acceptance).
+
+1. Kernel ⇄ reference parity: the fused Pallas chunk-replay kernel
+   (one-hot-matmul gather + latency + busy/histogram folds, interpret mode
+   on CPU) must agree with the pure-jnp oracle across read modes ×
+   topologies × read fractions — hit/read/count/histogram *bit-exactly*
+   (integer counts, and the kernel replicates the oracle's f32 latency op
+   sequence so buckets match), busy/lat_sum allclose (tile-order
+   re-association only).
+2. Hypothesis fuzz over random RTT matrices and replica maps.
+3. Engine-level goldens: ``run_scenario(replay_backend="pallas")`` leaves
+   SimResult within tolerance of the bit-exact jax backend on all four
+   legacy scenarios, with telemetry histograms identical, and the
+   batched ``run_experiment`` grid accepts the backend too.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chunk_replay.ops import chunk_latency, chunk_replay
+from repro.kernels.chunk_replay.ref import READ_MODES, chunk_replay_ref
+from repro.kvsim import (
+    REPLAY_BACKENDS,
+    ClusterConfig,
+    RedynisPolicy,
+    Scenario,
+    SimResult,
+    TelemetryConfig,
+    WorkloadConfig,
+    run_experiment,
+    run_scenario,
+    run_scenario_reference,
+    wan5_cluster,
+    wan5_edge_cluster,
+    wan5_workload,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# 1. Kernel ⇄ reference parity.
+# ---------------------------------------------------------------------------
+
+# topology name -> [N, N] RTT matrix (as the engines see them).
+TOPOLOGIES = {
+    "flat": ClusterConfig().rtt_matrix(),
+    "wan5": wan5_cluster().rtt_matrix(),
+    "wan5_edge": wan5_edge_cluster().rtt_matrix(),
+}
+
+
+def _random_chunk(seed, b, k, n, read_fraction, empty_rows=0.0):
+    """A random frozen map + request slab; ``empty_rows`` leaves some keys
+    with no replica at all (the orphan worst-RTT path)."""
+    rng = np.random.default_rng(seed)
+    hosts = rng.random((k, n)) < 0.4
+    if empty_rows:
+        hosts[rng.random(k) < empty_rows] = False
+    return (
+        jnp.asarray(hosts),
+        jnp.asarray(rng.integers(0, k, b).astype(np.int32)),
+        jnp.asarray(rng.integers(0, n, b).astype(np.int32)),
+        jnp.asarray(rng.random(b) < read_fraction),
+        jnp.asarray(rng.random(b) < 0.9),  # valid mask (padding path)
+    )
+
+
+def check_kernel_matches_ref(
+    rtt, seed, b, k, read_mode, read_fraction,
+    num_bins=64, tr=256, tkey=128, empty_rows=0.0, master=0,
+):
+    n = rtt.shape[0]
+    hosts, keys, nodes, is_read, valid = _random_chunk(
+        seed, b, k, n, read_fraction, empty_rows
+    )
+    kw = dict(
+        service_ms=10.0, master=master, xfer_read_ms=2.0, xfer_write_ms=3.0,
+        read_mode=read_mode, num_bins=num_bins, lo=1.0, hi=5_000.0,
+    )
+    ref = chunk_replay_ref(hosts, keys, nodes, is_read, valid, rtt, **kw)
+    ker = chunk_replay(
+        hosts, keys, nodes, is_read, valid, rtt,
+        backend="pallas", tr=tr, tkey=tkey, interpret=True, **kw,
+    )
+    # busy / lat_sum: reductions re-associate across tiles -> allclose.
+    np.testing.assert_allclose(
+        np.asarray(ker[0]), np.asarray(ref[0]), rtol=1e-5, err_msg="busy"
+    )
+    np.testing.assert_allclose(
+        float(ker[1]), float(ref[1]), rtol=1e-5, err_msg="lat_sum"
+    )
+    # hits / reads / count: integer counts -> bit-exact.
+    for i, name in ((2, "hits"), (3, "reads"), (4, "count")):
+        assert float(ker[i]) == float(ref[i]), (name, ker[i], ref[i])
+    # histogram: same f32 latency bits -> same buckets -> exact counts.
+    np.testing.assert_array_equal(np.asarray(ker[5]), np.asarray(ref[5]))
+    # conservation: every valid request lands in exactly one bucket.
+    np.testing.assert_allclose(float(jnp.sum(ker[5])), float(ker[4]))
+
+
+# read modes × topologies × read fractions, with odd sizes exercising the
+# request/key padding paths and empty replica rows the orphan guard.
+PARITY_GRID = [
+    (topo, mode, rf)
+    for topo in TOPOLOGIES
+    for mode in READ_MODES
+    for rf in (1.0, 0.75, 0.5)
+]
+
+
+@pytest.mark.parametrize(
+    "topo,mode,rf", PARITY_GRID, ids=[f"{t}-{m}-{rf}" for t, m, rf in PARITY_GRID]
+)
+def test_chunk_replay_kernel_matches_ref(topo, mode, rf):
+    check_kernel_matches_ref(
+        TOPOLOGIES[topo], seed=hash((topo, mode, rf)) % 2**32,
+        b=777, k=333, read_mode=mode, read_fraction=rf, empty_rows=0.1,
+    )
+
+
+def test_chunk_replay_without_histogram():
+    """num_bins=0 (telemetry off) drops the histogram output entirely."""
+    rtt = TOPOLOGIES["wan5"]
+    hosts, keys, nodes, is_read, valid = _random_chunk(3, 500, 200, 5, 0.8)
+    kw = dict(
+        service_ms=10.0, master=2, xfer_read_ms=0.0, xfer_write_ms=0.0,
+        read_mode="map", num_bins=0,
+    )
+    ref = chunk_replay_ref(hosts, keys, nodes, is_read, valid, rtt, **kw)
+    ker = chunk_replay(
+        hosts, keys, nodes, is_read, valid, rtt,
+        backend="pallas", tr=128, tkey=64, interpret=True, **kw,
+    )
+    assert ref[5] is None and ker[5] is None
+    np.testing.assert_allclose(np.asarray(ker[0]), np.asarray(ref[0]), rtol=1e-5)
+    assert float(ker[2]) == float(ref[2])
+
+
+def test_chunk_replay_single_tile_and_single_request():
+    """Degenerate shapes: one request, one key tile."""
+    rtt = TOPOLOGIES["flat"]
+    check_kernel_matches_ref(
+        rtt, seed=11, b=1, k=1, read_mode="map", read_fraction=1.0,
+        tr=256, tkey=256,
+    )
+
+
+def test_chunk_replay_validates_inputs():
+    rtt = TOPOLOGIES["flat"]
+    hosts, keys, nodes, is_read, valid = _random_chunk(0, 8, 8, 3, 1.0)
+    kw = dict(service_ms=1.0, master=0, xfer_read_ms=0.0, xfer_write_ms=0.0)
+    with pytest.raises(ValueError, match="read_mode"):
+        chunk_replay(hosts, keys, nodes, is_read, valid, rtt,
+                     read_mode="bogus", **kw)
+    with pytest.raises(ValueError, match="backend"):
+        chunk_replay(hosts, keys, nodes, is_read, valid, rtt,
+                     read_mode="map", backend="cuda", **kw)
+    assert set(REPLAY_BACKENDS) == {"jax", "pallas"}
+
+
+def test_chunk_latency_matches_flat_model():
+    """The scalar-form latency pass reproduces the paper's flat model on a
+    hand-built chunk: local hit = service, remote read = service + RTT."""
+    hosts = jnp.asarray([[True, False, False], [True, True, True]])
+    keys = jnp.asarray([0, 0, 1], jnp.int32)
+    nodes = jnp.asarray([0, 1, 2], jnp.int32)
+    is_read = jnp.asarray([True, True, False])
+    rtt = ClusterConfig().rtt_matrix()
+    lat, hits = chunk_latency(
+        hosts, keys, nodes, is_read, rtt,
+        service_ms=10.0, master=0, xfer_read_ms=0.0, xfer_write_ms=0.0,
+        read_mode="map",
+    )
+    # key 0 at its home -> pure service; key 0 read remotely -> + 100 ms;
+    # key 1 write from node 2 with 3 owners -> relay(100) + post(100).
+    np.testing.assert_allclose(np.asarray(lat), [10.0, 110.0, 210.0])
+    np.testing.assert_array_equal(np.asarray(hits), [True, False, False])
+
+
+if HAVE_HYPOTHESIS:
+    chunk_strategy = st.tuples(
+        st.integers(0, 2**31 - 1),  # numpy seed
+        st.integers(1, 500),  # b requests (odd sizes exercise the pad)
+        st.integers(1, 300),  # k keys
+        st.integers(2, 8),  # n nodes
+        st.sampled_from(READ_MODES),
+        st.floats(0.0, 1.0),  # read fraction
+        st.sampled_from([64, 256]),  # request tile
+        st.sampled_from([32, 128]),  # key tile
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(chunk_strategy)
+    def test_chunk_replay_kernel_matches_ref_fuzz(params):
+        seed, b, k, n, mode, rf, tr, tkey = params
+        rng = np.random.default_rng(seed + 1)
+        # Random asymmetric-free RTT: zero-ish diagonal, arbitrary WAN.
+        rtt = rng.uniform(1.0, 400.0, (n, n))
+        np.fill_diagonal(rtt, rng.uniform(0.0, 2.0, n))
+        check_kernel_matches_ref(
+            jnp.asarray(np.float32(rtt)), seed=seed, b=b, k=k,
+            read_mode=mode, read_fraction=rf, tr=tr, tkey=tkey,
+            empty_rows=0.3, master=int(rng.integers(0, n)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# 3. Engine-level goldens: replay_backend="pallas" vs the bit-exact engine.
+# ---------------------------------------------------------------------------
+
+RTOL = 1e-4
+
+
+def assert_results_match(a: SimResult, b: SimResult, ctx: str = ""):
+    for field, x, y in zip(SimResult._fields, a, b):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=RTOL, err_msg=f"{ctx} {field}"
+        )
+
+
+@pytest.mark.parametrize("scenario", list(Scenario))
+def test_pallas_replay_matches_jax_all_scenarios(scenario):
+    """All four legacy scenarios: the fused kernel engine must leave
+    SimResult within tolerance of the bit-exact jax replay path."""
+    wl = WorkloadConfig(num_requests=4_000, num_keys=200, skewed=True)
+    cl = ClusterConfig()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        a = run_scenario(wl, cl, scenario, seed=2, daemon_interval=500)
+        b = run_scenario(
+            wl, cl, scenario, seed=2, daemon_interval=500,
+            replay_backend="pallas",
+        )
+    assert_results_match(a, b, scenario.value)
+
+
+def test_pallas_replay_matches_reference_wan5_telemetry():
+    """wan5 + telemetry: the kernel's fused histogram fold must reproduce
+    the reference engine's histogram EXACTLY (same latency bits -> same
+    buckets), and aggregates stay within tolerance."""
+    wl = wan5_workload(num_requests=3_000, num_keys=150, affinity=0.8)
+    cl = wan5_cluster()
+    cfg = TelemetryConfig()
+    a, ta = run_scenario(
+        wl, cl, RedynisPolicy(h=0.2), seed=0, daemon_interval=500,
+        telemetry=cfg, replay_backend="pallas",
+    )
+    b, tb = run_scenario_reference(
+        wl, cl, RedynisPolicy(h=0.2), seed=0, daemon_interval=500,
+        telemetry=cfg,
+    )
+    assert_results_match(a, b, "wan5-telemetry")
+    np.testing.assert_array_equal(ta.hist_group, tb.hist_group)
+    np.testing.assert_array_equal(ta.chunk_hist, tb.chunk_hist)
+
+
+def test_pallas_replay_padded_trace_and_capacity():
+    """Trace padding (valid-masked rows) + finite budgets + lognormal
+    sizes all flow through the kernel path unchanged."""
+    wl = WorkloadConfig(
+        num_requests=3_300, num_keys=150, skewed=True, object_bytes_sigma=0.5
+    )
+    cl = ClusterConfig(capacity_bytes=24 * 1024.0)
+    a = run_scenario(wl, cl, RedynisPolicy(), seed=1, daemon_interval=500)
+    b = run_scenario(
+        wl, cl, RedynisPolicy(), seed=1, daemon_interval=500,
+        replay_backend="pallas",
+    )
+    assert_results_match(a, b, "padded-capacity")
+    assert a.capacity_evictions > 0
+
+
+def test_run_experiment_accepts_replay_backend():
+    """The batched (seed-vmapped) engine threads replay_backend through,
+    and rejects it on the reference engine (the jnp oracle)."""
+    kw = dict(
+        read_fractions=(0.9,), skewed=True, iterations=2,
+        num_requests=2_000, num_keys=100,
+    )
+    a = run_experiment(policies=[RedynisPolicy()], **kw)
+    b = run_experiment(
+        policies=[RedynisPolicy()], replay_backend="pallas", **kw
+    )
+    (label,) = a["policies"]
+    ra, rb = a["policies"][label][0], b["policies"][label][0]
+    np.testing.assert_allclose(rb["throughput"], ra["throughput"], rtol=RTOL)
+    np.testing.assert_allclose(rb["hit_rate"], ra["hit_rate"], rtol=RTOL)
+    with pytest.raises(ValueError, match="reference"):
+        run_experiment(
+            policies=[RedynisPolicy()], engine="reference",
+            replay_backend="pallas", **kw,
+        )
+    with pytest.raises(ValueError, match="replay_backend"):
+        run_scenario(
+            WorkloadConfig(num_requests=100, num_keys=10), ClusterConfig(),
+            RedynisPolicy(), replay_backend="cuda",
+        )
+
+
+def test_experiment_hit_rate_is_seed_mean_with_ci():
+    """ISSUE-5 satellite: rows report the seed-MEAN hit rate with a 99% CI
+    band (the old seed-0 point estimate carried no uncertainty)."""
+    res = run_experiment(
+        read_fractions=(0.9,), skewed=True, iterations=3,
+        num_requests=2_000, num_keys=100, affinity=0.8,
+        policies=[RedynisPolicy()],
+    )
+    (label,) = res["policies"]
+    row = res["policies"][label][0]
+    per_seed = [r.hit_rate for r in row["results"]]
+    np.testing.assert_allclose(row["hit_rate"], np.mean(per_seed), rtol=1e-12)
+    assert row["hit_rate_ci99"] >= 0.0
+    # The band actually reflects seed spread when there is any.
+    if np.std(per_seed) > 0:
+        assert row["hit_rate_ci99"] > 0.0
+    # Legacy scenario grid carries the same surface (both engines share
+    # the row-building path).
+    legacy = run_experiment(
+        read_fractions=(1.0,), iterations=2, num_requests=1_000,
+        engine="reference",
+    )
+    for rows in legacy["scenarios"].values():
+        assert "hit_rate_ci99" in rows[0]
