@@ -16,6 +16,7 @@ __all__ = [
     "emit",
     "banner",
     "write_bench_json",
+    "json_rows",
     "dedupe_policies",
     "WAN5_WORKLOAD_KWARGS",
 ]
@@ -44,6 +45,17 @@ def dedupe_policies(candidates, num_nodes: int) -> list:
             seen.add(label)
             out.append(p)
     return out
+
+
+def json_rows(table: dict) -> dict:
+    """``run_experiment`` rows minus the non-JSON leaves (the per-seed
+    ``SimResult`` list, the merged ``SimTrace``) — the shape the
+    ``BENCH_*.json`` artifacts persist."""
+    skip = ("results", "trace")
+    return {
+        label: [{k: v for k, v in row.items() if k not in skip} for row in rows]
+        for label, rows in table.items()
+    }
 
 
 def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:

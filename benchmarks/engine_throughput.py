@@ -28,11 +28,14 @@ generation and host-side result/trace materialisation, exactly what
 every driver pays.
 
 ``--baseline PATH`` (default: the checked-in
-``benchmarks/baselines/BENCH_engine_throughput.json``) soft-warns —
-``WARNING,engine_throughput_regression,...`` lines, never a nonzero exit —
-when any matching grid row regresses more than 20%: wall-clock noise across
-runners makes a hard gate flaky, but the warning makes regressions visible
-in every CI log.
+``benchmarks/baselines/BENCH_engine_throughput.json``) warns —
+``WARNING,engine_throughput_regression,...`` lines — when any matching grid
+row regresses more than 20%. Absolute requests/sec warnings never fail the
+job (wall-clock noise across runners makes that gate flaky), but
+``--fail-on-regression`` promotes the *speedup-ratio* warnings to a hard
+nonzero exit: fused and legacy engines run on the same box, so the
+``speedup_vs_legacy`` ratio is machine-independent and a >20% drop there is
+a genuine code-path regression, not runner noise.
 
 Note on ``--backends pallas`` off-TPU: the Mosaic kernel runs in interpret
 mode on CPU (a correctness/compile-path row, orders of magnitude slower
@@ -294,15 +297,17 @@ def _speedup_key(row):
 
 
 def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
-    """Soft-warn (never fail) when a grid row is >20% below the checked-in
-    baseline for the identical configuration.
+    """Warn when a grid row is >20% below the checked-in baseline for the
+    identical configuration; returns the warned rows, each tagged with
+    ``"kind"`` so callers can gate selectively.
 
-    Two signals: absolute requests/sec (machine-DEPENDENT — a slower
-    runner trips it without any code change, which is one reason this
-    never fails the job) and, when both sides carry them, the
-    ``speedup_vs_legacy`` ratios — machine-independent, since fused and
-    legacy engines run on the same box, so a drop there is a genuine
-    code-path regression."""
+    Two signals: absolute requests/sec (``kind="throughput"``,
+    machine-DEPENDENT — a slower runner trips it without any code change,
+    so it only ever warns) and, when both sides carry them, the
+    ``speedup_vs_legacy`` ratios (``kind="speedup"``) — machine-
+    independent, since fused and legacy engines run on the same box, so a
+    drop there is a genuine code-path regression and the one signal
+    ``--fail-on-regression`` hard-gates on."""
     if not os.path.exists(baseline_path):
         print(f"NOTE,no baseline at {baseline_path}, skipping regression check")
         return []
@@ -323,7 +328,7 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
             continue
         ratio = row["speedup_vs_legacy"] / ref
         if ratio < 1.0 - threshold:
-            warned.append(row)
+            warned.append({"kind": "speedup", **row})
             print(
                 "WARNING,engine_speedup_regression,"
                 f"{row['policy']}/di={row['daemon_interval']}/"
@@ -339,7 +344,7 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
         matched += 1
         ratio = row["requests_per_s"] / ref
         if ratio < 1.0 - threshold:
-            warned.append(row)
+            warned.append({"kind": "throughput", **row})
             print(
                 "WARNING,engine_throughput_regression,"
                 f"{row['engine']}/{row['policy']}/{row['replay_backend']},"
@@ -378,6 +383,7 @@ def main(
     baseline: str | None = DEFAULT_BASELINE,
     policy=None,
     replay_backend: str | None = None,
+    fail_on_regression: bool = False,
 ) -> dict:
     banner("engine_throughput: simulator requests/sec, fused vs pre-fusion")
     if replay_backend is not None:
@@ -504,6 +510,14 @@ def main(
         backend_platform=jax.default_backend(),
         topology="wan5", skewed=True, read_fraction=0.9,
     )
+    if fail_on_regression:
+        hard = [w for w in warned if w.get("kind") == "speedup"]
+        if hard:
+            raise SystemExit(
+                f"FAIL,engine_speedup_regression,{len(hard)} fused-vs-legacy "
+                f"speedup ratio(s) >20% below baseline (machine-independent "
+                f"signal; see WARNING lines above)"
+            )
     return metrics
 
 
@@ -532,8 +546,14 @@ if __name__ == "__main__":
     ap.add_argument("--acceptance", action="store_true",
                     help="run the 1M-request ISSUE-5 acceptance comparison")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
-                    help="checked-in BENCH json to soft-warn against "
+                    help="checked-in BENCH json to warn against "
                     "('' disables)")
+    ap.add_argument(
+        "--fail-on-regression", action="store_true",
+        help="exit nonzero when a fused-vs-legacy speedup ratio regresses "
+        ">20% vs the baseline (absolute req/s stays warn-only: it is "
+        "machine-dependent)",
+    )
     args = ap.parse_args()
     main(
         num_requests=args.num_requests,
@@ -548,4 +568,5 @@ if __name__ == "__main__":
         }[args.telemetry],
         acceptance=args.acceptance,
         baseline=args.baseline or None,
+        fail_on_regression=args.fail_on_regression,
     )

@@ -15,8 +15,16 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import banner, emit, write_bench_json
-from repro.kvsim import run_experiment
+from benchmarks.common import banner, emit, json_rows, write_bench_json
+from repro.kvsim import RedynisPolicy, StaticPolicy, run_experiment
+
+# The paper's four scenarios as policies, keyed by the figure's labels.
+BASELINES = {
+    "local": StaticPolicy(mode="local"),
+    "remote": StaticPolicy(mode="remote"),
+    "optimized": RedynisPolicy(),
+    "replicated": StaticPolicy(mode="replicated"),
+}
 
 
 def main(
@@ -29,6 +37,7 @@ def main(
     banner("fig2: uniform object access distribution (paper Figure 2)")
     t_start = time.perf_counter()
     res = run_experiment(
+        policies=list(BASELINES.values()),
         read_fractions=(1.0, 0.9, 0.75, 0.5),
         skewed=False,
         iterations=iterations,
@@ -37,7 +46,9 @@ def main(
         replay_backend=replay_backend,
     )
     wall_s = time.perf_counter() - t_start
-    for scenario, rows in res["scenarios"].items():
+    # run_experiment keys rows by resolved-policy label, in input order.
+    by_name = dict(zip(BASELINES, res["policies"].values()))
+    for scenario, rows in by_name.items():
         for row in rows:
             emit(
                 "fig2_uniform",
@@ -49,9 +60,9 @@ def main(
                 hit_rate=round(row["hit_rate"], 4),
             )
     # Paper §10 validation: Optimized ~10x Remote, near Local.
-    opt = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["optimized"]}
-    rem = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["remote"]}
-    loc = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["local"]}
+    opt = {r["read_fraction"]: r["throughput"] for r in by_name["optimized"]}
+    rem = {r["read_fraction"]: r["throughput"] for r in by_name["remote"]}
+    loc = {r["read_fraction"]: r["throughput"] for r in by_name["local"]}
     for rf in opt:
         emit(
             "fig2_validation",
@@ -63,7 +74,7 @@ def main(
 
     write_bench_json(
         "fig2_uniform",
-        {"scenarios": res["scenarios"], "wall_time_s": wall_s},
+        {"scenarios": json_rows(by_name), "wall_time_s": wall_s},
         engine=engine,
         iterations=iterations,
         num_requests=num_requests,
@@ -73,14 +84,15 @@ def main(
     if compare_engines:
         banner("fig2b: scan-fusion speedup over the reference chunk loop")
         timings = {}
+        kw = dict(
+            policies=list(BASELINES.values()),
+            iterations=iterations,
+            num_requests=num_requests,
+        )
         for eng in ("scan", "reference"):
-            run_experiment(
-                iterations=iterations, num_requests=num_requests, engine=eng
-            )  # compile / warm caches
+            run_experiment(engine=eng, **kw)  # compile / warm caches
             t0 = time.perf_counter()
-            run_experiment(
-                iterations=iterations, num_requests=num_requests, engine=eng
-            )
+            run_experiment(engine=eng, **kw)
             timings[eng] = time.perf_counter() - t0
             emit("fig2b_engine_s", round(timings[eng], 3), "s", engine=eng)
         emit(

@@ -10,9 +10,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import banner, emit, write_bench_json
+from benchmarks.common import banner, emit, json_rows, write_bench_json
 from repro.kvsim import (
     ClusterConfig,
     RedynisPolicy,
@@ -25,6 +23,14 @@ from repro.kvsim import (
     wan5_workload,
 )
 
+# The paper's four scenarios as policies, keyed by the figure's labels.
+BASELINES = {
+    "local": StaticPolicy(mode="local"),
+    "remote": StaticPolicy(mode="remote"),
+    "optimized": RedynisPolicy(),
+    "replicated": StaticPolicy(mode="replicated"),
+}
+
 
 def main(
     iterations: int = 5,
@@ -34,13 +40,16 @@ def main(
     banner("fig3: skewed (zipfian 90/10) object access (paper Figure 3)")
     t_start = time.perf_counter()
     res = run_experiment(
+        policies=list(BASELINES.values()),
         read_fractions=(1.0, 0.9, 0.75, 0.5),
         skewed=True,
         iterations=iterations,
         num_requests=num_requests,
         replay_backend=replay_backend,
     )
-    for scenario, rows in res["scenarios"].items():
+    # run_experiment keys rows by resolved-policy label, in input order.
+    by_name = dict(zip(BASELINES, res["policies"].values()))
+    for scenario, rows in by_name.items():
         for row in rows:
             emit(
                 "fig3_skewed",
@@ -51,9 +60,9 @@ def main(
                 ci99=round(row["ci99"], 2),
                 hit_rate=round(row["hit_rate"], 4),
             )
-    opt = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["optimized"]}
-    rem = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["remote"]}
-    loc = {r["read_fraction"]: r["throughput"] for r in res["scenarios"]["local"]}
+    opt = {r["read_fraction"]: r["throughput"] for r in by_name["optimized"]}
+    rem = {r["read_fraction"]: r["throughput"] for r in by_name["remote"]}
+    loc = {r["read_fraction"]: r["throughput"] for r in by_name["local"]}
     for rf in opt:
         emit(
             "fig3_validation",
@@ -118,7 +127,7 @@ def main(
     write_bench_json(
         "fig3_skewed",
         {
-            "scenarios": res["scenarios"],
+            "scenarios": json_rows(by_name),
             "wall_time_s": time.perf_counter() - t_start,
         },
         iterations=iterations,

@@ -94,8 +94,14 @@ def roofline_table(res) -> str:
 
 
 def find_tail_latency_json():
-    """BENCH_tail_latency.json from $BENCH_DIR, else the repo root."""
-    for d in filter(None, [os.environ.get("BENCH_DIR"), ROOT]):
+    """BENCH_tail_latency.json from $BENCH_DIR, the repo root, else the
+    checked-in baselines directory."""
+    dirs = [
+        os.environ.get("BENCH_DIR"),
+        ROOT,
+        os.path.join(ROOT, "benchmarks", "baselines"),
+    ]
+    for d in filter(None, dirs):
         p = os.path.join(d, "BENCH_tail_latency.json")
         if os.path.exists(p):
             return p
@@ -104,6 +110,8 @@ def find_tail_latency_json():
 
 TAIL_BEGIN = "<!-- TAIL_LATENCY_TABLE_BEGIN -->"
 TAIL_END = "<!-- TAIL_LATENCY_TABLE_END -->"
+CONTENTION_BEGIN = "<!-- CONTENTION_TAIL_TABLE_BEGIN -->"
+CONTENTION_END = "<!-- CONTENTION_TAIL_TABLE_END -->"
 
 
 def tail_latency_table(bench) -> str:
@@ -128,6 +136,34 @@ def tail_latency_table(bench) -> str:
     return "\n".join(lines)
 
 
+def contention_table(bench) -> str:
+    """§Queueing-model matrix from the contention-on grid rows."""
+    c = bench["metrics"].get("contention", {})
+    rows = c.get("rows", [])
+    if not rows:
+        return "(no contention rows in BENCH_tail_latency.json — re-run " \
+               "`benchmarks/tail_latency.py` without `--no-contention`)"
+    lines = [
+        "| capacity_factor | policy | hit rate | peak ρ | P50 ms | P99 ms (±CI99) | P99.9 ms |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['capacity_factor']} | `{r['policy']}` | "
+            f"{r['hit_rate']:.3f} | {r['peak_load_factor']:.3f} | "
+            f"{r['p50_ms']:.1f} | {r['p99_ms']:.1f} (±{r['p99_ci99']:.1f}) | "
+            f"{r['p999_ms']:.1f} |"
+        )
+    lines.append("")
+    lines.append(
+        f"(wan5 + `ServiceConfig(serve_bytes_per_ms="
+        f"{c['serve_bytes_per_ms']:g})`, balanced region weights, read "
+        f"fraction 1.0, lognormal object sizes σ={c['object_bytes_sigma']:g}; "
+        f"{bench['num_requests']} requests × {bench['iterations']} seeds)"
+    )
+    return "\n".join(lines)
+
+
 def main() -> None:
     res = all_results()
     path = os.path.join(ROOT, "EXPERIMENTS.md")
@@ -136,15 +172,21 @@ def main() -> None:
     doc = doc.replace("<!-- DRYRUN_TABLE -->", dryrun_table(res))
     doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_table(res))
     tail_json = find_tail_latency_json()
-    if tail_json is not None and TAIL_BEGIN in doc and TAIL_END in doc:
-        # The rendered table lives BETWEEN the markers (which stay in the
-        # doc), so re-running this script refreshes it in place.
-        doc = re.sub(
-            re.escape(TAIL_BEGIN) + r".*?" + re.escape(TAIL_END),
-            f"{TAIL_BEGIN}\n{tail_latency_table(load(tail_json))}\n{TAIL_END}",
-            doc,
-            flags=re.DOTALL,
-        )
+    if tail_json is not None:
+        bench = load(tail_json)
+        # The rendered tables live BETWEEN the markers (which stay in the
+        # doc), so re-running this script refreshes them in place.
+        for begin, end, render in (
+            (TAIL_BEGIN, TAIL_END, tail_latency_table),
+            (CONTENTION_BEGIN, CONTENTION_END, contention_table),
+        ):
+            if begin in doc and end in doc:
+                doc = re.sub(
+                    re.escape(begin) + r".*?" + re.escape(end),
+                    f"{begin}\n{render(bench)}\n{end}",
+                    doc,
+                    flags=re.DOTALL,
+                )
     with open(path, "w") as f:
         f.write(doc)
     print(f"EXPERIMENTS.md updated with {len(res)} cells")

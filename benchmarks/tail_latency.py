@@ -8,6 +8,13 @@ quantiles off the in-scan latency histograms (one fused program per policy
 family — the trace is never re-walked). Emits per-(topology, policy) rows
 and persists ``BENCH_tail_latency.json`` with the schema's top-level
 ``quantiles`` block.
+
+The contention-on grid (``ServiceConfig``) re-races the size/cost policies
+on wan5 with the M/M/1 queueing model enabled: lognormal object sizes load
+the size-proportional service demand, and capacity_factor sets the load
+level. Region weights are balanced there so the tail isolates size-driven
+queueing (cost-per-KiB admission strands hot large objects on one owner
+node) rather than regional traffic imbalance.
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from benchmarks.common import (
 )
 from repro.kvsim import (
     ClusterConfig,
+    ServiceConfig,
     TelemetryConfig,
     parse_policy,
     run_experiment,
@@ -39,6 +47,25 @@ DEFAULT_POLICIES = (
     "topk:k=100",
     "costgreedy",
     "decaylfu:alpha=0.5",
+)
+
+# Contention-on grid: the size-aware sharding head-to-head. Light and
+# moderate load (capacity_factor 2.0 / 1.0) keep the load factors below the
+# stability clamp so the queueing mechanism — not the rho_max ceiling —
+# separates the policies.
+CONTENTION_POLICIES = (
+    "sizeaware",
+    "sizeaware:large_fanout=3",
+    "costgreedy",
+    "redynis",
+)
+CONTENTION_CAPACITY_FACTORS = (2.0, 1.0)
+CONTENTION_SERVE_BYTES_PER_MS = 128.0
+CONTENTION_SIGMA = 1.0
+CONTENTION_WORKLOAD_KWARGS = dict(
+    num_nodes=5,
+    region_weights=(0.2, 0.2, 0.2, 0.2, 0.2),
+    affinity=0.8,
 )
 
 # topology name -> (cluster, per-topology workload kwargs)
@@ -61,6 +88,8 @@ def main(
     num_bins: int = 128,
     policy=None,
     replay_backend: str = "jax",
+    contention: bool = True,
+    contention_capacity_factors=CONTENTION_CAPACITY_FACTORS,
 ) -> dict:
     banner("tail_latency: P50/P99/P99.9 per policy x topology")
     telemetry = TelemetryConfig(num_bins=num_bins)
@@ -125,9 +154,77 @@ def main(
                     ].post_convergence_moves() / iterations,
                 }
             )
+    contention_rows = []
+    if contention:
+        banner("tail_latency: contention-on grid (ServiceConfig, wan5)")
+        for cf in contention_capacity_factors:
+            svc = ServiceConfig(
+                serve_bytes_per_ms=CONTENTION_SERVE_BYTES_PER_MS,
+                capacity_factor=cf,
+            )
+            cluster = wan5_cluster()._replace(service=svc)
+            policies = dedupe_policies(
+                [parse_policy(s) for s in CONTENTION_POLICIES],
+                cluster.num_nodes,
+            )
+            res = run_experiment(
+                read_fractions=(1.0,),  # read-path contention, no broadcasts
+                skewed=True,
+                iterations=iterations,
+                num_requests=num_requests,
+                cluster=cluster,
+                policies=policies,
+                telemetry=telemetry,
+                replay_backend=replay_backend,
+                object_bytes_sigma=CONTENTION_SIGMA,
+                **CONTENTION_WORKLOAD_KWARGS,
+            )
+            out[f"contention/cf{cf}"] = res
+            for label, policy_rows in res["policies"].items():
+                row = policy_rows[0]
+                q = row["quantiles"]
+                p99 = row["p99_latency_ms"]
+                peak_rho = float(row["trace"].load_factor.max())
+                emit(
+                    "tail_latency_contention",
+                    round(p99, 2),
+                    "p99_ms",
+                    capacity_factor=cf,
+                    policy=label,
+                    p50=round(q["p50"], 2),
+                    p999=round(q["p999"], 2),
+                    p99_ci99=round(row["p99_ci99"], 2),
+                    hit_rate=round(row["hit_rate"], 4),
+                    peak_load_factor=round(peak_rho, 4),
+                )
+                quantiles[f"contention/cf{cf}/{label}"] = q
+                contention_rows.append(
+                    {
+                        "capacity_factor": cf,
+                        "policy": label,
+                        "hit_rate": row["hit_rate"],
+                        "mean_latency_ms": row["mean_latency_ms"],
+                        "p50_ms": q["p50"],
+                        "p99_ms": p99,
+                        "p999_ms": q["p999"],
+                        "p99_ci99": row["p99_ci99"],
+                        "peak_load_factor": peak_rho,
+                    }
+                )
+
     write_bench_json(
         "tail_latency",
-        {"rows": rows, "wall_time_s": time.perf_counter() - t_start},
+        {
+            "rows": rows,
+            "contention": {
+                "rows": contention_rows,
+                "capacity_factors": list(contention_capacity_factors),
+                "serve_bytes_per_ms": CONTENTION_SERVE_BYTES_PER_MS,
+                "object_bytes_sigma": CONTENTION_SIGMA,
+                "policies": list(CONTENTION_POLICIES),
+            },
+            "wall_time_s": time.perf_counter() - t_start,
+        },
         quantiles=quantiles,
         num_requests=num_requests,
         iterations=iterations,
@@ -158,6 +255,15 @@ if __name__ == "__main__":
         "--replay-backend", choices=["jax", "pallas"], default="jax",
         help="chunk-replay backend for the fused engine",
     )
+    ap.add_argument(
+        "--no-contention", action="store_true",
+        help="skip the ServiceConfig contention-on grid",
+    )
+    ap.add_argument(
+        "--contention-capacity-factors", nargs="+", type=float,
+        default=list(CONTENTION_CAPACITY_FACTORS), metavar="CF",
+        help="load levels for the contention grid (capacity_factor values)",
+    )
     args = ap.parse_args()
     main(
         num_requests=args.num_requests,
@@ -167,4 +273,6 @@ if __name__ == "__main__":
         topologies=tuple(args.topologies),
         num_bins=args.num_bins,
         replay_backend=args.replay_backend,
+        contention=not args.no_contention,
+        contention_capacity_factors=tuple(args.contention_capacity_factors),
     )

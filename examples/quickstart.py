@@ -51,10 +51,14 @@ print(
 
 # --- 2. placement policies as first-class values ----------------------------
 # The decision rule is a value: pass any registered policy to the trace
-# simulator (`scenario=Scenario.X` is the deprecated spelling of the same).
+# simulator. (The old `scenario=Scenario.X` enum spelling is removed; the
+# simulator raises with the exact policy replacement if you pass one.)
 from repro.kvsim import (
     ClusterConfig,
+    CostGreedyPolicy,
     RedynisPolicy,
+    ServiceConfig,
+    SizeAwarePolicy,
     StaticPolicy,
     TelemetryConfig,
     TopKPolicy,
@@ -95,6 +99,34 @@ for pol in (
     print(
         f"  {describe_policy(pol):28s} p50={p50:6.1f} ms  p99={p99:6.1f} ms  "
         f"converged@chunk {trace.convergence_chunk()}"
+    )
+
+# --- 2c. queueing-aware service times: size-aware vs cost-greedy ------------
+# service= turns on the M/M/1 contention term: each request's latency gains
+# a wait proportional to rho/(1-rho) on its serving node, where rho folds
+# size-proportional service demand (object_bytes / serve_bytes_per_ms)
+# against per-node capacity. Under lognormal object sizes, cost-per-KiB
+# admission (costgreedy) strands hot large objects on one owner node;
+# sizeaware's small/large pools replicate them with a bounded fanout, so its
+# tail is lower even though both replicate aggressively. Off by default —
+# service=None replays the exact uncontended program.
+from repro.kvsim import wan5_cluster
+
+wl_sz = WorkloadConfig(
+    num_requests=8_000, num_keys=1_000, skewed=True, num_nodes=5,
+    region_weights=(0.2,) * 5, affinity=0.8, read_fraction=1.0,
+    object_bytes_sigma=1.0,
+)
+cl_sz = wan5_cluster()._replace(
+    service=ServiceConfig(serve_bytes_per_ms=128.0, capacity_factor=1.0)
+)
+print("\ncontention on (M/M/1 queueing), sizeaware vs costgreedy:")
+for pol in (SizeAwarePolicy(), CostGreedyPolicy()):
+    r, trace = run_scenario(wl_sz, cl_sz, pol, telemetry=TelemetryConfig())
+    p50, p99 = trace.quantiles([0.5, 0.99])
+    print(
+        f"  {describe_policy(pol):28s} p50={p50:6.1f} ms  p99={p99:6.1f} ms  "
+        f"peak rho={float(trace.load_factor.max()):.3f}"
     )
 
 # --- 3. the same algorithm placing MoE experts ------------------------------

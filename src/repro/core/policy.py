@@ -60,6 +60,11 @@ costgreedy Size-aware greedy growth: add a replica where the RTT saved per
 decaylfu   Redynis's eligibility rule on an exponentially-decayed access
            EMA — a *stateful* policy that tracks traffic shifts without
            mutating the metadata layer's raw counters.
+sizeaware  Minos-style small/large pools (1802.00696): small objects
+           replicate wide (cheap bytes, served anywhere), large objects
+           keep a bounded fanout of their hottest request sources — the
+           placement that spreads queueing load under ``ServiceConfig``
+           contention instead of piling large-object demand on one node.
 ========== ==================================================================
 
 Registry: ``POLICIES`` maps names to classes; ``parse_policy`` turns CLI
@@ -98,6 +103,7 @@ __all__ = [
     "TopKPolicy",
     "CostGreedyPolicy",
     "DecayLFUPolicy",
+    "SizeAwarePolicy",
     "register_policy",
     "make_policy",
     "parse_policy",
@@ -549,6 +555,78 @@ class DecayLFUPolicy(NamedTuple):
         touched = jnp.sum(ema, axis=-1) > 0
         owners = jnp.where(touched[:, None], eligible, store.hosts)
         return owners, (ema, counts)
+
+
+@register_policy
+class SizeAwarePolicy(NamedTuple):
+    """Minos-style size-aware sharding (Didona & Zwaenepoel, 1802.00696):
+    partition keys into small/large *pools* by object size and condition
+    replica admission on the pool.
+
+    Small objects (``object_bytes <= size_threshold_bytes``) replicate on
+    every node once touched — they are cheap to hold and any node can then
+    serve them locally, keeping the small-request pool free of queueing
+    behind large transfers. Large objects keep a bounded fanout: the
+    ``large_fanout`` nodes issuing most of their accesses (their modal
+    source always included), which spreads each large object's service
+    demand across its hottest sources instead of concentrating it — under
+    ``ServiceConfig`` contention this is exactly the placement that keeps
+    per-node load factors low, where ``costgreedy``'s per-KiB threshold
+    refuses to replicate large objects at all and piles their demand onto
+    a single serving node. Untouched keys keep their current placement."""
+
+    size_threshold_bytes: float = 4096.0  # small/large pool cut
+    large_fanout: float = 2.0  # replicas kept per touched large object
+    decay: float = 1.0  # post-sweep count decay (shared stage)
+    period: int = 1
+
+    name = "sizeaware"
+    DYNAMIC_FIELDS = ("size_threshold_bytes", "large_fanout", "decay")
+    is_active = True
+    read_mode = "map"
+    initial_placement = "offsite"
+
+    def resolve(self, num_nodes: int) -> "SizeAwarePolicy":
+        return self
+
+    def validate(self, num_nodes: int) -> None:
+        if self.size_threshold_bytes < 0:
+            raise ValueError(
+                f"size_threshold_bytes must be non-negative, got "
+                f"{self.size_threshold_bytes}"
+            )
+        if self.large_fanout < 1:
+            raise ValueError(
+                f"large_fanout must be >= 1 (every touched large object "
+                f"keeps at least its modal source), got {self.large_fanout}"
+            )
+        _validate_common(self, decay=self.decay, period=self.period)
+
+    def init(self, store: MetadataStore, ctx: PolicyContext):
+        return ()
+
+    def decide(self, state, store: MetadataStore, f: Array, now, ctx: PolicyContext):
+        counts = store.access_counts  # [K, N]
+        k, n = counts.shape
+        touched = jnp.sum(counts, axis=-1) > 0
+        small = ctx.object_bytes <= ctx.params["size_threshold_bytes"]
+        # Per-key dense rank of nodes by access count, hottest first
+        # (argsort is stable, so ties break to the lower node id).
+        order = jnp.argsort(-counts, axis=-1)
+        ranks = jnp.zeros_like(order).at[
+            jnp.arange(k)[:, None], order
+        ].set(jnp.arange(n, dtype=order.dtype)[None, :])
+        # The rank cut alone would admit zero-traffic nodes whenever the
+        # fanout exceeds a key's distinct sources — require real traffic,
+        # but always keep the modal source (fanout >= 1 by validate()).
+        modal = (
+            jnp.arange(n, dtype=jnp.int32)
+            == jnp.argmax(counts, axis=-1).astype(jnp.int32)[:, None]
+        )
+        narrow = ((ranks < ctx.params["large_fanout"]) & (counts > 0)) | modal
+        pool = jnp.where(small[:, None], jnp.ones_like(store.hosts), narrow)
+        owners = jnp.where(touched[:, None], pool, store.hosts)
+        return owners, state
 
 
 # ---------------------------------------------------------------------------

@@ -73,7 +73,7 @@ def chunk_replay_kernel(
     xfer_w_ref,  # [1, 1] f32 — write transfer charge
     lo_ref,  # [1, 1] f32 — lowest interior histogram edge
     hi_ref,  # [1, 1] f32 — histogram overflow threshold
-    *refs,  # outputs (busy, stats[, hist]) then the replica scratch
+    *refs,  # [extra_ms input], outputs (busy, stats[, hist]), replica scratch
     read_mode: str,
     master: int,
     num_bins: int,
@@ -81,7 +81,13 @@ def chunk_replay_kernel(
     tr: int,
     tkey: int,
     num_key_tiles: int,
+    with_extra: bool = False,
 ):
+    if with_extra:
+        # [TR, 1] f32 per-request contention wait (ServiceConfig pre-pass).
+        extra_ref, *refs = refs
+    else:
+        extra_ref = None
     with_hist = num_bins > 0
     if with_hist:
         busy_ref, stats_ref, hist_ref, replicas_ref = refs
@@ -179,6 +185,10 @@ def chunk_replay_kernel(
             lat = jnp.where(is_read, r_lat, w_lat)
 
         # --- 4/5. hit flags + per-node busy fold (MXU, not a scatter).
+        if extra_ref is not None:
+            # Same elementwise add, same position as the oracle's, so the
+            # histogram bucket of every request stays bit-identical.
+            lat = lat + extra_ref[...]
         lat = jnp.where(valid, lat, 0.0)
         read_hits = hit & is_read & valid
         busy_ref[...] += jax.lax.dot_general(
@@ -229,6 +239,7 @@ def chunk_replay_call(
     tr: int = DEFAULT_TR,
     tkey: int = DEFAULT_TKEY,
     interpret: bool | None = None,
+    extra_ms: jax.Array | None = None,  # [B] f32 contention wait per request
 ):
     if interpret is None:
         interpret = interpret_default()
@@ -249,6 +260,7 @@ def chunk_replay_call(
         tr=tr,
         tkey=tkey,
         num_key_tiles=num_key_tiles,
+        with_extra=extra_ms is not None,
     )
     req = lambda i, j: (i, 0)
     acc = lambda i, j: (0, 0)
@@ -264,30 +276,20 @@ def chunk_replay_call(
     if num_bins > 0:
         out_specs.append(pl.BlockSpec((2 * n, num_bins), acc))
         out_shape.append(jax.ShapeDtypeStruct((2 * n, num_bins), jnp.float32))
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((tr, 1), req),
-            pl.BlockSpec((tr, 1), req),
-            pl.BlockSpec((tr, 1), req),
-            pl.BlockSpec((tr, 1), req),
-            pl.BlockSpec((tkey, n), lambda i, j: (j, 0)),
-            pl.BlockSpec((n, n), acc),
-            scalar,
-            scalar,
-            scalar,
-            scalar,
-            scalar,
-        ],
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=[vmem_scratch((tr, n), jnp.float32)],
-        # Every grid step accumulates into the SAME output blocks, so both
-        # grid dimensions are sequential ("arbitrary"), not parallel.
-        compiler_params=compiler_params(("arbitrary", "arbitrary")),
-        interpret=interpret,
-    )(
+    in_specs = [
+        pl.BlockSpec((tr, 1), req),
+        pl.BlockSpec((tr, 1), req),
+        pl.BlockSpec((tr, 1), req),
+        pl.BlockSpec((tr, 1), req),
+        pl.BlockSpec((tkey, n), lambda i, j: (j, 0)),
+        pl.BlockSpec((n, n), acc),
+        scalar,
+        scalar,
+        scalar,
+        scalar,
+        scalar,
+    ]
+    inputs = [
         keys.astype(jnp.int32).reshape(b, 1),
         nodes.astype(jnp.int32).reshape(b, 1),
         is_read.astype(jnp.int32).reshape(b, 1),
@@ -299,4 +301,19 @@ def chunk_replay_call(
         jnp.asarray(xfer_write_ms, jnp.float32).reshape(1, 1),
         jnp.asarray(lo, jnp.float32).reshape(1, 1),
         jnp.asarray(hi, jnp.float32).reshape(1, 1),
-    )
+    ]
+    if extra_ms is not None:
+        in_specs.append(pl.BlockSpec((tr, 1), req))
+        inputs.append(extra_ms.astype(jnp.float32).reshape(b, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[vmem_scratch((tr, n), jnp.float32)],
+        # Every grid step accumulates into the SAME output blocks, so both
+        # grid dimensions are sequential ("arbitrary"), not parallel.
+        compiler_params=compiler_params(("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)

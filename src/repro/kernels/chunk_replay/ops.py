@@ -89,12 +89,18 @@ def chunk_replay(
     tr: int = DEFAULT_TR,
     tkey: int = DEFAULT_TKEY,
     interpret: bool | None = None,
+    extra_ms: jax.Array | None = None,  # [B] f32 contention wait per request
 ):
     """One chunk's fused request path.
 
     Returns ``(busy [N], lat_sum, hits, reads, count, hist)`` — ``hist`` is
     the ``[2N, num_bins]`` grouped latency histogram, ``None`` when
     ``num_bins == 0`` (telemetry off).
+
+    ``extra_ms`` (the ServiceConfig contention pre-pass output,
+    ``ref.contention_extra_ms_ref``) is folded into every request's latency
+    before the busy/stats/histogram reductions; ``None`` (the default)
+    compiles the exact pre-contention program, so goldens stay bit-exact.
     """
     if read_mode not in READ_MODES:
         raise ValueError(
@@ -111,6 +117,7 @@ def chunk_replay(
             service_ms=service_ms, master=master,
             xfer_read_ms=xfer_read_ms, xfer_write_ms=xfer_write_ms,
             read_mode=read_mode, num_bins=num_bins, lo=lo, hi=hi,
+            extra_ms=extra_ms,
         )
 
     b = keys.shape[0]
@@ -121,6 +128,8 @@ def chunk_replay(
         zpad = lambda a: jnp.pad(a, (0, pad_b))
         keys, nodes = zpad(keys), zpad(nodes)
         is_read, valid = zpad(is_read), zpad(valid)
+        if extra_ms is not None:
+            extra_ms = zpad(extra_ms)
     tkey = min(tkey, k)
     pad_k = (-k) % tkey
     if pad_k:
@@ -130,7 +139,7 @@ def chunk_replay(
         service_ms=service_ms, xfer_read_ms=xfer_read_ms,
         xfer_write_ms=xfer_write_ms, lo=lo, hi=hi,
         master=master, read_mode=read_mode, num_bins=num_bins,
-        tr=tr, tkey=tkey, interpret=interpret,
+        tr=tr, tkey=tkey, interpret=interpret, extra_ms=extra_ms,
     )
     busy, stats = out[0][0], out[1][0]
     hist = out[2] if num_bins > 0 else None

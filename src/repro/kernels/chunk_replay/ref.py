@@ -45,6 +45,11 @@ __all__ = [
     "write_latency_ref",
     "chunk_latency_ref",
     "chunk_replay_ref",
+    "serving_node_ref",
+    "service_demand_ref",
+    "load_factor_ref",
+    "contention_wait_ref",
+    "contention_extra_ms_ref",
 ]
 
 READ_MODES = ("map", "no_local", "ideal")
@@ -145,6 +150,111 @@ def chunk_latency_ref(
     return lat, hit & is_read
 
 
+# ---------------------------------------------------------------------------
+# Queueing-aware contention (ServiceConfig — see cluster.py for the model).
+# The pre-pass needs the whole chunk's per-node demand fold before any
+# request's wait is known, so it runs as plain jnp ahead of the fused kernel
+# and hands the kernel a per-request ``extra_ms`` to fold into the latency.
+# ---------------------------------------------------------------------------
+
+
+def serving_node_ref(
+    replicas: Array,  # [B, N] bool
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    *,
+    read_mode: str,
+) -> Array:
+    """Per-request serving node ``[B] i32``: reads are served by the nearest
+    *visible* replica (the requesting node itself when the visible set is
+    empty — it performs the backing-store fetch), writes by the requesting
+    node (Algorithm 2 commits at the requester before the master relay)."""
+    if read_mode == "ideal":
+        return nodes
+    if read_mode == "no_local":
+        visible = replicas & (
+            jnp.arange(replicas.shape[1])[None, :] != nodes[:, None]
+        )
+    else:
+        visible = replicas
+    masked = jnp.where(visible, rtt[nodes], jnp.inf)
+    nearest = jnp.argmin(masked, axis=-1).astype(jnp.int32)
+    read_serving = jnp.where(jnp.any(visible, axis=-1), nearest, nodes)
+    return jnp.where(is_read, read_serving, nodes).astype(jnp.int32)
+
+
+def service_demand_ref(
+    obj_bytes: Array, *, service_ms, serve_bytes_per_ms
+) -> Array:
+    """Per-request service demand in ms: base cost + size-proportional
+    serve time (the Minos observation — large objects occupy the server)."""
+    return (service_ms + obj_bytes / serve_bytes_per_ms).astype(jnp.float32)
+
+
+def load_factor_ref(
+    serving: Array,  # [B] i32
+    demand: Array,  # [B] f32
+    valid: Array,  # [B] bool
+    *,
+    num_nodes: int,
+    capacity_ms,
+    rho_max,
+) -> Array:
+    """Per-node load factor ``rho [N]``: the chunk's demand folded per
+    serving node over capacity, clamped below the stability bound."""
+    fold = jnp.zeros((num_nodes,), jnp.float32).at[serving].add(
+        jnp.where(valid, demand, 0.0)
+    )
+    return jnp.minimum(fold / capacity_ms, rho_max)
+
+
+def contention_wait_ref(demand: Array, rho: Array, serving: Array) -> Array:
+    """M/M/1 residence-time excess per request: ``d * rho / (1 - rho)`` at
+    the request's serving node."""
+    r = rho[serving]
+    return demand * r / (1.0 - r)
+
+
+def contention_extra_ms_ref(
+    hosts: Array,  # [K, N] bool
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    valid: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    obj_bytes: Array,  # [K] f32 per-key object sizes
+    *,
+    read_mode: str,
+    service_ms,
+    serve_bytes_per_ms,
+    capacity_ms,
+    rho_max,
+) -> tuple[Array, Array]:
+    """The whole contention pre-pass: ``(extra_ms [B] f32, rho [N] f32)``.
+
+    Canonical for every consumer — both simulation engines, the static fast
+    path, and the Pallas backend (which feeds ``extra_ms`` into the fused
+    kernel) call exactly this composition, so contention cannot drift
+    between backends any more than the base latency model can.
+    """
+    if read_mode == "ideal":
+        serving = nodes.astype(jnp.int32)
+    else:
+        serving = serving_node_ref(
+            hosts[keys], nodes, is_read, rtt, read_mode=read_mode
+        )
+    demand = service_demand_ref(
+        obj_bytes[keys], service_ms=service_ms,
+        serve_bytes_per_ms=serve_bytes_per_ms,
+    )
+    rho = load_factor_ref(
+        serving, demand, valid,
+        num_nodes=rtt.shape[0], capacity_ms=capacity_ms, rho_max=rho_max,
+    )
+    return contention_wait_ref(demand, rho, serving), rho
+
+
 def chunk_replay_ref(
     hosts: Array,  # [K, N] bool
     keys: Array,  # [B] i32
@@ -161,6 +271,7 @@ def chunk_replay_ref(
     num_bins: int = 0,
     lo=1.0,
     hi=10_000.0,
+    extra_ms: Array | None = None,  # [B] f32 contention wait (ServiceConfig)
 ):
     """The whole fused pass as one jnp composition — the oracle the Pallas
     kernel is parity-pinned against.
@@ -176,6 +287,8 @@ def chunk_replay_ref(
         xfer_read_ms=xfer_read_ms, xfer_write_ms=xfer_write_ms,
         read_mode=read_mode,
     )
+    if extra_ms is not None:
+        lat = lat + extra_ms
     lat = jnp.where(valid, lat, 0.0)
     busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
     lat_sum = jnp.sum(lat)

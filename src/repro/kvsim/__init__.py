@@ -10,9 +10,12 @@ geo-distributed scenarios the paper motivates but never measures.
 The simulator runs the *same* core engine (metadata/ownership/placement) that
 the ML integrations use; only the latency bookkeeping is simulation-specific.
 ``run_scenario`` is a single fused ``lax.scan`` program per *policy*
-(``repro.core.policy`` — the legacy ``Scenario`` enum survives one release
-behind a deprecation shim); ``run_scenario_reference`` retains the
-per-chunk Python loop as the oracle. ``telemetry=TelemetryConfig()`` makes
+(``repro.core.policy`` — the legacy ``Scenario`` enum spelling was removed
+after its deprecation window; passing one raises with the replacement);
+``run_scenario_reference`` retains the per-chunk Python loop as the
+oracle. ``ClusterConfig.service`` (a ``ServiceConfig``) turns on the
+M/M/1-style queueing model — per-chunk load factors from object bytes and
+serving-node demand folds. ``telemetry=TelemetryConfig()`` makes
 either engine additionally accumulate log-bin latency histograms and
 per-chunk convergence series *inside* the scan, returned as a ``SimTrace``
 (tail quantiles P50–P99.9, convergence/oscillation diagnostics — see
@@ -25,6 +28,7 @@ from repro.core.policy import (
     CostGreedyPolicy,
     DecayLFUPolicy,
     RedynisPolicy,
+    SizeAwarePolicy,
     StaticPolicy,
     TopKPolicy,
     describe_policy,
@@ -44,7 +48,9 @@ from repro.kvsim.cluster import (
     WAN5_RTT_MS,
     ClusterConfig,
     Scenario,
+    ServiceConfig,
     flat_rtt,
+    normalize_service,
     wan5_cluster,
     wan5_edge_cluster,
 )
@@ -52,7 +58,6 @@ from repro.kvsim.simulate import (
     REPLAY_BACKENDS,
     SimResult,
     confidence_interval_99,
-    policy_from_scenario,
     run_experiment,
     run_scenario,
     run_scenario_reference,
@@ -72,6 +77,8 @@ __all__ = [
     "diurnal_workload",
     "ClusterConfig",
     "Scenario",
+    "ServiceConfig",
+    "normalize_service",
     "flat_rtt",
     "wan5_cluster",
     "wan5_edge_cluster",
@@ -87,11 +94,11 @@ __all__ = [
     "run_scenario_reference",
     "run_experiment",
     "confidence_interval_99",
-    "policy_from_scenario",
     "POLICIES",
     "CostGreedyPolicy",
     "DecayLFUPolicy",
     "RedynisPolicy",
+    "SizeAwarePolicy",
     "StaticPolicy",
     "TopKPolicy",
     "describe_policy",

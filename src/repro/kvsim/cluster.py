@@ -55,6 +55,8 @@ from repro.kernels.chunk_replay.ref import (
 __all__ = [
     "ClusterConfig",
     "Scenario",
+    "ServiceConfig",
+    "normalize_service",
     "read_latency",
     "write_latency",
     "nearest_replica_rtt",
@@ -97,6 +99,70 @@ WAN5_RTT_MS: tuple[tuple[float, ...], ...] = (
 )
 
 
+class ServiceConfig(NamedTuple):
+    """Queueing-aware service-time model (M/M/1-style, after Minos
+    1802.00696: service time — not just placement — dominates the tail once
+    large objects queue behind small ones).
+
+    Per request the *service demand* is
+
+        d = service_ms + object_bytes[key] / serve_bytes_per_ms
+
+    folded per **serving** node over each request chunk (reads are served by
+    the nearest visible replica, writes by the requesting node). A node's
+    per-chunk *load factor* is
+
+        rho[x] = min(demand_fold[x] / capacity_ms, rho_max)
+
+    where ``capacity_ms = capacity_factor * chunk_size * service_ms`` is the
+    service capacity the node can absorb per chunk (``capacity_factor`` is
+    chunk-size invariant: 1.0 means one node could serve the whole chunk's
+    base service time alone). Each request then waits
+
+        w = d * rho[serving] / (1 - rho[serving])
+
+    on top of its RTT latency — the M/M/1 (processor-sharing) residence-time
+    excess, clamped at ``rho_max`` so an overloaded node prices requests at a
+    finite ``d * rho_max / (1 - rho_max)`` instead of diverging.
+
+    Off by default (``ClusterConfig.service = None``): the latency path is
+    bit-exact to the pure-RTT model and all goldens hold.
+    """
+
+    enabled: bool = True
+    serve_bytes_per_ms: float = 1024.0  # node service bandwidth (bytes/ms)
+    capacity_factor: float = 1.0  # node capacity per chunk, in chunks
+    rho_max: float = 0.95  # stability clamp (must stay < 1)
+
+    def validate(self) -> "ServiceConfig":
+        if not self.serve_bytes_per_ms > 0:
+            raise ValueError(
+                f"serve_bytes_per_ms must be positive, got {self.serve_bytes_per_ms}"
+            )
+        if not self.capacity_factor > 0:
+            raise ValueError(
+                f"capacity_factor must be positive, got {self.capacity_factor}"
+            )
+        if not 0.0 < self.rho_max < 1.0:
+            raise ValueError(
+                f"rho_max must lie in (0, 1) (the M/M/1 stability bound), "
+                f"got {self.rho_max}"
+            )
+        return self
+
+    def capacity_ms(self, chunk_size: int, service_ms: float) -> float:
+        """Per-node service capacity for one chunk, in ms of demand."""
+        return self.capacity_factor * chunk_size * service_ms
+
+
+def normalize_service(service: "ServiceConfig | None") -> "ServiceConfig | None":
+    """Collapse disabled configs to None so ``service=None`` and
+    ``ServiceConfig(enabled=False)`` compile the identical program."""
+    if service is None or not service.enabled:
+        return None
+    return service.validate()
+
+
 class ClusterConfig(NamedTuple):
     num_nodes: int = 3  # paper: 3-node testbed
     remote_ms: float = 100.0  # paper: simulated geo-distributed RTT
@@ -118,6 +184,10 @@ class ClusterConfig(NamedTuple):
     # (e.g. one small edge node). inf (default) = the paper's Algorithm 3
     # exactly — no projection runs at all.
     capacity_bytes: tuple[float, ...] | float = float("inf")
+    # Queueing-aware service-time model (None = pure-RTT latency, the
+    # paper's model and the bit-exact golden path). A ServiceConfig is a
+    # nested NamedTuple, so the ClusterConfig stays a valid jit static.
+    service: ServiceConfig | None = None
 
     def rtt_matrix(self) -> Array:
         """The ``[N, N]`` RTT matrix as a device array."""

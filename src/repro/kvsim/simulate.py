@@ -8,10 +8,11 @@ topology (``cluster.py``) — under any *placement policy* from
     run_scenario(workload, cluster, RedynisPolicy(h=0.2))
     run_scenario(workload, cluster, StaticPolicy(mode="remote"))
 
-The legacy ``Scenario`` enum and its kwarg sprawl (``ownership_coefficient``
-/ ``expiry_ticks`` / ``decay`` / ``daemon_period`` / ``backend``) survive
-one release behind a deprecation shim that maps them onto policies and
-warns once with the exact replacement spelled out.
+The legacy ``Scenario`` enum spelling and its kwarg sprawl
+(``ownership_coefficient`` / ``expiry_ticks`` / ``decay`` /
+``daemon_period`` / ``backend``) were removed once their one-release
+deprecation window closed; passing a ``Scenario`` where a policy belongs
+now raises with the replacement spelled out.
 
 An *active* policy (``policy.is_active``) runs the actual core engine —
 requests fold accesses into a :class:`repro.core.MetadataStore` and the
@@ -85,11 +86,27 @@ application servers). Per-node busy time = Σ latency of requests arriving at
 that node; makespan = max over nodes; throughput = R / makespan. The paper
 does not state the YCSB per-op service cost; ``ClusterConfig.service_ms`` is
 the calibration constant (documented in EXPERIMENTS.md §Repro-assumptions).
+
+Queueing model
+--------------
+With ``ClusterConfig.service`` set to an enabled
+:class:`~repro.kvsim.cluster.ServiceConfig`, every request additionally
+pays an M/M/1-style contention wait: each chunk's per-request service
+demand ``d = service_ms + object_bytes / serve_bytes_per_ms`` folds at the
+request's *serving* node into a load factor
+``rho = min(demand_fold / capacity_ms, rho_max)``, and the request waits
+``d * rho / (1 - rho)`` on top of its RTT-model latency. The pre-pass
+(``kernels.chunk_replay.ref.contention_extra_ms_ref``) is canonical for
+both engines, the static fast path, AND the Pallas replay backend — the
+fused kernel consumes the per-request ``extra_ms`` it produces, so
+contention can no more drift between backends than the base latency model
+can. ``service=None`` (the default) compiles the exact pre-contention
+program, so every seed golden holds bit-exact (pinned by
+tests/test_service_time.py).
 """
 
 from __future__ import annotations
 
-import warnings
 from functools import lru_cache, partial
 from typing import NamedTuple
 
@@ -104,18 +121,16 @@ from repro.kernels.chunk_replay.ops import (
     chunk_latency,
     chunk_replay,
 )
+from repro.kernels.chunk_replay.ref import contention_extra_ms_ref
 from repro.kernels.latency_histogram.ref import bin_index
 from repro.core.policy import (
     PolicyContext,
-    RedynisPolicy,
-    StaticPolicy,
     describe_policy,
     policy_masked_step,
-    policy_repr,
     policy_sweep,
     split_policy,
 )
-from repro.kvsim.cluster import ClusterConfig, Scenario
+from repro.kvsim.cluster import ClusterConfig, Scenario, normalize_service
 from repro.kvsim.telemetry import (
     SimTrace,
     TelemetryConfig,
@@ -236,86 +251,51 @@ def _seed_store(hosts: Array, num_keys: int, num_nodes: int):
     )
 
 
-# ---------------------------------------------------------------------------
-# The legacy Scenario enum + kwarg sprawl -> policy deprecation shim.
-# ---------------------------------------------------------------------------
-
-_LEGACY_KWARGS = (
-    "ownership_coefficient",
-    "expiry_ticks",
-    "decay",
-    "daemon_period",
-    "backend",
-)
-_WARNED_LEGACY: set[str] = set()
-
-
-def policy_from_scenario(
-    scenario: Scenario,
-    ownership_coefficient: float | None = None,
-    expiry_ticks: int | None = None,
-    decay: float | None = None,
-    daemon_period: int | None = None,
-    backend: str | None = None,
-):
-    """Map a legacy ``Scenario`` (+ daemon kwargs) onto its policy."""
-    if scenario is Scenario.OPTIMIZED:
-        return RedynisPolicy(
-            h=ownership_coefficient,
-            expiry=0 if expiry_ticks is None else expiry_ticks,
-            decay=1.0 if decay is None else decay,
-            period=1 if daemon_period is None else daemon_period,
-            backend="jax" if backend is None else backend,
-        )
-    return StaticPolicy(mode=scenario.value)
-
-
-def _coerce_policy(caller: str, policy, scenario, num_nodes: int, legacy: dict):
-    """Resolve the (policy | legacy scenario/kwargs) call forms into a
-    policy, emitting the one-shot DeprecationWarning for legacy spellings."""
+def _reject_scenario(caller: str, policy) -> None:
+    """The PR-3 ``scenario=`` deprecation shim is gone (its one-release
+    grace period ended with this release); keep the failure mode helpful by
+    spelling out the exact policy replacement instead of an attribute
+    error deep inside ``resolve``."""
     if isinstance(policy, Scenario):
-        policy, scenario = None, policy
-    passed = {k: v for k, v in legacy.items() if v is not None}
-    if policy is not None:
-        if scenario is not None or passed:
-            extras = (["scenario"] if scenario is not None else []) + sorted(passed)
-            raise ValueError(
-                f"{caller}: pass either policy= or the legacy scenario=/"
-                f"daemon kwargs, not both (got policy={policy!r} and {extras})"
-            )
-        return policy
-    if scenario is None:
+        repl = (
+            "RedynisPolicy()" if policy is Scenario.OPTIMIZED
+            else f"StaticPolicy(mode={policy.value!r})"
+        )
+        raise ValueError(
+            f"{caller}: the legacy scenario= spelling was removed (its "
+            f"deprecation window is over); pass policy={repl} instead"
+        )
+
+
+def _prepare(workload, cluster, caller, policy):
+    _check_topology(workload, cluster)
+    _reject_scenario(caller, policy)
+    if policy is None:
         raise ValueError(
             f"{caller}: a policy is required — e.g. RedynisPolicy() or "
             f"StaticPolicy(mode='local')"
         )
-    # Legacy daemon kwargs were validated even for static scenarios (the
-    # old engine always constructed a PlacementDaemon); preserve that.
-    probe = policy_from_scenario(Scenario.OPTIMIZED, **legacy)
-    probe.resolve(num_nodes).validate(num_nodes)
-    mapped = policy_from_scenario(scenario, **legacy)
-    old = ", ".join(
-        [f"scenario=Scenario.{scenario.name}"]
-        + [f"{k}={v!r}" for k, v in passed.items()]
-    )
-    msg = (
-        f"{caller}({old}) is deprecated; use {caller}(policy="
-        f"{policy_repr(mapped)}) instead. The scenario= enum and the legacy "
-        f"daemon kwargs ({', '.join(_LEGACY_KWARGS)}) will be removed in "
-        f"the next release."
-    )
-    if msg not in _WARNED_LEGACY:
-        _WARNED_LEGACY.add(msg)
-        warnings.warn(msg, DeprecationWarning, stacklevel=4)
-    return mapped
-
-
-def _prepare(workload, cluster, caller, policy, scenario, legacy):
-    _check_topology(workload, cluster)
-    policy = _coerce_policy(caller, policy, scenario, workload.num_nodes, legacy)
     policy = policy.resolve(workload.num_nodes)
     policy.validate(workload.num_nodes)
     return split_policy(policy)
+
+
+def _contention_kwargs(
+    cluster: ClusterConfig, read_mode: str, daemon_interval: int
+) -> dict | None:
+    """Host-side resolution of the queueing model: the kwargs
+    ``contention_extra_ms_ref`` needs, or ``None`` when the cluster has no
+    enabled :class:`ServiceConfig` (the bit-exact pre-contention path)."""
+    service = normalize_service(cluster.service)
+    if service is None:
+        return None
+    return dict(
+        read_mode=read_mode,
+        service_ms=cluster.service_ms,
+        serve_bytes_per_ms=service.serve_bytes_per_ms,
+        capacity_ms=service.capacity_ms(daemon_interval, cluster.service_ms),
+        rho_max=service.rho_max,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -376,6 +356,10 @@ def _simulate(
     ctx = PolicyContext(
         rtt=rtt, object_bytes=obj, capacity_bytes=capacity, params=params
     )
+    # Host-side static: with no enabled ServiceConfig the contention
+    # pre-pass is absent from the compiled program entirely — the exact
+    # pre-contention bits (goldens pinned by tests/test_service_time.py).
+    contention = _contention_kwargs(cluster, policy.read_mode, daemon_interval)
 
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
@@ -444,6 +428,19 @@ def _simulate(
             lat, read_hits = _chunk_latency(
                 store.hosts, pk, pn, pr, rtt, cluster, policy.read_mode
             )
+        rho_c = None
+        if contention is not None:
+            # Contention is NOT loop-invariant even under a frozen map —
+            # rho folds over each chunk's own demand — so vmap the
+            # canonical pre-pass over the chunk axis and fold the waits
+            # into the whole-trace latencies (the grid shortcut above only
+            # ever supplies the base RTT-model latency).
+            extra_c, rho_c = jax.vmap(
+                lambda ck, cn, cr, cv: contention_extra_ms_ref(
+                    store.hosts, ck, cn, cr, cv, rtt, obj, **contention
+                )
+            )(chunked(pk), chunked(pn), chunked(pr), chunked(pv))
+            lat = lat + extra_c.reshape(-1)
         if pad:
             # Padding exists only when the trace doesn't divide into
             # chunks; with none, the validity masks are static no-ops.
@@ -482,9 +479,15 @@ def _simulate(
             return leaves, None
         w = pv.astype(jnp.float32)
         zeros_c = jnp.zeros((num_chunks,), jnp.float32)
-        if slot_idx is not None and telemetry.backend != "pallas":
+        if (
+            slot_idx is not None
+            and telemetry.backend != "pallas"
+            and contention is None
+        ):
             # Bin indices are a pure function of the triple too: bucketize
-            # the grid once, gather per request (saves R log evals).
+            # the grid once, gather per request (saves R log evals). With
+            # contention on, the per-chunk wait breaks the pure-function
+            # property, so the full latencies are bucketized directly.
             bin_idx = bin_index(
                 tlat, telemetry.lo_ms, telemetry.hi_ms, telemetry.num_bins
             )[slot_idx]
@@ -506,6 +509,10 @@ def _simulate(
             expiry_evictions=zeros_c,
             capacity_evictions=zeros_c,
             occupancy=jnp.broadcast_to(occ0, (num_chunks, n)),
+            load_factor=(
+                jnp.zeros((num_chunks, n), jnp.float32)
+                if rho_c is None else rho_c
+            ),
         )
         return leaves, ys
 
@@ -530,6 +537,14 @@ def _simulate(
             cap_evic, peak,
         ) = carry
         c, ck, cn, cr, cv = x
+        rho = None
+        if contention is not None:
+            # Queueing pre-pass on the chunk's frozen map: per-request
+            # contention wait + per-node load factor (the canonical
+            # composition both replay backends consume).
+            extra, rho = contention_extra_ms_ref(
+                store.hosts, ck, cn, cr, cv, rtt, obj, **contention
+            )
         if replay_backend == "pallas":
             # The fused one-pass kernel: gather, latency, hit flags, busy
             # fold — and the telemetry histogram when enabled — in one
@@ -542,6 +557,7 @@ def _simulate(
                     lo=1.0 if telemetry is None else telemetry.lo_ms,
                     hi=10_000.0 if telemetry is None else telemetry.hi_ms,
                     backend="pallas",
+                    extra_ms=None if contention is None else extra,
                     **scalars,
                 )
             )
@@ -552,6 +568,11 @@ def _simulate(
             lat, read_hits = _chunk_latency(
                 store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
             )
+            if contention is not None:
+                # Same elementwise position as chunk_replay_ref: after the
+                # base latency, before the validity mask — identical bits
+                # across engines and backends.
+                lat = lat + extra
             lat = jnp.where(cv, lat, 0.0)
             chunk_lat = jnp.sum(lat)
             chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
@@ -608,6 +629,9 @@ def _simulate(
                 expiry_evictions=chunk_moves[2],
                 capacity_evictions=chunk_moves[3],
                 occupancy=occ,
+                load_factor=(
+                    jnp.zeros((n,), jnp.float32) if rho is None else rho
+                ),
             )
         return (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
@@ -692,12 +716,6 @@ def run_scenario(
     *,
     telemetry: TelemetryConfig | None = None,
     replay_backend: str = "jax",
-    scenario: Scenario | None = None,
-    ownership_coefficient: float | None = None,
-    expiry_ticks: int | None = None,
-    decay: float | None = None,
-    daemon_period: int | None = None,
-    backend: str | None = None,
 ) -> SimResult | tuple[SimResult, SimTrace]:
     """Simulate one policy over one generated trace (fused scan engine).
 
@@ -705,7 +723,8 @@ def run_scenario(
         ``StaticPolicy(mode=...)``, ``TopKPolicy(...)``, ... The policy
         carries every decision hyperparameter (H, expiry, decay, period,
         sweep backend); ``daemon_interval`` stays an engine argument (the
-        chunking granularity both engines share).
+        chunking granularity both engines share). The legacy ``Scenario``
+        spelling was removed; passing one raises with the replacement.
     telemetry: optional :class:`TelemetryConfig`. When enabled the scan
         additionally accumulates grouped log-bin latency histograms and
         per-chunk convergence series *inside* the fused program and the
@@ -716,21 +735,14 @@ def run_scenario(
         (the bit-exact jnp composition, default) or ``"pallas"`` (the
         fused one-pass ``kernels.chunk_replay`` kernel; aggregates are
         allclose, histogram counts bit-exact). See the module docstring.
-    scenario / ownership_coefficient / expiry_ticks / decay / daemon_period
-        / backend: DEPRECATED legacy spelling, mapped onto a policy with a
-        one-shot warning quoting the exact replacement.
+
+    Queueing-aware contention rides on the cluster: set
+    ``cluster.service=ServiceConfig(...)`` and every request pays the
+    M/M/1-style wait on top of its RTT-model latency (see the module
+    docstring §Queueing model).
     """
     _check_replay_backend("run_scenario", replay_backend)
-    static, params = _prepare(
-        workload, cluster, "run_scenario", policy, scenario,
-        dict(
-            ownership_coefficient=ownership_coefficient,
-            expiry_ticks=expiry_ticks,
-            decay=decay,
-            daemon_period=daemon_period,
-            backend=backend,
-        ),
-    )
+    static, params = _prepare(workload, cluster, "run_scenario", policy)
     telemetry = normalize_telemetry(telemetry)
     trace = _generate_trace_jit(workload, seed)
     leaves, telem = _simulate_jit()(
@@ -797,6 +809,7 @@ def _reference_engine(
         _initial_hosts(trace.natural_node, k, n, static.initial_placement), k, n
     )
     pstate = static.init(store, ctx)
+    contention = _contention_kwargs(cluster, static.read_mode, daemon_interval)
 
     total_lat = np.zeros((n,), dtype=np.float64)
     hits = 0.0
@@ -822,6 +835,15 @@ def _reference_engine(
         lat, read_hits = _chunk_latency(
             store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
+        rho = None
+        if contention is not None:
+            # Same pre-pass, same elementwise position as the fused engine
+            # (reference chunks carry no padding — every row is valid).
+            extra, rho = contention_extra_ms_ref(
+                store.hosts, keys, nodes, is_read,
+                jnp.ones(keys.shape, bool), rtt, obj, **contention,
+            )
+            lat = lat + extra
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
         chunk_lat = float(jnp.sum(lat))
@@ -868,6 +890,10 @@ def _reference_engine(
                 expiry_evictions=chunk_moves[2],
                 capacity_evictions=chunk_moves[3],
                 occupancy=occ,
+                load_factor=(
+                    np.zeros((n,), np.float64) if rho is None
+                    else np.asarray(rho, np.float64)
+                ),
             ))
             raw_lats.append(np.asarray(lat, np.float64))
 
@@ -897,28 +923,16 @@ def run_scenario_reference(
     daemon_interval: int = 1000,
     *,
     telemetry: TelemetryConfig | None = None,
-    scenario: Scenario | None = None,
-    ownership_coefficient: float | None = None,
-    expiry_ticks: int | None = None,
-    decay: float | None = None,
-    daemon_period: int | None = None,
-    backend: str | None = None,
 ) -> SimResult | tuple[SimResult, SimTrace]:
     """Slow-path reference: one host dispatch per chunk, the policy stepped
     with Python control flow. Semantically identical to :func:`run_scenario`
-    (same policy protocol, same shared stages). With ``telemetry`` the
-    return value becomes ``(SimResult, SimTrace)``, and the trace carries
-    ``raw_latency_ms`` — the exact per-request latencies the histogram
-    quantiles are validated against."""
+    (same policy protocol, same shared stages, same queueing model via
+    ``cluster.service``). With ``telemetry`` the return value becomes
+    ``(SimResult, SimTrace)``, and the trace carries ``raw_latency_ms`` —
+    the exact per-request latencies (contention wait included) the
+    histogram quantiles are validated against."""
     static, params = _prepare(
-        workload, cluster, "run_scenario_reference", policy, scenario,
-        dict(
-            ownership_coefficient=ownership_coefficient,
-            expiry_ticks=expiry_ticks,
-            decay=decay,
-            daemon_period=daemon_period,
-            backend=backend,
-        ),
+        workload, cluster, "run_scenario_reference", policy
     )
     telemetry = normalize_telemetry(telemetry)
     result, leaves, raw = _reference_engine(
@@ -1023,14 +1037,6 @@ def _batched_policy_rows(
     return out, calls
 
 
-def _policies_for_scenarios(backend: str):
-    """The legacy default grid — all four Scenario values — as policies."""
-    return [
-        (sc.value, policy_from_scenario(sc, backend=backend))
-        for sc in Scenario
-    ]
-
-
 def run_experiment(
     read_fractions: tuple[float, ...] = (1.0, 0.9, 0.75, 0.5),
     skewed: bool = False,
@@ -1039,7 +1045,6 @@ def run_experiment(
     cluster: ClusterConfig | None = None,
     engine: str = "scan",
     daemon_interval: int = 1000,
-    backend: str = "jax",
     policies=None,
     telemetry: TelemetryConfig | None = None,
     replay_backend: str = "jax",
@@ -1048,21 +1053,19 @@ def run_experiment(
     """Paper Figure 2/3 grid — and its generalisation to arbitrary policy
     head-to-heads — with 99% CIs over repeated iterations.
 
-    policies: optional list of ``repro.core.policy`` instances. When given,
-        the result dict maps each policy's label (``describe_policy``) to
-        its read-fraction rows under ``"policies"``, each row carrying the
+    policies: required list of ``repro.core.policy`` instances. The result
+        dict maps each policy's label (``describe_policy``) to its
+        read-fraction rows under ``"policies"``, each row carrying the
         aggregate stats AND the per-seed :class:`SimResult`s under
         ``"results"``. Same-family policies (e.g. four ``RedynisPolicy``
         variants) are batched into ONE compiled program per read ratio: the
         dynamic-parameter axis is vmapped alongside the seed axis
         (``"num_batched_calls"`` reports how many programs actually ran).
-        When omitted, the legacy Figure 2/3 grid runs (all four scenarios,
-        reported under ``"scenarios"`` exactly as before).
+        The legacy no-``policies`` scenario grid was removed with the
+        ``scenario=`` shim.
     engine: "scan" (default) runs every CI iteration as one vmapped
         program; "reference" replays the retained per-chunk Python loop
         (the oracle the equivalence tests pin the scan engine to).
-    backend: legacy-grid only — the Redynis sweep backend ("jax"|"pallas");
-        policies carry their own backend field.
     replay_backend: the scan engine's per-chunk request path —
         ``"jax"`` (bit-exact jnp, default) or ``"pallas"`` (the fused
         ``kernels.chunk_replay`` kernel). The reference engine is the jnp
@@ -1087,33 +1090,33 @@ def run_experiment(
         )
     telemetry = normalize_telemetry(telemetry)
 
-    legacy = policies is None
-    if legacy:
-        named = [
-            (label, pol.resolve(cluster.num_nodes))
-            for label, pol in _policies_for_scenarios(backend)
-        ]
-    else:
-        named = []
-        for pol in policies:
-            pol = pol.resolve(cluster.num_nodes)
-            pol.validate(cluster.num_nodes)
-            named.append((describe_policy(pol), pol))
-        if len({label for label, _ in named}) != len(named):
-            raise ValueError(
-                f"duplicate policy labels in {[l for l, _ in named]}; "
-                f"vary at least one hyperparameter per entry"
-            )
+    if policies is None:
+        raise ValueError(
+            "run_experiment: policies is required — e.g. policies=["
+            "StaticPolicy(mode='remote'), RedynisPolicy()] (the legacy "
+            "scenario grid was removed with the scenario= shim)"
+        )
+    named = []
+    for pol in policies:
+        _reject_scenario("run_experiment", pol)
+        pol = pol.resolve(cluster.num_nodes)
+        pol.validate(cluster.num_nodes)
+        named.append((describe_policy(pol), pol))
+    if len({label for label, _ in named}) != len(named):
+        raise ValueError(
+            f"duplicate policy labels in {[l for l, _ in named]}; "
+            f"vary at least one hyperparameter per entry"
+        )
     labels = [label for label, _ in named]
     pols = [pol for _, pol in named]
 
     out: dict = {
         "skewed": skewed,
         "read_fractions": list(read_fractions),
-        ("scenarios" if legacy else "policies"): {label: [] for label in labels},
+        "policies": {label: [] for label in labels},
         "num_batched_calls": 0,
     }
-    table = out["scenarios" if legacy else "policies"]
+    table = out["policies"]
     for rf in read_fractions:
         wl = WorkloadConfig(
             num_requests=num_requests,
@@ -1168,12 +1171,11 @@ def run_experiment(
                 "ci99": ci,
                 "hit_rate": hit_mean,
                 "hit_rate_ci99": hit_ci,
-            }
-            if not legacy:
-                row["mean_latency_ms"] = float(
+                "mean_latency_ms": float(
                     np.mean([r.mean_latency_ms for r in results])
-                )
-                row["results"] = results
+                ),
+                "results": results,
+            }
             if telemetry is not None:
                 # Per-seed P99 samples feed the CI band; the row's trace is
                 # the seed-merged aggregate (histograms sum across seeds).

@@ -20,8 +20,10 @@ simulation engines share:
     Pallas kernel, parity-pinned by tests.
 
   * **Per-chunk time series** (hit rate, mean/p99 latency, moves applied,
-    occupancy, evictions), emitted as the scan's ``ys`` — the convergence /
-    oscillation diagnostics a repartitioning policy is judged by.
+    occupancy, evictions — and, with an enabled ``ServiceConfig``, the
+    per-node serving load factor), emitted as the scan's ``ys`` — the
+    convergence / oscillation diagnostics a repartitioning policy is
+    judged by.
 
 Both surface as a :class:`SimTrace` returned alongside ``SimResult``.
 Telemetry is **off by default** and the disabled path is structurally
@@ -142,6 +144,10 @@ class TelemetryLeaves(NamedTuple):
     expiry_evictions: Array  # [C] drops caused by key expiry
     capacity_evictions: Array  # [C] held replicas evicted by the budget
     occupancy: Array  # [C, N] replica bytes on the chunk's frozen map
+    # [C, N] per-chunk serving-node load factor rho (ServiceConfig); all
+    # zeros when contention is off. A point sample like occupancy: merges
+    # by averaging, not summing.
+    load_factor: Array | float = 0.0
 
 
 def chunk_histogram(
@@ -210,13 +216,17 @@ def merge_leaves(leaves: TelemetryLeaves, axis: int = 0) -> TelemetryLeaves:
     """Merge a batch axis away (seeds, policy rows). Histograms and
     counters are additive and *sum*; the derived rates/quantiles are then
     recomputed from the merged sums by :func:`build_trace`. ``occupancy``
-    is a point sample, not a counter — summing would inflate it by the
-    batch size — so it *averages* across the batch instead."""
+    and ``load_factor`` are point samples, not counters — summing would
+    inflate them by the batch size — so they *average* across the batch
+    instead."""
     n = np.asarray(leaves.occupancy).shape[axis]
     merged = jax.tree_util.tree_map(
         lambda a: np.asarray(a, dtype=np.float64).sum(axis=axis), leaves
     )
-    return merged._replace(occupancy=merged.occupancy / n)
+    return merged._replace(
+        occupancy=merged.occupancy / n,
+        load_factor=merged.load_factor / n,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -321,6 +331,9 @@ class SimTrace(NamedTuple):
     occupancy_bytes: np.ndarray  # [C, N] frozen-map replica bytes
     requests: np.ndarray  # [C] valid requests per chunk
     raw_latency_ms: np.ndarray | None = None  # reference engine only
+    # [C, N] per-chunk serving-node load factor rho (all zeros when the
+    # cluster has no enabled ServiceConfig — contention off).
+    load_factor: np.ndarray | None = None
 
     # -- histogram views (all simple row-sums of hist_group) ---------------
 
@@ -420,4 +433,5 @@ def build_trace(
         occupancy_bytes=np.asarray(leaves.occupancy, np.float64),
         requests=count,
         raw_latency_ms=raw_latency_ms,
+        load_factor=np.asarray(leaves.load_factor, np.float64),
     )

@@ -15,11 +15,19 @@ from repro.core.placement import PlacementDaemon, sweep
 from repro.core.repartition import plan_moves
 from repro.kvsim import (
     ClusterConfig,
-    Scenario,
+    RedynisPolicy,
+    StaticPolicy,
     WorkloadConfig,
     run_scenario,
     wan5_edge_cluster,
 )
+
+BASELINES = {
+    "local": StaticPolicy(mode="local"),
+    "remote": StaticPolicy(mode="remote"),
+    "optimized": RedynisPolicy(),
+    "replicated": StaticPolicy(mode="replicated"),
+}
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -213,7 +221,7 @@ def test_peak_occupancy_static_scenarios_report_initial_map():
     """LOCAL/REPLICATED never mutate the replica map: their peak occupancy
     is exactly the full-replication map's bytes (K × object_bytes/node)."""
     wl = WorkloadConfig(num_requests=2_000)
-    r = run_scenario(wl, ClusterConfig(), Scenario.LOCAL, seed=0)
+    r = run_scenario(wl, ClusterConfig(), StaticPolicy(mode="local"), seed=0)
     expect = wl.num_keys * wl.object_bytes
     np.testing.assert_allclose(r.peak_occupancy_bytes, expect)
     assert r.evictions == 0.0 and r.capacity_evictions == 0.0
@@ -329,7 +337,7 @@ def test_optimized_hit_rate_degrades_monotonically_with_capacity():
     hits, evics = [], []
     for cap in CAPACITIES:
         r = run_scenario(
-            wl, ClusterConfig(capacity_bytes=cap), Scenario.OPTIMIZED, seed=0
+            wl, ClusterConfig(capacity_bytes=cap), RedynisPolicy(), seed=0
         )
         hits.append(r.hit_rate)
         evics.append(r.capacity_evictions)
@@ -347,11 +355,11 @@ def test_infinite_capacity_run_is_default_run():
     wl = WorkloadConfig(num_requests=5_000, skewed=True)
     base = ClusterConfig()
     explicit = ClusterConfig(capacity_bytes=float("inf"))
-    for sc in Scenario:
-        a = run_scenario(wl, base, sc, seed=1)
-        b = run_scenario(wl, explicit, sc, seed=1)
-        assert a.throughput_ops_s == b.throughput_ops_s, sc
-        assert a.hit_rate == b.hit_rate, sc
+    for name, pol in BASELINES.items():
+        a = run_scenario(wl, base, pol, seed=1)
+        b = run_scenario(wl, explicit, pol, seed=1)
+        assert a.throughput_ops_s == b.throughput_ops_s, name
+        assert a.hit_rate == b.hit_rate, name
         assert a.capacity_evictions == 0.0 and b.capacity_evictions == 0.0
 
 
@@ -362,7 +370,7 @@ def test_wan5_edge_node_keeps_core_unconstrained():
 
     wl = wan5_workload(num_requests=10_000, num_keys=300)
     cl = wan5_edge_cluster(edge_capacity_bytes=8 * 1024.0)
-    r = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    r = run_scenario(wl, cl, RedynisPolicy(), seed=0, daemon_interval=500)
     assert r.capacity_evictions > 0
     # peak occupancy is reported per node ([N] vector)
     assert r.peak_occupancy_bytes.shape == (5,)

@@ -10,11 +10,9 @@
 2. Hypothesis fuzz over random RTT matrices and replica maps.
 3. Engine-level goldens: ``run_scenario(replay_backend="pallas")`` leaves
    SimResult within tolerance of the bit-exact jax backend on all four
-   legacy scenarios, with telemetry histograms identical, and the
+   baseline policies, with telemetry histograms identical, and the
    batched ``run_experiment`` grid accepts the backend too.
 """
-
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -26,8 +24,8 @@ from repro.kvsim import (
     REPLAY_BACKENDS,
     ClusterConfig,
     RedynisPolicy,
-    Scenario,
     SimResult,
+    StaticPolicy,
     TelemetryConfig,
     WorkloadConfig,
     run_experiment,
@@ -227,20 +225,26 @@ def assert_results_match(a: SimResult, b: SimResult, ctx: str = ""):
         )
 
 
-@pytest.mark.parametrize("scenario", list(Scenario))
-def test_pallas_replay_matches_jax_all_scenarios(scenario):
-    """All four legacy scenarios: the fused kernel engine must leave
+BASELINES = {
+    "local": StaticPolicy(mode="local"),
+    "remote": StaticPolicy(mode="remote"),
+    "optimized": RedynisPolicy(),
+    "replicated": StaticPolicy(mode="replicated"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_pallas_replay_matches_jax_all_scenarios(name):
+    """All four baseline policies: the fused kernel engine must leave
     SimResult within tolerance of the bit-exact jax replay path."""
     wl = WorkloadConfig(num_requests=4_000, num_keys=200, skewed=True)
     cl = ClusterConfig()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        a = run_scenario(wl, cl, scenario, seed=2, daemon_interval=500)
-        b = run_scenario(
-            wl, cl, scenario, seed=2, daemon_interval=500,
-            replay_backend="pallas",
-        )
-    assert_results_match(a, b, scenario.value)
+    a = run_scenario(wl, cl, BASELINES[name], seed=2, daemon_interval=500)
+    b = run_scenario(
+        wl, cl, BASELINES[name], seed=2, daemon_interval=500,
+        replay_backend="pallas",
+    )
+    assert_results_match(a, b, name)
 
 
 def test_pallas_replay_matches_reference_wan5_telemetry():
@@ -322,11 +326,11 @@ def test_experiment_hit_rate_is_seed_mean_with_ci():
     # The band actually reflects seed spread when there is any.
     if np.std(per_seed) > 0:
         assert row["hit_rate_ci99"] > 0.0
-    # Legacy scenario grid carries the same surface (both engines share
+    # The reference engine carries the same surface (both engines share
     # the row-building path).
-    legacy = run_experiment(
+    ref = run_experiment(
         read_fractions=(1.0,), iterations=2, num_requests=1_000,
-        engine="reference",
+        engine="reference", policies=[StaticPolicy(mode="local")],
     )
-    for rows in legacy["scenarios"].values():
+    for rows in ref["policies"].values():
         assert "hit_rate_ci99" in rows[0]

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kvsim import (
-    Scenario,
+    RedynisPolicy,
+    StaticPolicy,
     WAN5_RTT_MS,
     diurnal_workload,
     generate_trace,
@@ -120,9 +121,9 @@ def test_wan5_scenario_ordering():
     """Paper §10 shape survives real geography: local > optimized > remote."""
     geo = wan5_cluster()
     wl = wan5_workload(num_requests=10_000, num_keys=500)
-    loc = run_scenario(wl, geo, Scenario.LOCAL, seed=0)
-    opt = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0)
-    rem = run_scenario(wl, geo, Scenario.REMOTE, seed=0)
+    loc = run_scenario(wl, geo, StaticPolicy(mode="local"), seed=0)
+    opt = run_scenario(wl, geo, RedynisPolicy(), seed=0)
+    rem = run_scenario(wl, geo, StaticPolicy(mode="remote"), seed=0)
     assert loc.throughput_ops_s > opt.throughput_ops_s > rem.throughput_ops_s
     assert opt.throughput_ops_s > 3 * rem.throughput_ops_s
     assert opt.hit_rate > 0.7
@@ -156,7 +157,7 @@ def test_decay_daemon_chases_diurnal_hot_region():
     counters follow the sun."""
     geo = wan5_cluster()
     wl = diurnal_workload(num_requests=20_000)
-    sticky = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0, decay=1.0)
-    chasing = run_scenario(wl, geo, Scenario.OPTIMIZED, seed=0, decay=0.5)
+    sticky = run_scenario(wl, geo, RedynisPolicy(decay=1.0), seed=0)
+    chasing = run_scenario(wl, geo, RedynisPolicy(decay=0.5), seed=0)
     assert chasing.hit_rate > sticky.hit_rate + 0.1
     assert chasing.throughput_ops_s > sticky.throughput_ops_s

@@ -6,20 +6,24 @@ import pytest
 
 from repro.kvsim import (
     ClusterConfig,
-    Scenario,
+    RedynisPolicy,
+    StaticPolicy,
     WorkloadConfig,
     generate_trace,
     run_scenario,
 )
+
+LOCAL = StaticPolicy(mode="local")
+REMOTE = StaticPolicy(mode="remote")
 
 
 @pytest.mark.parametrize("skewed", [False, True])
 def test_optimized_beats_remote(skewed):
     wl = WorkloadConfig(num_requests=20_000, skewed=skewed)
     cl = ClusterConfig()
-    rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
-    opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
-    loc = run_scenario(wl, cl, Scenario.LOCAL, seed=0)
+    rem = run_scenario(wl, cl, REMOTE, seed=0)
+    opt = run_scenario(wl, cl, RedynisPolicy(), seed=0)
+    loc = run_scenario(wl, cl, LOCAL, seed=0)
     assert opt.throughput_ops_s > 4 * rem.throughput_ops_s
     assert opt.throughput_ops_s > 0.4 * loc.throughput_ops_s
     assert opt.hit_rate > 0.8  # daemon converges to local placement
@@ -28,9 +32,9 @@ def test_optimized_beats_remote(skewed):
 def test_local_is_upper_bound():
     wl = WorkloadConfig(num_requests=10_000)
     cl = ClusterConfig()
-    loc = run_scenario(wl, cl, Scenario.LOCAL, seed=1)
-    for sc in (Scenario.REMOTE, Scenario.OPTIMIZED):
-        r = run_scenario(wl, cl, sc, seed=1)
+    loc = run_scenario(wl, cl, LOCAL, seed=1)
+    for pol in (REMOTE, RedynisPolicy()):
+        r = run_scenario(wl, cl, pol, seed=1)
         assert r.throughput_ops_s <= loc.throughput_ops_s * 1.01
 
 
@@ -41,15 +45,15 @@ def test_write_heavy_keeps_advantage():
     cl = ClusterConfig()
     for rf in (1.0, 0.75, 0.5):
         wl = WorkloadConfig(num_requests=15_000, read_fraction=rf, skewed=True)
-        rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
-        opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+        rem = run_scenario(wl, cl, REMOTE, seed=0)
+        opt = run_scenario(wl, cl, RedynisPolicy(), seed=0)
         assert opt.throughput_ops_s > 3 * rem.throughput_ops_s, rf
 
 
 def test_daemon_replicates_then_stabilises():
     wl = WorkloadConfig(num_requests=30_000, skewed=True)
     cl = ClusterConfig()
-    r = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
+    r = run_scenario(wl, cl, RedynisPolicy(), seed=0)
     assert r.replication_moves > 0
     # moves are bounded: no thrashing (less than one move per key per sweep)
     assert r.replication_moves < wl.num_keys * 5
@@ -61,9 +65,9 @@ def test_golden_scenario_ordering():
     cl = ClusterConfig()
     for rf in (1.0, 0.75, 0.5):
         wl = WorkloadConfig(num_requests=10_000, read_fraction=rf, skewed=True)
-        loc = run_scenario(wl, cl, Scenario.LOCAL, seed=0)
-        opt = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0)
-        rem = run_scenario(wl, cl, Scenario.REMOTE, seed=0)
+        loc = run_scenario(wl, cl, LOCAL, seed=0)
+        opt = run_scenario(wl, cl, RedynisPolicy(), seed=0)
+        rem = run_scenario(wl, cl, REMOTE, seed=0)
         assert (
             loc.throughput_ops_s >= opt.throughput_ops_s >= rem.throughput_ops_s
         ), rf
@@ -76,9 +80,7 @@ def test_hit_rate_monotone_in_ownership_coefficient():
     cl = ClusterConfig()
     wl = WorkloadConfig(num_requests=10_000, skewed=True, affinity=0.7)
     hit_rates = [
-        run_scenario(
-            wl, cl, Scenario.OPTIMIZED, seed=0, ownership_coefficient=h
-        ).hit_rate
+        run_scenario(wl, cl, RedynisPolicy(h=h), seed=0).hit_rate
         for h in (1.0 / 3.0, 0.25, 0.15, 0.05)
     ]
     for lo_h_hit, hi_h_hit in zip(hit_rates[1:], hit_rates[:-1]):

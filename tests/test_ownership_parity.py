@@ -159,14 +159,14 @@ def test_run_scenario_pallas_backend_matches_jax():
     lax.scan body, interpret mode on CPU) must reproduce the jax backend's
     SimResult on the same trace — including under a finite capacity budget
     (projection as post-pass on kernel outputs)."""
-    from repro.kvsim import ClusterConfig, Scenario, WorkloadConfig, run_scenario
+    from repro.kvsim import ClusterConfig, RedynisPolicy, WorkloadConfig, run_scenario
 
     wl = WorkloadConfig(num_requests=2_000, num_keys=150, skewed=True)
     for cl in (ClusterConfig(), ClusterConfig(capacity_bytes=16 * 1024.0)):
-        a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=3,
-                         daemon_interval=500, backend="jax")
-        b = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=3,
-                         daemon_interval=500, backend="pallas")
+        a = run_scenario(wl, cl, RedynisPolicy(backend="jax"), seed=3,
+                         daemon_interval=500)
+        b = run_scenario(wl, cl, RedynisPolicy(backend="pallas"), seed=3,
+                         daemon_interval=500)
         for field, x, y in zip(a._fields, a, b):
             np.testing.assert_allclose(
                 np.asarray(x), np.asarray(y), rtol=1e-6,

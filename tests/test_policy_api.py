@@ -1,6 +1,4 @@
-"""Policy registry / CLI parsing / validation / deprecation ergonomics."""
-
-import warnings
+"""Policy registry / CLI parsing / validation / legacy-removal ergonomics."""
 
 import numpy as np
 import pytest
@@ -10,6 +8,7 @@ from repro.core.policy import (
     CostGreedyPolicy,
     DecayLFUPolicy,
     RedynisPolicy,
+    SizeAwarePolicy,
     StaticPolicy,
     TopKPolicy,
     describe_policy,
@@ -24,11 +23,12 @@ from repro.kvsim import (
     WorkloadConfig,
     run_scenario,
 )
-from repro.kvsim.simulate import _WARNED_LEGACY, policy_from_scenario
 
 
 def test_registry_contains_all_builtins():
-    assert set(POLICIES) >= {"redynis", "static", "topk", "costgreedy", "decaylfu"}
+    assert set(POLICIES) >= {
+        "redynis", "static", "topk", "costgreedy", "decaylfu", "sizeaware"
+    }
     for name, cls in POLICIES.items():
         pol = cls().resolve(4)
         pol.validate(4)
@@ -42,6 +42,9 @@ def test_parse_policy_specs():
     assert parse_policy("static:mode=remote") == StaticPolicy(mode="remote")
     assert parse_policy("decaylfu:alpha=0.3,period=2") == DecayLFUPolicy(
         alpha=0.3, period=2
+    )
+    assert parse_policy("sizeaware:size_threshold_bytes=2048,large_fanout=3") == (
+        SizeAwarePolicy(size_threshold_bytes=2048, large_fanout=3)
     )
     # Bare scenario-style aliases.
     assert parse_policy("local") == StaticPolicy(mode="local")
@@ -111,67 +114,48 @@ def test_describe_and_repr_show_non_defaults_only():
     assert policy_repr(StaticPolicy()) == "StaticPolicy(mode='local')"
 
 
-def test_policy_from_scenario_mapping():
-    assert policy_from_scenario(Scenario.LOCAL) == StaticPolicy(mode="local")
-    assert policy_from_scenario(Scenario.REMOTE) == StaticPolicy(mode="remote")
-    assert policy_from_scenario(Scenario.REPLICATED) == StaticPolicy(
-        mode="replicated"
-    )
-    assert policy_from_scenario(
-        Scenario.OPTIMIZED, ownership_coefficient=0.2, decay=0.5
-    ) == RedynisPolicy(h=0.2, decay=0.5)
-
-
 # ---------------------------------------------------------------------------
-# Deprecation ergonomics (satellite: exact replacement, warns once).
+# Legacy-removal ergonomics (the deprecation window closed: the old enum /
+# kwarg spellings now raise with the exact replacement to paste in).
 # ---------------------------------------------------------------------------
 
 _WL = WorkloadConfig(num_requests=500, num_keys=50)
 _CL = ClusterConfig()
 
 
-def test_legacy_scenario_warns_with_exact_replacement():
-    _WARNED_LEGACY.clear()
-    with pytest.warns(DeprecationWarning) as rec:
-        run_scenario(
-            _WL, _CL, Scenario.OPTIMIZED, seed=0, ownership_coefficient=0.25
-        )
-    (w,) = rec.list
-    msg = str(w.message)
-    assert "run_scenario(scenario=Scenario.OPTIMIZED, ownership_coefficient=0.25)" in msg
-    assert "policy=RedynisPolicy(h=0.25)" in msg
-    assert "removed in the next release" in msg
+def test_legacy_scenario_raises_with_exact_replacement():
+    with pytest.raises(ValueError, match="removed") as exc:
+        run_scenario(_WL, _CL, Scenario.OPTIMIZED, seed=0)
+    msg = str(exc.value)
+    assert "policy=RedynisPolicy()" in msg
+    assert "run_scenario" in msg
 
 
-def test_legacy_scenario_warns_once_per_spelling():
-    _WARNED_LEGACY.clear()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        run_scenario(_WL, _CL, Scenario.LOCAL, seed=0)
-        run_scenario(_WL, _CL, Scenario.LOCAL, seed=1)  # same spelling: silent
-        run_scenario(_WL, _CL, scenario=Scenario.REMOTE, seed=0)  # new spelling
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(dep) == 2
-    assert "StaticPolicy(mode='local')" in str(dep[0].message)
-    assert "StaticPolicy(mode='remote')" in str(dep[1].message)
+def test_legacy_scenario_raises_names_static_mode():
+    for scenario, repl in [
+        (Scenario.LOCAL, "StaticPolicy(mode='local')"),
+        (Scenario.REMOTE, "StaticPolicy(mode='remote')"),
+        (Scenario.REPLICATED, "StaticPolicy(mode='replicated')"),
+    ]:
+        with pytest.raises(ValueError, match="removed") as exc:
+            run_scenario(_WL, _CL, scenario, seed=0)
+        assert repl in str(exc.value), scenario
 
 
-def test_policy_and_legacy_kwargs_are_mutually_exclusive():
-    with pytest.raises(ValueError, match="not both"):
-        run_scenario(_WL, _CL, RedynisPolicy(), ownership_coefficient=0.2)
-    with pytest.raises(ValueError, match="not both"):
-        run_scenario(_WL, _CL, RedynisPolicy(), scenario=Scenario.OPTIMIZED)
+def test_policy_is_required():
     with pytest.raises(ValueError, match="policy is required"):
         run_scenario(_WL, _CL)
 
 
-def test_legacy_kwargs_still_validated_for_static_scenarios():
-    """The old engine constructed (and validated) a daemon even for static
-    scenarios; the shim preserves those errors."""
-    with pytest.raises(ValueError, match="ownership coefficient"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            run_scenario(_WL, _CL, Scenario.LOCAL, ownership_coefficient=0.9)
+def test_legacy_kwargs_removed_from_signature():
+    """policy_from_scenario and the kwarg sprawl left with the shim: the
+    import is gone and the runner signature no longer accepts them."""
+    with pytest.raises(ImportError):
+        from repro.kvsim.simulate import policy_from_scenario  # noqa: F401
+    with pytest.raises(TypeError):
+        run_scenario(_WL, _CL, RedynisPolicy(), ownership_coefficient=0.2)
+    with pytest.raises(TypeError):
+        run_scenario(_WL, _CL, scenario=Scenario.OPTIMIZED)
 
 
 # ---------------------------------------------------------------------------

@@ -1,18 +1,14 @@
 """Policy-API regression guards.
 
-1. ``RedynisPolicy`` / ``StaticPolicy`` must reproduce the legacy
-   ``Scenario`` enum paths *field-for-field* on all four scenarios, through
-   BOTH engines (fused scan + per-chunk reference) and BOTH sweep backends
-   (jax + pallas) — the enum shim and the policy-native spelling are the
-   same program, so results are bit-identical, not merely close.
+1. The legacy ``Scenario`` enum spelling is *removed*: passing one to any
+   runner raises with the exact policy replacement (the deprecation window
+   closed after one release — see EXPERIMENTS.md §Deprecation timeline).
 2. Every registered policy respects per-node capacity budgets: the shared
    projection stage is not optional (hypothesis property test).
 3. The batched ``run_experiment(policies=[...])`` grid agrees with
    single-policy runs and vmaps same-family dynamic params into one
    compiled program.
 """
-
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,58 +49,34 @@ def assert_results_equal(a: SimResult, b: SimResult, ctx: str = ""):
         )
 
 
-def _legacy(runner, wl, cl, scenario, **kwargs):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return runner(wl, cl, scenario, **kwargs)
-
-
-ENUM_TO_POLICY = [
-    (Scenario.LOCAL, StaticPolicy(mode="local")),
-    (Scenario.REMOTE, StaticPolicy(mode="remote")),
-    (Scenario.REPLICATED, StaticPolicy(mode="replicated")),
-    (Scenario.OPTIMIZED, RedynisPolicy()),
-]
+@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
+@pytest.mark.parametrize(
+    "scenario,replacement",
+    [
+        (Scenario.LOCAL, "StaticPolicy(mode='local')"),
+        (Scenario.REMOTE, "StaticPolicy(mode='remote')"),
+        (Scenario.REPLICATED, "StaticPolicy(mode='replicated')"),
+        (Scenario.OPTIMIZED, "RedynisPolicy()"),
+    ],
+)
+def test_legacy_scenario_enum_raises_with_replacement(runner, scenario, replacement):
+    """The removed enum spelling fails fast on BOTH engines, and the error
+    names the exact policy to paste in."""
+    wl = WorkloadConfig(num_requests=500, num_keys=50)
+    with pytest.raises(ValueError, match="removed") as exc:
+        runner(wl, ClusterConfig(), scenario, seed=0)
+    assert replacement in str(exc.value)
 
 
 @pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
-@pytest.mark.parametrize("scenario,policy", ENUM_TO_POLICY)
-def test_policy_matches_legacy_enum_both_engines(runner, scenario, policy):
-    wl = WorkloadConfig(num_requests=3_000, num_keys=150, skewed=True)
-    cl = ClusterConfig()
-    a = _legacy(runner, wl, cl, scenario, seed=2, daemon_interval=500)
-    b = runner(wl, cl, policy, seed=2, daemon_interval=500)
-    assert_results_equal(a, b, f"{runner.__name__} {scenario.value}")
-
-
-@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
-def test_redynis_policy_matches_legacy_kwargs(runner):
-    """The full legacy kwarg sprawl maps onto RedynisPolicy fields."""
-    wl = WorkloadConfig(num_requests=2_000, num_keys=100, skewed=True, affinity=0.8)
-    cl = ClusterConfig()
-    a = _legacy(
-        runner, wl, cl, Scenario.OPTIMIZED, seed=1, daemon_interval=250,
-        ownership_coefficient=0.2, expiry_ticks=4, decay=0.5, daemon_period=2,
-    )
-    b = runner(
-        wl, cl, RedynisPolicy(h=0.2, expiry=4, decay=0.5, period=2),
-        seed=1, daemon_interval=250,
-    )
-    assert_results_equal(a, b, runner.__name__)
-
-
-@pytest.mark.parametrize("runner", [run_scenario, run_scenario_reference])
-def test_redynis_policy_matches_legacy_pallas_backend(runner):
-    wl = WorkloadConfig(num_requests=1_000, num_keys=100, skewed=True)
-    cl = ClusterConfig(capacity_bytes=16 * 1024.0)
-    a = _legacy(
-        runner, wl, cl, Scenario.OPTIMIZED, seed=3, daemon_interval=500,
-        backend="pallas",
-    )
-    b = runner(
-        wl, cl, RedynisPolicy(backend="pallas"), seed=3, daemon_interval=500
-    )
-    assert_results_equal(a, b, f"{runner.__name__} pallas")
+def test_legacy_engine_kwargs_are_gone(runner):
+    """The kwarg sprawl (ownership_coefficient/expiry_ticks/daemon_period/
+    backend) left with the shim — TypeError, not a silent accept."""
+    wl = WorkloadConfig(num_requests=500, num_keys=50)
+    with pytest.raises(TypeError):
+        runner(wl, ClusterConfig(), RedynisPolicy(), ownership_coefficient=0.2)
+    with pytest.raises(TypeError):
+        runner(wl, ClusterConfig(), RedynisPolicy(), backend="pallas")
 
 
 def test_policy_scan_matches_reference_with_capacity():
@@ -231,11 +203,19 @@ def test_run_experiment_heterogeneous_policy_grid():
     assert all(0.0 <= r["hit_rate"] <= 1.0 for r in rows.values())
 
 
-def test_run_experiment_legacy_grid_still_keyed_by_scenario():
-    res = run_experiment(
-        read_fractions=(1.0,), iterations=2, num_requests=1_000
-    )
-    assert set(res["scenarios"]) == {s.value for s in Scenario}
+def test_run_experiment_requires_policies():
+    """The implicit legacy scenario grid left with the shim: policies= is
+    mandatory, and a stray enum in the list raises with its replacement."""
+    with pytest.raises(ValueError, match="policies is required"):
+        run_experiment(read_fractions=(1.0,), iterations=1, num_requests=500)
+    with pytest.raises(ValueError, match="removed") as exc:
+        run_experiment(
+            policies=[RedynisPolicy(), Scenario.LOCAL],
+            read_fractions=(1.0,),
+            iterations=1,
+            num_requests=500,
+        )
+    assert "StaticPolicy(mode='local')" in str(exc.value)
 
 
 # ---------------------------------------------------------------------------

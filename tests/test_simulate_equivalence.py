@@ -8,8 +8,9 @@ import pytest
 
 from repro.kvsim import (
     ClusterConfig,
-    Scenario,
+    RedynisPolicy,
     SimResult,
+    StaticPolicy,
     WorkloadConfig,
     flat_rtt,
     run_scenario,
@@ -22,6 +23,14 @@ from repro.kvsim import (
 # float32 on device: allclose, not bit-identical.
 RTOL = 1e-4
 
+# The four seed-era baselines, as policies (the legacy Scenario spellings).
+BASELINES = {
+    "local": StaticPolicy(mode="local"),
+    "remote": StaticPolicy(mode="remote"),
+    "optimized": RedynisPolicy(),
+    "replicated": StaticPolicy(mode="replicated"),
+}
+
 
 def assert_results_match(a: SimResult, b: SimResult, ctx: str = ""):
     for field, x, y in zip(SimResult._fields, a, b):
@@ -30,13 +39,14 @@ def assert_results_match(a: SimResult, b: SimResult, ctx: str = ""):
         )
 
 
-@pytest.mark.parametrize("scenario", list(Scenario))
-def test_scan_matches_reference_all_scenarios(scenario):
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_scan_matches_reference_all_scenarios(name):
+    policy = BASELINES[name]
     wl = WorkloadConfig(num_requests=4_000, num_keys=200, skewed=True)
     cl = ClusterConfig()
-    a = run_scenario(wl, cl, scenario, seed=2, daemon_interval=500)
-    b = run_scenario_reference(wl, cl, scenario, seed=2, daemon_interval=500)
-    assert_results_match(a, b, scenario.value)
+    a = run_scenario(wl, cl, policy, seed=2, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, policy, seed=2, daemon_interval=500)
+    assert_results_match(a, b, name)
 
 
 def test_scan_matches_reference_padded_trace():
@@ -44,16 +54,16 @@ def test_scan_matches_reference_padded_trace():
     padding (valid-masked) path of the fused engine."""
     wl = WorkloadConfig(num_requests=3_300, num_keys=150)
     cl = ClusterConfig()
-    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=1, daemon_interval=500)
-    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=1, daemon_interval=500)
+    a = run_scenario(wl, cl, RedynisPolicy(), seed=1, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, RedynisPolicy(), seed=1, daemon_interval=500)
     assert_results_match(a, b, "padded")
 
 
 def test_scan_matches_reference_wan5_topology():
     wl = wan5_workload(num_requests=4_000, num_keys=200)
     cl = wan5_cluster()
-    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
-    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    a = run_scenario(wl, cl, RedynisPolicy(), seed=0, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, RedynisPolicy(), seed=0, daemon_interval=500)
     assert_results_match(a, b, "wan5")
 
 
@@ -66,8 +76,8 @@ def test_scan_matches_reference_finite_capacity():
         num_requests=4_000, num_keys=200, skewed=True, object_bytes_sigma=0.5
     )
     cl = ClusterConfig(capacity_bytes=24 * 1024.0)
-    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=2, daemon_interval=500)
-    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=2, daemon_interval=500)
+    a = run_scenario(wl, cl, RedynisPolicy(), seed=2, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, RedynisPolicy(), seed=2, daemon_interval=500)
     assert_results_match(a, b, "capacity")
     assert a.capacity_evictions > 0
 
@@ -78,8 +88,8 @@ def test_scan_matches_reference_heterogeneous_capacity():
 
     wl = wan5_workload(num_requests=4_000, num_keys=200)
     cl = wan5_edge_cluster(edge_capacity_bytes=8 * 1024.0)
-    a = run_scenario(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
-    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, seed=0, daemon_interval=500)
+    a = run_scenario(wl, cl, RedynisPolicy(), seed=0, daemon_interval=500)
+    b = run_scenario_reference(wl, cl, RedynisPolicy(), seed=0, daemon_interval=500)
     assert_results_match(a, b, "wan5-edge")
 
 
@@ -88,16 +98,14 @@ def test_scan_matches_reference_daemon_options():
     `masked_step`; they must still match the host-side daemon exactly."""
     wl = WorkloadConfig(num_requests=4_000, num_keys=200, skewed=True, affinity=0.8)
     cl = ClusterConfig()
-    kw = dict(
-        seed=3,
-        daemon_interval=250,
-        ownership_coefficient=0.2,
-        expiry_ticks=4,
+    policy = RedynisPolicy(
+        h=0.2,
+        expiry=4,
         decay=0.5,
-        daemon_period=2,  # odd chunks take masked_step's not-due branch
+        period=2,  # odd chunks take masked_step's not-due branch
     )
-    a = run_scenario(wl, cl, Scenario.OPTIMIZED, **kw)
-    b = run_scenario_reference(wl, cl, Scenario.OPTIMIZED, **kw)
+    a = run_scenario(wl, cl, policy, seed=3, daemon_interval=250)
+    b = run_scenario_reference(wl, cl, policy, seed=3, daemon_interval=250)
     assert_results_match(a, b, "daemon-options")
 
 
@@ -127,11 +135,11 @@ def test_flat_rtt_tuple_is_degenerate_topology():
     wl = WorkloadConfig(num_requests=5_000)
     implicit = ClusterConfig()
     explicit = ClusterConfig(rtt=flat_rtt(3, 100.0, 0.0))
-    for sc in Scenario:
-        a = run_scenario(wl, implicit, sc, seed=0)
-        b = run_scenario(wl, explicit, sc, seed=0)
-        assert a.throughput_ops_s == b.throughput_ops_s, sc
-        assert a.hit_rate == b.hit_rate, sc
+    for name, policy in BASELINES.items():
+        a = run_scenario(wl, implicit, policy, seed=0)
+        b = run_scenario(wl, explicit, policy, seed=0)
+        assert a.throughput_ops_s == b.throughput_ops_s, name
+        assert a.hit_rate == b.hit_rate, name
         np.testing.assert_array_equal(a.node_busy_ms, b.node_busy_ms)
 
 
@@ -140,18 +148,18 @@ def test_flat_rtt_tuple_is_degenerate_topology():
 # these guarantees the RTT-matrix generalisation reproduces the repo's
 # original Fig 2/3 numbers as the degenerate topology.
 SEED_GOLDENS = {
-    Scenario.LOCAL: (292.95444558371173, 1.0, 10.0, 0.0),
-    Scenario.REMOTE: (26.632222325791975, 0.0, 110.0, 0.0),
-    Scenario.OPTIMIZED: (164.78536705940513, 0.92115, 17.885, 1000.0),
-    Scenario.REPLICATED: (292.95444558371173, 1.0, 10.0, 0.0),
+    "local": (292.95444558371173, 1.0, 10.0, 0.0),
+    "remote": (26.632222325791975, 0.0, 110.0, 0.0),
+    "optimized": (164.78536705940513, 0.92115, 17.885, 1000.0),
+    "replicated": (292.95444558371173, 1.0, 10.0, 0.0),
 }
 
 
-@pytest.mark.parametrize("scenario", list(Scenario))
-def test_flat_topology_reproduces_seed_goldens(scenario):
+@pytest.mark.parametrize("name", sorted(SEED_GOLDENS))
+def test_flat_topology_reproduces_seed_goldens(name):
     wl = WorkloadConfig(num_requests=20_000)
-    r = run_scenario(wl, ClusterConfig(), scenario, seed=0)
-    tput, hit, mean_lat, moves = SEED_GOLDENS[scenario]
+    r = run_scenario(wl, ClusterConfig(), BASELINES[name], seed=0)
+    tput, hit, mean_lat, moves = SEED_GOLDENS[name]
     np.testing.assert_allclose(r.throughput_ops_s, tput, rtol=1e-5)
     np.testing.assert_allclose(r.hit_rate, hit, rtol=1e-5)
     np.testing.assert_allclose(r.mean_latency_ms, mean_lat, rtol=1e-5)

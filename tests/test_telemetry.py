@@ -344,12 +344,14 @@ def test_experiment_rows_report_p99_ci_bands():
             row["p99_latency_ms"], row["trace"].quantile(0.99),
             row["trace"].edges, label,
         )
-    # Legacy scenario grid carries the same quantile surface.
-    legacy = run_experiment(
+    # Every policy row carries the same quantile surface (no legacy grid:
+    # the row-building path is shared).
+    more = run_experiment(
+        policies=[StaticPolicy(mode="local")],
         read_fractions=(0.9,), iterations=2, num_requests=2_000,
         telemetry=TelemetryConfig(),
     )
-    assert "p99_latency_ms" in legacy["scenarios"]["optimized"][0]
+    assert "p99_latency_ms" in more["policies"]["static(mode='local')"][0]
 
 
 def test_confidence_interval_accepts_quantile_sample_stacks():
