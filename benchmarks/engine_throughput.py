@@ -27,15 +27,34 @@ true program cost (see ``_measure``). Timed work includes trace
 generation and host-side result/trace materialisation, exactly what
 every driver pays.
 
+Since the scale-out fabric (ISSUE 7) the grid also measures
+``trace_mode="streamed"`` rows for the scan engine (in-scan trace
+generation, bit-exact with the materialised path), every row records
+``peak_live_bytes`` — the analytic peak live-buffer footprint (trace
+window + per-key state planes, the O(requests) → O(chunk + keys/shard)
+memory win as a tracked column — see ``_peak_live_bytes``), and
+``--trendline`` adds the multi-device scaling trendline: one subprocess
+per device count (``XLA_FLAGS=--xla_force_host_platform_device_count=S``
+must be set before jax initialises, hence the fresh interpreter per
+point) runs the key-sharded streamed engine and reports requests/sec plus
+``scaling_vs_1shard``. The spec-scale run targets 100M+ requests over
+10⁷ keys (``--trendline-requests 100000000 --trendline-keys 10000000``);
+the checked-in baseline records a CI-tractable configuration of the same
+shape. ``--scale-acceptance`` times one ≥10M-request streamed run on a
+single device (the run the materialised path cannot fit at accelerator
+HBM scale).
+
 ``--baseline PATH`` (default: the checked-in
 ``benchmarks/baselines/BENCH_engine_throughput.json``) warns —
 ``WARNING,engine_throughput_regression,...`` lines — when any matching grid
 row regresses more than 20%. Absolute requests/sec warnings never fail the
 job (wall-clock noise across runners makes that gate flaky), but
-``--fail-on-regression`` promotes the *speedup-ratio* warnings to a hard
-nonzero exit: fused and legacy engines run on the same box, so the
+``--fail-on-regression`` promotes the *ratio* warnings to a hard nonzero
+exit: fused and legacy engines run on the same box, so the
 ``speedup_vs_legacy`` ratio is machine-independent and a >20% drop there is
-a genuine code-path regression, not runner noise.
+a genuine code-path regression, not runner noise — and the same logic
+covers the trendline's sharded-vs-single-device ``scaling_vs_1shard``
+ratios (both sides of that ratio also share one box).
 
 Note on ``--backends pallas`` off-TPU: the Mosaic kernel runs in interpret
 mode on CPU (a correctness/compile-path row, orders of magnitude slower
@@ -48,6 +67,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 from functools import partial
 
@@ -250,8 +271,27 @@ def _wan5_workload(num_requests, num_keys):
     )
 
 
+def _peak_live_bytes(num_requests, num_keys, num_nodes, daemon_interval,
+                     trace_mode, num_shards=1):
+    """Analytic peak live-buffer bytes per device: trace window + per-key
+    state planes (the buffers whose lifetime spans the scan — compiler
+    scratch excluded, so this is the memory *model*, comparable across
+    modes, not an allocator measurement).
+
+    Trace rows cost 9 bytes (i32 key + i32 node + bool is_read): the whole
+    ``[R]`` trace when materialised, one ``[daemon_interval]`` window when
+    streamed. Per-key planes (sharded: ``K/S`` rows per device): natural +
+    object_bytes (8 B) and the metadata store — access_counts ``[K, N]``
+    i32, hosts ``[K, N]`` bool, last_access/live/home (9 B) — i.e.
+    ``17 + 5·N`` bytes per key."""
+    trace_rows = daemon_interval if trace_mode == "streamed" else num_requests
+    keys_local = num_keys // num_shards
+    return trace_rows * 9 + keys_local * (17 + 5 * num_nodes)
+
+
 def _measure(engine, policy, workload, cluster, daemon_interval, telemetry,
-             replay_backend, repeats):
+             replay_backend, repeats, trace_mode="materialized",
+             num_shards=1):
     """Warm wall-times of one full scenario run: ``(median_s, min_s)``.
 
     The JSON trendline records the median (the BENCH methodology); speedup
@@ -269,7 +309,8 @@ def _measure(engine, policy, workload, cluster, daemon_interval, telemetry,
         fn = lambda: run_scenario(
             workload, cluster, policy, seed=0,
             daemon_interval=daemon_interval, telemetry=telemetry,
-            replay_backend=replay_backend,
+            replay_backend=replay_backend, trace_mode=trace_mode,
+            num_shards=num_shards,
         )
     for _ in range(2):  # compile + cache warmup
         fn()
@@ -285,7 +326,15 @@ def _row_key(row):
     return (
         row["engine"], row["policy"], row["replay_backend"],
         row["daemon_interval"], row["num_keys"], row["telemetry"],
-        row["num_requests"],
+        row["num_requests"], row.get("trace_mode", "materialized"),
+        row.get("num_shards", 1),
+    )
+
+
+def _trendline_key(row):
+    return (
+        row["policy"], row["num_requests"], row["num_keys"],
+        row["num_shards"],
     )
 
 
@@ -296,18 +345,21 @@ def _speedup_key(row):
     )
 
 
-def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
+def check_regression(rows, baseline_path, threshold=0.20, speedups=None,
+                     trendline=None):
     """Warn when a grid row is >20% below the checked-in baseline for the
     identical configuration; returns the warned rows, each tagged with
     ``"kind"`` so callers can gate selectively.
 
-    Two signals: absolute requests/sec (``kind="throughput"``,
+    Three signals: absolute requests/sec (``kind="throughput"``,
     machine-DEPENDENT — a slower runner trips it without any code change,
-    so it only ever warns) and, when both sides carry them, the
-    ``speedup_vs_legacy`` ratios (``kind="speedup"``) — machine-
-    independent, since fused and legacy engines run on the same box, so a
-    drop there is a genuine code-path regression and the one signal
-    ``--fail-on-regression`` hard-gates on."""
+    so it only ever warns) and two machine-independent ratios
+    ``--fail-on-regression`` hard-gates on: the ``speedup_vs_legacy``
+    ratios (``kind="speedup"`` — fused and legacy engines run on the same
+    box) and the trendline's ``scaling_vs_1shard`` ratios
+    (``kind="scaling"`` — the sharded and 1-shard runs share one box too,
+    so a drop means the sharded program itself regressed, e.g. a collective
+    that grew from psum to all-gather)."""
     if not os.path.exists(baseline_path):
         print(f"NOTE,no baseline at {baseline_path}, skipping regression check")
         return []
@@ -321,7 +373,25 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
         tuple(_speedup_key(r)): r["speedup_vs_legacy"]
         for r in base_metrics.get("speedups", [])
     }
+    base_trend = {
+        tuple(_trendline_key(r)): r["scaling_vs_1shard"]
+        for r in base_metrics.get("trendline", [])
+    }
     warned, matched = [], 0
+    for row in trendline or []:
+        ref = base_trend.get(tuple(_trendline_key(row)))
+        if ref is None or ref <= 0 or row["num_shards"] == 1:
+            continue
+        ratio = row["scaling_vs_1shard"] / ref
+        if ratio < 1.0 - threshold:
+            warned.append({"kind": "scaling", **row})
+            print(
+                "WARNING,engine_scaling_regression,"
+                f"shards={row['num_shards']}/nk={row['num_keys']},"
+                f"now={row['scaling_vs_1shard']:.2f}x,baseline={ref:.2f}x,"
+                f"ratio={ratio:.2f}",
+                flush=True,
+            )
     for row in speedups or []:
         ref = base_speedups.get(tuple(_speedup_key(row)))
         if ref is None or ref <= 0:
@@ -370,6 +440,146 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None):
     return warned
 
 
+# ---------------------------------------------------------------------------
+# Multi-device trendline: one subprocess per virtual device count.
+# ---------------------------------------------------------------------------
+
+TRENDLINE_DEVICE_COUNTS = (1, 2, 4, 8)
+_TRENDLINE_MARK = "TRENDLINE_ROW,"
+
+
+def _trendline_worker(num_shards, num_requests, num_keys, repeats,
+                      daemon_interval, policy_spec):
+    """Runs inside the forced-device-count subprocess: measure one streamed
+    key-sharded run and print the row as a machine-readable line."""
+    pol = parse_policy(policy_spec)
+    wl = _wan5_workload(num_requests, num_keys)
+    med, lo = _measure(
+        "scan", pol, wl, wan5_cluster(), daemon_interval, None, "jax",
+        repeats, trace_mode="streamed", num_shards=num_shards,
+    )
+    row = {
+        "policy": policy_spec, "num_requests": num_requests,
+        "num_keys": num_keys, "num_shards": num_shards,
+        "daemon_interval": daemon_interval, "trace_mode": "streamed",
+        "wall_s": med, "wall_s_min": lo,
+        "requests_per_s": num_requests / med,
+        "peak_live_bytes": _peak_live_bytes(
+            num_requests, num_keys, wl.num_nodes, daemon_interval,
+            "streamed", num_shards,
+        ),
+    }
+    print(_TRENDLINE_MARK + json.dumps(row), flush=True)
+
+
+def run_trendline(device_counts, num_requests, num_keys, repeats,
+                  daemon_interval, policy_spec):
+    """The multi-device scaling trendline: re-invoke this script once per
+    device count with ``--xla_force_host_platform_device_count`` forced in
+    the child's environment (the flag is read once at backend init, so a
+    fresh interpreter per point is the only correct spelling — same
+    convention as the multi-rank tests).
+
+    ``scaling_vs_1shard`` divides per-count minima (same robustness
+    argument as ``speedup_vs_legacy``: both sides share one box)."""
+    banner(
+        f"trendline: streamed sharded engine, {num_requests:,} requests / "
+        f"{num_keys:,} keys, device counts {tuple(device_counts)}"
+    )
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env_base = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(root, "src"), root,
+             os.environ.get("PYTHONPATH", "")]
+        ),
+    )
+    rows = []
+    for s in device_counts:
+        env = dict(
+            env_base,
+            XLA_FLAGS=f"--xla_force_host_platform_device_count={s}",
+        )
+        proc = subprocess.run(
+            [
+                sys.executable, os.path.abspath(__file__),
+                "--trendline-worker", str(s),
+                "--trendline-requests", str(num_requests),
+                "--trendline-keys", str(num_keys),
+                "--trendline-policy", policy_spec,
+                "--repeats", str(repeats),
+                "--daemon-intervals", str(daemon_interval),
+            ],
+            capture_output=True, text=True, env=env,
+        )
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"FAIL,trendline worker (num_shards={s}) exited "
+                f"{proc.returncode}:\n{proc.stdout}{proc.stderr}"
+            )
+        line = next(
+            ln for ln in proc.stdout.splitlines()
+            if ln.startswith(_TRENDLINE_MARK)
+        )
+        rows.append(json.loads(line[len(_TRENDLINE_MARK):]))
+    base_min = rows[0]["wall_s_min"]
+    for row in rows:
+        row["scaling_vs_1shard"] = base_min / row["wall_s_min"]
+        emit(
+            "engine_trendline", round(row["requests_per_s"]), "req/s",
+            num_shards=row["num_shards"], num_keys=row["num_keys"],
+            num_requests=row["num_requests"],
+            scaling_vs_1shard=round(row["scaling_vs_1shard"], 3),
+            peak_live_mib=round(row["peak_live_bytes"] / 2**20, 1),
+        )
+    return rows
+
+
+def run_scale_acceptance(num_requests, num_keys, daemon_interval,
+                         policy_spec):
+    """The ISSUE-7 streamed-scale criterion: a ≥10M-request streamed run
+    completes on ONE device — peak live buffers O(daemon_interval + K), vs
+    the O(R) trace the materialised path would have to hold."""
+    banner(
+        f"scale acceptance: streamed {num_requests:,}-request run, "
+        "single device"
+    )
+    pol = parse_policy(policy_spec)
+    wl = _wan5_workload(num_requests, num_keys)
+    med, lo = _measure(
+        "scan", pol, wl, wan5_cluster(), daemon_interval, None, "jax",
+        repeats=1, trace_mode="streamed",
+    )
+    row = {
+        "policy": policy_spec, "num_requests": num_requests,
+        "num_keys": num_keys, "trace_mode": "streamed",
+        "wall_s": med, "requests_per_s": num_requests / med,
+        "peak_live_bytes": _peak_live_bytes(
+            num_requests, num_keys, wl.num_nodes, daemon_interval,
+            "streamed",
+        ),
+        "materialized_trace_bytes": _peak_live_bytes(
+            num_requests, num_keys, wl.num_nodes, daemon_interval,
+            "materialized",
+        ),
+        "passed": num_requests >= 10_000_000,
+    }
+    emit(
+        "engine_scale_acceptance", round(row["requests_per_s"]), "req/s",
+        num_requests=num_requests, num_keys=num_keys,
+        peak_live_mib=round(row["peak_live_bytes"] / 2**20, 1),
+        materialized_mib=round(row["materialized_trace_bytes"] / 2**20, 1),
+    )
+    print(
+        f"ACCEPTANCE,{'PASS' if row['passed'] else 'FAIL'},streamed "
+        f"{num_requests:,} requests in {med:.2f}s on one device "
+        f"(live {row['peak_live_bytes'] / 2**20:.1f} MiB vs "
+        f"{row['materialized_trace_bytes'] / 2**20:.1f} MiB materialised)",
+        flush=True,
+    )
+    return row
+
+
 def main(
     num_requests: int = 200_000,
     repeats: int = 5,
@@ -379,11 +589,21 @@ def main(
     backends=("jax",),
     engines=("scan", "legacy"),
     telemetry_modes=(True, False),
+    trace_modes=("materialized", "streamed"),
     acceptance: bool = False,
     baseline: str | None = DEFAULT_BASELINE,
     policy=None,
     replay_backend: str | None = None,
     fail_on_regression: bool = False,
+    trendline: bool = False,
+    trendline_devices=TRENDLINE_DEVICE_COUNTS,
+    trendline_requests: int = 2_000_000,
+    trendline_keys: int = 200_000,
+    trendline_policy: str = "redynis",
+    scale_acceptance: bool = False,
+    scale_requests: int = 10_000_000,
+    scale_keys: int = 1_000_000,
+    scale_policy: str = "replicated",
 ) -> dict:
     banner("engine_throughput: simulator requests/sec, fused vs pre-fusion")
     if replay_backend is not None:
@@ -414,31 +634,49 @@ def main(
                     times = {}
                     for engine in engines:
                         bkds = backends if engine == "scan" else ("jax",)
+                        # Streamed trace generation exists only in the
+                        # fused scan engine; the legacy replica predates it.
+                        tms = (
+                            trace_modes if engine == "scan"
+                            else ("materialized",)
+                        )
                         for bk in bkds:
-                            med, lo = _measure(
-                                engine, pol, wl, cluster, di, telem, bk,
-                                repeats,
-                            )
-                            times[(engine, bk)] = lo
-                            row = {
-                                "engine": engine, "policy": label,
-                                "replay_backend": bk, "daemon_interval": di,
-                                "num_keys": nk, "telemetry": telem_on,
-                                "num_requests": num_requests,
-                                "wall_s": med,
-                                "wall_s_min": lo,
-                                "requests_per_s": num_requests / med,
-                            }
-                            rows.append(row)
-                            emit(
-                                "engine_throughput",
-                                round(row["requests_per_s"]),
-                                "req/s",
-                                engine=engine, policy=label, backend=bk,
-                                daemon_interval=di, num_keys=nk,
-                                telemetry=int(telem_on),
-                                wall_s=round(med, 4),
-                            )
+                            for tm in tms:
+                                med, lo = _measure(
+                                    engine, pol, wl, cluster, di, telem, bk,
+                                    repeats, trace_mode=tm,
+                                )
+                                if tm == "materialized":
+                                    times[(engine, bk)] = lo
+                                row = {
+                                    "engine": engine, "policy": label,
+                                    "replay_backend": bk,
+                                    "daemon_interval": di,
+                                    "num_keys": nk, "telemetry": telem_on,
+                                    "num_requests": num_requests,
+                                    "trace_mode": tm,
+                                    "num_shards": 1,
+                                    "wall_s": med,
+                                    "wall_s_min": lo,
+                                    "requests_per_s": num_requests / med,
+                                    "peak_live_bytes": _peak_live_bytes(
+                                        num_requests, nk, wl.num_nodes,
+                                        di, tm,
+                                    ),
+                                }
+                                rows.append(row)
+                                emit(
+                                    "engine_throughput",
+                                    round(row["requests_per_s"]),
+                                    "req/s",
+                                    engine=engine, policy=label, backend=bk,
+                                    daemon_interval=di, num_keys=nk,
+                                    telemetry=int(telem_on), trace_mode=tm,
+                                    wall_s=round(med, 4),
+                                    peak_live_mib=round(
+                                        row["peak_live_bytes"] / 2**20, 2
+                                    ),
+                                )
                     if ("legacy", "jax") in times and ("scan", "jax") in times:
                         speedup = times[("legacy", "jax")] / times[("scan", "jax")]
                         speedups.append({
@@ -493,8 +731,26 @@ def main(
             flush=True,
         )
 
+    trend_rows = None
+    if trendline:
+        trend_rows = run_trendline(
+            tuple(trendline_devices), trendline_requests, trendline_keys,
+            repeats, daemon_intervals[0], trendline_policy,
+        )
+    scale_row = None
+    if scale_acceptance:
+        # A static policy by design: the criterion is the streamed-trace
+        # MEMORY model (O(chunk + keys), policy-independent); an active
+        # policy's O(K·N)-per-tick sweep would just drown the measurement.
+        scale_row = run_scale_acceptance(
+            scale_requests, scale_keys, daemon_intervals[0], scale_policy
+        )
+
     warned = (
-        check_regression(rows, baseline, speedups=speedups) if baseline else []
+        check_regression(
+            rows, baseline, speedups=speedups, trendline=trend_rows
+        )
+        if baseline else []
     )
     metrics = {
         "rows": rows,
@@ -504,6 +760,10 @@ def main(
     }
     if accept is not None:
         metrics["acceptance"] = accept
+    if trend_rows is not None:
+        metrics["trendline"] = trend_rows
+    if scale_row is not None:
+        metrics["scale_acceptance"] = scale_row
     write_bench_json(
         "engine_throughput", metrics,
         num_requests=num_requests, repeats=repeats,
@@ -511,12 +771,13 @@ def main(
         topology="wan5", skewed=True, read_fraction=0.9,
     )
     if fail_on_regression:
-        hard = [w for w in warned if w.get("kind") == "speedup"]
+        hard = [w for w in warned if w.get("kind") in ("speedup", "scaling")]
         if hard:
             raise SystemExit(
-                f"FAIL,engine_speedup_regression,{len(hard)} fused-vs-legacy "
-                f"speedup ratio(s) >20% below baseline (machine-independent "
-                f"signal; see WARNING lines above)"
+                f"FAIL,engine_ratio_regression,{len(hard)} machine-"
+                f"independent ratio(s) (fused-vs-legacy speedup or sharded-"
+                f"vs-1-shard scaling) >20% below baseline (see WARNING "
+                f"lines above)"
             )
     return metrics
 
@@ -543,8 +804,38 @@ if __name__ == "__main__":
     ap.add_argument(
         "--telemetry", choices=["on", "off", "both"], default="both"
     )
+    ap.add_argument(
+        "--trace-modes", nargs="+", default=["materialized", "streamed"],
+        choices=["materialized", "streamed"],
+        help="trace generation modes for the scan engine (legacy is "
+        "always materialized)",
+    )
     ap.add_argument("--acceptance", action="store_true",
                     help="run the 1M-request ISSUE-5 acceptance comparison")
+    ap.add_argument(
+        "--trendline", action="store_true",
+        help="measure the multi-device scaling trendline (one forced-"
+        "device-count subprocess per point, streamed sharded engine)",
+    )
+    ap.add_argument(
+        "--trendline-devices", nargs="+", type=int,
+        default=list(TRENDLINE_DEVICE_COUNTS),
+    )
+    ap.add_argument("--trendline-requests", type=int, default=2_000_000)
+    ap.add_argument("--trendline-keys", type=int, default=200_000)
+    ap.add_argument("--trendline-policy", default="redynis")
+    ap.add_argument(
+        "--trendline-worker", type=int, metavar="NUM_SHARDS", default=None,
+        help=argparse.SUPPRESS,  # internal: the per-device-count subprocess
+    )
+    ap.add_argument(
+        "--scale-acceptance", action="store_true",
+        help="time one >=10M-request streamed run on a single device "
+        "(the ISSUE-7 memory-model criterion)",
+    )
+    ap.add_argument("--scale-requests", type=int, default=10_000_000)
+    ap.add_argument("--scale-keys", type=int, default=1_000_000)
+    ap.add_argument("--scale-policy", default="replicated")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="checked-in BENCH json to warn against "
                     "('' disables)")
@@ -555,6 +846,13 @@ if __name__ == "__main__":
         "machine-dependent)",
     )
     args = ap.parse_args()
+    if args.trendline_worker is not None:
+        _trendline_worker(
+            args.trendline_worker, args.trendline_requests,
+            args.trendline_keys, args.repeats, args.daemon_intervals[0],
+            args.trendline_policy,
+        )
+        raise SystemExit(0)
     main(
         num_requests=args.num_requests,
         repeats=args.repeats,
@@ -566,7 +864,17 @@ if __name__ == "__main__":
         telemetry_modes={
             "on": (True,), "off": (False,), "both": (True, False)
         }[args.telemetry],
+        trace_modes=tuple(args.trace_modes),
         acceptance=args.acceptance,
         baseline=args.baseline or None,
         fail_on_regression=args.fail_on_regression,
+        trendline=args.trendline,
+        trendline_devices=tuple(args.trendline_devices),
+        trendline_requests=args.trendline_requests,
+        trendline_keys=args.trendline_keys,
+        trendline_policy=args.trendline_policy,
+        scale_acceptance=args.scale_acceptance,
+        scale_requests=args.scale_requests,
+        scale_keys=args.scale_keys,
+        scale_policy=args.scale_policy,
     )

@@ -33,6 +33,7 @@ f32 op sequence determines bits, and the seed goldens pin bits).
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import Array
 
@@ -200,12 +201,24 @@ def load_factor_ref(
     num_nodes: int,
     capacity_ms,
     rho_max,
+    axis_name: str | None = None,
 ) -> Array:
     """Per-node load factor ``rho [N]``: the chunk's demand folded per
-    serving node over capacity, clamped below the stability bound."""
+    serving node over capacity, clamped below the stability bound.
+
+    ``axis_name`` follows the ``publish_and_fill`` convention: ``None`` (the
+    default) is the single-shard program, bit-exact with the goldens; under
+    a key-sharded ``shard_map`` each shard folds only its own (valid-masked)
+    requests and one ``psum`` assembles the global per-node demand before
+    the clamp — the load factor is a *cluster* property, not a shard one.
+    The psum re-associates the f32 fold, so sharded contention runs are
+    allclose (not bit-exact) to single-device ones.
+    """
     fold = jnp.zeros((num_nodes,), jnp.float32).at[serving].add(
         jnp.where(valid, demand, 0.0)
     )
+    if axis_name is not None:
+        fold = jax.lax.psum(fold, axis_name)
     return jnp.minimum(fold / capacity_ms, rho_max)
 
 
@@ -230,6 +243,7 @@ def contention_extra_ms_ref(
     serve_bytes_per_ms,
     capacity_ms,
     rho_max,
+    axis_name: str | None = None,
 ) -> tuple[Array, Array]:
     """The whole contention pre-pass: ``(extra_ms [B] f32, rho [N] f32)``.
 
@@ -237,6 +251,12 @@ def contention_extra_ms_ref(
     path, and the Pallas backend (which feeds ``extra_ms`` into the fused
     kernel) call exactly this composition, so contention cannot drift
     between backends any more than the base latency model can.
+
+    Under a key-sharded engine (``axis_name`` set) the caller passes
+    shard-local ``hosts``/``obj_bytes``, shard-local key ids, and a validity
+    mask restricted to the shard's own requests; the demand fold psums
+    across shards (see :func:`load_factor_ref`) so ``rho`` — and therefore
+    each shard's ``extra_ms`` — reflects the whole cluster's load.
     """
     if read_mode == "ideal":
         serving = nodes.astype(jnp.int32)
@@ -251,6 +271,7 @@ def contention_extra_ms_ref(
     rho = load_factor_ref(
         serving, demand, valid,
         num_nodes=rtt.shape[0], capacity_ms=capacity_ms, rho_max=rho_max,
+        axis_name=axis_name,
     )
     return contention_wait_ref(demand, rho, serving), rho
 

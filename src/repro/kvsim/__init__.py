@@ -38,9 +38,12 @@ from repro.core.policy import (
 
 from repro.kvsim.workload import (
     Trace,
+    TraceChunk,
     WorkloadConfig,
     diurnal_workload,
+    generate_key_state,
     generate_trace,
+    generate_trace_chunk,
     wan5_workload,
 )
 from repro.kvsim.cluster import (
@@ -56,6 +59,8 @@ from repro.kvsim.cluster import (
 )
 from repro.kvsim.simulate import (
     REPLAY_BACKENDS,
+    TRACE_MODES,
+    ShardSpec,
     SimResult,
     confidence_interval_99,
     run_experiment,
@@ -71,10 +76,15 @@ from repro.kvsim.telemetry import (
 
 __all__ = [
     "Trace",
+    "TraceChunk",
     "WorkloadConfig",
     "generate_trace",
+    "generate_trace_chunk",
+    "generate_key_state",
     "wan5_workload",
     "diurnal_workload",
+    "TRACE_MODES",
+    "ShardSpec",
     "ClusterConfig",
     "Scenario",
     "ServiceConfig",

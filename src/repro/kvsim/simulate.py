@@ -140,12 +140,22 @@ from repro.kvsim.telemetry import (
     leaves_quantile,
     merge_leaves,
     normalize_telemetry,
+    psum_leaves,
     trace_histogram,
 )
-from repro.kvsim.workload import Trace, WorkloadConfig, generate_trace
+from repro.kvsim.workload import (
+    Trace,
+    WorkloadConfig,
+    _request_window,
+    _workload_keys,
+    generate_key_state,
+    generate_trace,
+)
 
 __all__ = [
     "REPLAY_BACKENDS",
+    "TRACE_MODES",
+    "ShardSpec",
     "SimResult",
     "SimTrace",
     "TelemetryConfig",
@@ -154,6 +164,31 @@ __all__ = [
     "run_experiment",
     "confidence_interval_99",
 ]
+
+TRACE_MODES = ("materialized", "streamed")
+
+
+class ShardSpec(NamedTuple):
+    """Keyspace sharding of the fused engine, following the
+    ``publish_and_fill`` convention from ``core/repartition.py``:
+    ``axis_name=None`` (the default) is the degenerate single-shard program
+    — no collectives, no request masking, op-for-op the unsharded engine,
+    so every seed golden holds bit-exact. With an axis name the engine runs
+    inside a ``shard_map`` over a ``Mesh`` whose ``axis_name`` dimension
+    splits the key axis into ``num_shards`` contiguous blocks: per-key
+    state (metadata counts, replica map, sizes, policy EMA/decay state)
+    lives shard-local, each shard replays only its own keys' requests, and
+    ``psum`` assembles the global aggregates (busy fold, histograms, move
+    counters, occupancy, the contention demand fold) exactly where the
+    daemon needs cluster-wide values.
+    """
+
+    axis_name: str | None = None
+    num_shards: int = 1
+
+    @property
+    def active(self) -> bool:
+        return self.axis_name is not None and self.num_shards > 1
 
 
 class SimResult(NamedTuple):
@@ -303,7 +338,8 @@ def _contention_kwargs(
 # ---------------------------------------------------------------------------
 
 _SIM_STATICS = (
-    "cluster", "policy", "daemon_interval", "telemetry", "replay_backend"
+    "cluster", "policy", "daemon_interval", "telemetry", "replay_backend",
+    "trace_mode", "workload", "shard",
 )
 
 
@@ -316,18 +352,22 @@ def _check_replay_backend(caller: str, replay_backend: str) -> None:
 
 
 def _simulate(
-    keys: Array,  # [R]
-    nodes: Array,  # [R]
-    is_read: Array,  # [R]
-    natural: Array,  # [K]
+    keys: Array | None,  # [R] (None in streamed mode)
+    nodes: Array | None,  # [R]
+    is_read: Array | None,  # [R]
+    natural: Array,  # [K] (always the FULL key axis; shards slice locally)
     object_bytes: Array,  # [K]
     params: dict,  # the policy's dynamic hyperparameters (traced)
+    seed: Array | None = None,  # traced trace seed (streamed mode only)
     *,
     cluster: ClusterConfig,
     policy,  # static key from split_policy (hashable jit static)
     daemon_interval: int,
     telemetry: TelemetryConfig | None = None,
     replay_backend: str = "jax",
+    trace_mode: str = "materialized",
+    workload: WorkloadConfig | None = None,
+    shard: ShardSpec | None = None,
 ):
     """Whole-scenario simulation as a single fixed-shape scan program.
 
@@ -342,19 +382,57 @@ def _simulate(
     and therefore every aggregate result — is untouched, which is what
     keeps the telemetry-off AND telemetry-on aggregates bit-exact with the
     pre-telemetry engine (pinned by tests/test_telemetry.py).
+
+    ``trace_mode="streamed"`` drops the materialised ``[R]`` trace buffers
+    entirely: each scan iteration regenerates its own chunk of requests
+    in-scan from ``seed`` via ``workload._request_window`` — bit-identical
+    to the slices the materialised path would have consumed (the sliced
+    threefry emulation in ``workload.py``), so every aggregate and
+    histogram matches the materialised engine exactly. Peak live memory
+    falls from O(R + K) to O(daemon_interval + K).
+
+    ``shard`` (a :class:`ShardSpec` static) runs the body per key-shard
+    inside a caller-supplied ``shard_map`` — see the class docstring. The
+    degenerate default compiles the identical unsharded program. Sharded
+    f32 reductions (busy, latency sums, occupancy, contention folds)
+    re-associate across shards and are allclose to single-device values;
+    histogram counts and hit/read/move counters are integer sums and stay
+    bit-exact.
     """
-    r = keys.shape[0]
+    shard = shard or ShardSpec()
+    if trace_mode == "streamed":
+        if workload is None:
+            raise ValueError("trace_mode='streamed' requires workload=")
+        r = workload.num_requests
+        stream_keys = _workload_keys(seed)
+    else:
+        r = keys.shape[0]
+        stream_keys = None
     num_keys = natural.shape[0]
     n = cluster.num_nodes
     rtt = cluster.rtt_matrix()
     obj = jnp.asarray(object_bytes, jnp.float32)
+    if shard.active:
+        # Contiguous block sharding of the key axis: shard i owns global
+        # keys [i*kps, (i+1)*kps). natural/obj arrive replicated (requests
+        # reference any key when generating/localising the trace); the
+        # per-key STATE below is built from the local slice only.
+        kps = num_keys // shard.num_shards
+        shard_idx = jax.lax.axis_index(shard.axis_name)
+        shard_base = shard_idx * kps
+        nat_local = jax.lax.dynamic_slice(natural, (shard_base,), (kps,))
+        obj_local = jax.lax.dynamic_slice(obj, (shard_base,), (kps,))
+        local_keys = kps
+    else:
+        kps = num_keys
+        nat_local, obj_local, local_keys = natural, obj, num_keys
     # Host-side static: at the default infinite budget the projection stage
     # is skipped entirely (capacity=None), keeping Algorithm 3 bit-exact.
     capacity = (
         cluster.capacity_vector() if cluster.has_finite_capacity else None
     )
     ctx = PolicyContext(
-        rtt=rtt, object_bytes=obj, capacity_bytes=capacity, params=params
+        rtt=rtt, object_bytes=obj_local, capacity_bytes=capacity, params=params
     )
     # Host-side static: with no enabled ServiceConfig the contention
     # pre-pass is absent from the compiled program entirely — the exact
@@ -364,25 +442,32 @@ def _simulate(
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
 
-    def padded(x: Array) -> Array:
-        if pad:
-            x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
-        return x
+    if trace_mode == "streamed":
+        # No materialised trace: the scan consumes only chunk indices and
+        # each body iteration regenerates its own request window in-scan.
+        pk = pn = pr = pv = None
+        chunked = None
+        xs = jnp.arange(num_chunks, dtype=jnp.int32)
+    else:
+        def padded(x: Array) -> Array:
+            if pad:
+                x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+            return x
 
-    pk, pn, pr = padded(keys), padded(nodes), padded(is_read)
-    pv = jnp.arange(num_chunks * daemon_interval) < r
-    chunked = lambda x: x.reshape(num_chunks, daemon_interval)
-    xs = (
-        jnp.arange(num_chunks, dtype=jnp.int32),
-        chunked(pk),
-        chunked(pn),
-        chunked(pr),
-        chunked(pv),
-    )
+        pk, pn, pr = padded(keys), padded(nodes), padded(is_read)
+        pv = jnp.arange(num_chunks * daemon_interval) < r
+        chunked = lambda x: x.reshape(num_chunks, daemon_interval)
+        xs = (
+            jnp.arange(num_chunks, dtype=jnp.int32),
+            chunked(pk),
+            chunked(pn),
+            chunked(pr),
+            chunked(pv),
+        )
 
     store = _seed_store(
-        _initial_hosts(natural, num_keys, n, policy.initial_placement),
-        num_keys,
+        _initial_hosts(nat_local, local_keys, n, policy.initial_placement),
+        local_keys,
         n,
     )
     pstate = policy.init(store, ctx)
@@ -390,11 +475,20 @@ def _simulate(
     # The O(K·N) occupancy sample is a loop constant for inactive policies
     # (a static map never changes) — hoisted out of the scan body; active
     # policies re-sample it per chunk on the frozen-at-chunk-start map.
-    occ0 = _node_occupancy(store.hosts, obj)
+    # Sharded: occupancy is a cluster property, psum'd at the sample point
+    # so the running peak is taken over the GLOBAL per-node vector.
+    occ0 = _node_occupancy(store.hosts, obj_local)
+    if shard.active:
+        occ0 = jax.lax.psum(occ0, shard.axis_name)
     # Whole-trace replay materialises O(R·N) planes (one-hot busy fold,
     # replica/RTT rows); past this element budget (~256 MB of f32) the
-    # per-chunk scan's bounded O(B·N) footprint is the safer trade.
-    static_fast = r * n <= 64 * 1024 * 1024
+    # per-chunk scan's bounded O(B·N) footprint is the safer trade. It
+    # needs the materialised trace and an unsharded map by construction.
+    static_fast = (
+        r * n <= 64 * 1024 * 1024
+        and trace_mode == "materialized"
+        and not shard.active
+    )
     if not policy.is_active and replay_backend == "jax" and static_fast:
         # Static fast path: a frozen map makes the ENTIRE request path
         # loop-invariant, so the scan collapses into one vectorized pass
@@ -536,14 +630,37 @@ def _simulate(
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
             cap_evic, peak,
         ) = carry
-        c, ck, cn, cr, cv = x
+        if trace_mode == "streamed":
+            # In-scan trace generation: this chunk's request window, drawn
+            # at its global positions — bit-identical to the slices the
+            # materialised path reshapes out of the full trace. The final
+            # chunk's positions past R are garbage masked by cv.
+            c = x
+            pos = c * daemon_interval + jnp.arange(
+                daemon_interval, dtype=jnp.int32
+            )
+            cv = pos < r
+            ck, cn, cr = _request_window(workload, stream_keys, pos, natural)
+        else:
+            c, ck, cn, cr, cv = x
+        if shard.active:
+            # Each shard replays only requests for ITS contiguous key
+            # block: localise the key id and fold foreign rows into the
+            # validity mask (same masking machinery the trace padding
+            # uses, so foreign rows cost zero everywhere downstream).
+            mine = (ck // kps) == shard_idx
+            ck = jnp.where(mine, ck - shard_base, 0)
+            cv = cv & mine
         rho = None
         if contention is not None:
             # Queueing pre-pass on the chunk's frozen map: per-request
             # contention wait + per-node load factor (the canonical
-            # composition both replay backends consume).
+            # composition both replay backends consume). Sharded, each
+            # shard folds its own requests' demand and the psum inside
+            # load_factor_ref assembles the cluster-wide rho.
             extra, rho = contention_extra_ms_ref(
-                store.hosts, ck, cn, cr, cv, rtt, obj, **contention
+                store.hosts, ck, cn, cr, cv, rtt, obj_local, **contention,
+                axis_name=shard.axis_name if shard.active else None,
             )
         if replay_backend == "pallas":
             # The fused one-pass kernel: gather, latency, hit flags, busy
@@ -587,12 +704,19 @@ def _simulate(
         # frozen-at-chunk-start map the requests see (the initial placement
         # seeds the peak); for inactive policies the sample is the hoisted
         # loop constant — numerically identical, O(K·N) cheaper per chunk.
-        occ = _node_occupancy(store.hosts, obj) if policy.is_active else occ0
+        if policy.is_active:
+            occ = _node_occupancy(store.hosts, obj_local)
+            if shard.active:
+                occ = jax.lax.psum(occ, shard.axis_name)
+        else:
+            occ = occ0
         peak = jnp.maximum(peak, occ)
         zero = jnp.float32(0.0)
         chunk_moves = (zero, zero, zero, zero)
         if policy.is_active:
-            # Algorithm 1 bookkeeping: log usage heuristics per request.
+            # Algorithm 1 bookkeeping: log usage heuristics per request
+            # (sharded: only the shard's own rows fold into its local
+            # store — foreign rows are already masked out of cv).
             store = record_accesses(store, ck, cn, now=c, valid=cv)
             stats, pstate, store = policy_masked_step(
                 policy, pstate, store, c, (c % policy.period) == 0, ctx
@@ -641,6 +765,19 @@ def _simulate(
     (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), ys = (
         jax.lax.scan(body, init, xs)
     )
+    if shard.active:
+        # One collective round after the scan assembles the global
+        # aggregates from the per-shard partial sums (peak and the
+        # telemetry occupancy/load_factor leaves are already global — they
+        # were psum'd at the sample point inside the body).
+        (busy, lat_sum, hits, reads, repl, drop, evic, cap_evic) = (
+            jax.lax.psum(
+                (busy, lat_sum, hits, reads, repl, drop, evic, cap_evic),
+                shard.axis_name,
+            )
+        )
+        if ys is not None:
+            ys = psum_leaves(ys, shard.axis_name)
     makespan_ms = jnp.max(busy)
     return (
         r / (makespan_ms / 1000.0),
@@ -706,6 +843,90 @@ def _traces_for_seeds(cfg: WorkloadConfig, seeds: Array) -> Trace:
 # is deterministic, so the jitted trace is bit-identical).
 _generate_trace_jit = partial(jax.jit, static_argnames=("cfg",))(generate_trace)
 
+# Per-key state only (natural node + object sizes), for the streamed path:
+# O(K) instead of the O(R) trace, same fold_in draws → identical bits.
+_generate_key_state_jit = partial(jax.jit, static_argnames=("cfg",))(
+    generate_key_state
+)
+
+
+@lru_cache(maxsize=None)
+def _sharded_simulate_jit(num_shards: int):
+    """The key-sharded engine: ``_simulate`` wrapped in ``shard_map`` over a
+    1-D ``Mesh`` with a ``keys`` axis (grown from the ``publish_and_fill``
+    2-rank seam in ``core/repartition.py``).
+
+    Every INPUT is replicated (``in_specs=P()``): the O(R) trace (or the
+    streamed seed) and the O(K) natural/object_bytes vectors are cheap and
+    any shard's requests may reference any key; what shards is the O(K·N)
+    per-key STATE built inside ``_simulate`` from each shard's
+    ``dynamic_slice``. Outputs are psum-assembled global aggregates, so
+    ``out_specs=P()`` (replicated) as well. ``check_rep=False`` because the
+    body mixes shard-local intermediates with psum'd results inside a scan,
+    which the replication checker cannot prove."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    devices = jax.devices()
+    if len(devices) < num_shards:
+        raise ValueError(
+            f"num_shards={num_shards} needs {num_shards} devices, have "
+            f"{len(devices)} (CPU: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={num_shards} before "
+            "importing jax)"
+        )
+    mesh = Mesh(np.array(devices[:num_shards]), ("keys",))
+    replicated = PartitionSpec()
+
+    def wrapped(keys, nodes, is_read, natural, object_bytes, params, seed,
+                **statics):
+        fn = shard_map(
+            lambda a, b, c, d, e, f, g: _simulate(a, b, c, d, e, f, g,
+                                                  **statics),
+            mesh=mesh,
+            in_specs=(replicated,) * 7,
+            out_specs=replicated,
+            check_rep=False,
+        )
+        return fn(keys, nodes, is_read, natural, object_bytes, params, seed)
+
+    return partial(jax.jit, static_argnames=_SIM_STATICS)(wrapped)
+
+
+def _check_scale_out(
+    caller: str,
+    workload: WorkloadConfig,
+    cluster: ClusterConfig,
+    static,
+    trace_mode: str,
+    num_shards: int,
+) -> None:
+    """Host-side validation for the scale-out engine options."""
+    if trace_mode not in TRACE_MODES:
+        raise ValueError(
+            f"{caller}: trace_mode={trace_mode!r}; expected one of "
+            f"{TRACE_MODES}"
+        )
+    if num_shards < 1:
+        raise ValueError(f"{caller}: num_shards={num_shards} must be >= 1")
+    if num_shards == 1:
+        return
+    if workload.num_keys % num_shards:
+        raise ValueError(
+            f"{caller}: num_keys={workload.num_keys} must be divisible by "
+            f"num_shards={num_shards} (contiguous block sharding)"
+        )
+    if getattr(type(static), "name", "") == "topk":
+        raise ValueError(
+            f"{caller}: the topk policy ranks keys with a GLOBAL argsort "
+            "and is not supported sharded (num_shards > 1)"
+        )
+    if cluster.has_finite_capacity:
+        raise ValueError(
+            f"{caller}: finite capacity_bytes needs the global projection "
+            "sort and is not supported sharded (num_shards > 1)"
+        )
+
 
 def run_scenario(
     workload: WorkloadConfig,
@@ -716,6 +937,8 @@ def run_scenario(
     *,
     telemetry: TelemetryConfig | None = None,
     replay_backend: str = "jax",
+    trace_mode: str = "materialized",
+    num_shards: int = 1,
 ) -> SimResult | tuple[SimResult, SimTrace]:
     """Simulate one policy over one generated trace (fused scan engine).
 
@@ -740,23 +963,58 @@ def run_scenario(
     ``cluster.service=ServiceConfig(...)`` and every request pays the
     M/M/1-style wait on top of its RTT-model latency (see the module
     docstring §Queueing model).
+
+    trace_mode: ``"materialized"`` (default — generate the full ``[R]``
+        trace up front, the historical path) or ``"streamed"`` — regenerate
+        each chunk's requests *inside* the scan from the same fold_in
+        stream, bit-identical results with peak live memory
+        O(daemon_interval + K) instead of O(R + K).
+    num_shards: shard the key axis across this many devices via
+        ``shard_map`` (1 = the degenerate single-device program, compiled
+        identically to previous releases). Requires ``num_keys %
+        num_shards == 0`` and that many visible devices; the ``topk``
+        policy and finite ``capacity_bytes`` need global sorts and are
+        rejected sharded. Histogram counts and move counters stay
+        bit-exact; f32 reductions (busy, latency sums) re-associate across
+        shards and are allclose.
     """
     _check_replay_backend("run_scenario", replay_backend)
     static, params = _prepare(workload, cluster, "run_scenario", policy)
     telemetry = normalize_telemetry(telemetry)
-    trace = _generate_trace_jit(workload, seed)
-    leaves, telem = _simulate_jit()(
-        trace.keys,
-        trace.nodes,
-        trace.is_read,
-        trace.natural_node,
-        trace.object_bytes,
+    _check_scale_out(
+        "run_scenario", workload, cluster, static, trace_mode, num_shards
+    )
+    shard = ShardSpec("keys", num_shards) if num_shards > 1 else ShardSpec()
+    if trace_mode == "streamed":
+        keys = nodes = is_read = None
+        natural, object_bytes = _generate_key_state_jit(workload, seed)
+        stream_seed = jnp.asarray(seed, jnp.int32)
+        stream_workload = workload
+    else:
+        trace = _generate_trace_jit(workload, seed)
+        keys, nodes, is_read = trace.keys, trace.nodes, trace.is_read
+        natural, object_bytes = trace.natural_node, trace.object_bytes
+        stream_seed = None
+        stream_workload = None
+    engine = (
+        _sharded_simulate_jit(num_shards) if shard.active else _simulate_jit()
+    )
+    leaves, telem = engine(
+        keys,
+        nodes,
+        is_read,
+        natural,
+        object_bytes,
         params,
+        stream_seed,
         cluster=cluster,
         policy=static,
         daemon_interval=daemon_interval,
         telemetry=telemetry,
         replay_backend=replay_backend,
+        trace_mode=trace_mode,
+        workload=stream_workload,
+        shard=shard,
     )
     tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
     result = SimResult(

@@ -60,6 +60,7 @@ __all__ = [
     "chunk_histogram",
     "trace_histogram",
     "merge_leaves",
+    "psum_leaves",
     "build_trace",
     "leaves_quantile",
     "histogram_quantile",
@@ -226,6 +227,34 @@ def merge_leaves(leaves: TelemetryLeaves, axis: int = 0) -> TelemetryLeaves:
     return merged._replace(
         occupancy=merged.occupancy / n,
         load_factor=merged.load_factor / n,
+    )
+
+
+def psum_leaves(leaves: TelemetryLeaves, axis_name: str) -> TelemetryLeaves:
+    """Merge per-shard telemetry into global telemetry inside a key-sharded
+    ``shard_map`` program — the collective twin of :func:`merge_leaves`.
+
+    Every additive leaf (histograms, hit/read/latency/request counters,
+    daemon move counters) psums across the shard axis; histogram counts are
+    integer-valued f32 sums, so the psum is *exact* and sharded histograms
+    stay bit-identical to single-device ones (the merge is sum-associative
+    — the same property the seed-merge tests pin). ``occupancy`` and
+    ``load_factor`` pass through untouched: the engine already assembles
+    those as global values inside the scan body (occupancy is psum'd at the
+    sample point so the running *peak* is taken over the global vector;
+    the load factor's demand fold psums inside the contention pre-pass)."""
+    summed = jax.lax.psum(
+        (
+            leaves.hist, leaves.hits, leaves.reads, leaves.lat_sum,
+            leaves.count, leaves.adds, leaves.drops,
+            leaves.expiry_evictions, leaves.capacity_evictions,
+        ),
+        axis_name,
+    )
+    return leaves._replace(
+        hist=summed[0], hits=summed[1], reads=summed[2], lat_sum=summed[3],
+        count=summed[4], adds=summed[5], drops=summed[6],
+        expiry_evictions=summed[7], capacity_evictions=summed[8],
     )
 
 

@@ -28,6 +28,31 @@ Beyond the paper's 3-node testbed, two geo workload classes pair with the
 
 ``generate_trace`` is pure JAX and accepts a traced seed, so the simulator
 can ``vmap`` trace generation across CI iterations.
+
+Streamed trace generation (scale-out fabric)
+--------------------------------------------
+``generate_trace`` materialises the whole ``[R]`` trace — O(R) HBM that caps
+studies around ~1M requests. The streamed spelling splits the same PRNG
+stream positionally instead of temporally:
+
+  * :func:`generate_key_state` draws the per-key state (natural sources,
+    object sizes) — O(K), drawn once per run; bit-identical to the
+    corresponding ``Trace`` fields.
+  * :func:`generate_trace_chunk` draws any window of request positions
+    on demand — O(chunk) — and is **bit-identical to slicing the
+    materialised ``generate_trace`` output** at those positions.
+
+The equivalence works because jax's classic (non-partitionable) threefry
+scheme is counter-based: ``random_bits(key, 32, (n,))`` encrypts the
+counters ``0..n-1`` laid out as two half-length lanes (odd ``n`` pads one
+zero counter). ``_sliced_bits`` reconstructs, for an arbitrary *position*
+vector, exactly the (counter, lane) pair the full-length call would have
+used and binds the threefry primitive on those counters directly — so any
+slice of the stream costs O(slice), not O(n). ``_sliced_randint`` /
+``_sliced_bernoulli`` then replicate ``jax.random``'s bit-to-value
+transforms op-for-op on top. Positions ``>= num_requests`` produce
+well-typed garbage (in-range keys/nodes) that callers must mask — the
+simulation engine's padded-row ``valid`` mask already does.
 """
 
 from __future__ import annotations
@@ -36,12 +61,17 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import Array
+from jax._src.prng import threefry2x32_p
 
 __all__ = [
     "WorkloadConfig",
     "Trace",
+    "TraceChunk",
     "generate_trace",
+    "generate_key_state",
+    "generate_trace_chunk",
     "wan5_workload",
     "diurnal_workload",
 ]
@@ -88,15 +118,60 @@ class Trace(NamedTuple):
     object_bytes: Array  # [K] f32 per-key payload size
 
 
-def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
+class TraceChunk(NamedTuple):
+    """The per-request fields of one streamed window (per-key state lives in
+    :func:`generate_key_state`; positions ``>= num_requests`` are garbage the
+    caller must mask)."""
+
+    keys: Array  # [B] int32
+    nodes: Array  # [B] int32
+    is_read: Array  # [B] bool
+
+
+def _check_region_weights(cfg: WorkloadConfig) -> None:
     if cfg.region_weights is not None and len(cfg.region_weights) != cfg.num_nodes:
         raise ValueError(
             f"region_weights has {len(cfg.region_weights)} entries "
             f"for {cfg.num_nodes} nodes"
         )
-    k_hot, k_key, k_node, k_rw, k_nat, k_other = jax.random.split(
-        jax.random.PRNGKey(seed), 6
-    )
+
+
+def _workload_keys(seed: int | Array) -> tuple[Array, ...]:
+    """The six per-field subkeys every trace spelling shares — splitting is
+    O(1), so the streamed path re-derives them rather than threading key
+    state around."""
+    return tuple(jax.random.split(jax.random.PRNGKey(seed), 6))
+
+
+def _natural_nodes(cfg: WorkloadConfig, k_nat: Array) -> Array:
+    """Per-key natural request source ``[K] i32`` (the geo ground truth)."""
+    k, n = cfg.num_keys, cfg.num_nodes
+    if cfg.region_weights is not None:
+        w = jnp.asarray(cfg.region_weights, jnp.float32)
+        return jax.random.choice(k_nat, n, (k,), p=w / jnp.sum(w)).astype(
+            jnp.int32
+        )
+    return jax.random.randint(k_nat, (k,), 0, n).astype(jnp.int32)
+
+
+def _key_sizes(cfg: WorkloadConfig, k_other: Array) -> Array:
+    """Per-key payload sizes ``[K] f32`` (lognormal when sigma > 0)."""
+    k = cfg.num_keys
+    if cfg.object_bytes_sigma > 0:
+        # fold_in (not an extra split) so keys/nodes/reads are byte-identical
+        # to traces generated before sizes existed (pinned seed goldens).
+        k_size = jax.random.fold_in(k_other, 2)
+        sizes = cfg.object_bytes * jnp.exp(
+            cfg.object_bytes_sigma * jax.random.normal(k_size, (k,))
+        )
+    else:
+        sizes = jnp.full((k,), cfg.object_bytes, jnp.float32)
+    return sizes.astype(jnp.float32)
+
+
+def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
+    _check_region_weights(cfg)
+    k_hot, k_key, k_node, k_rw, k_nat, k_other = _workload_keys(seed)
     r, k, n = cfg.num_requests, cfg.num_keys, cfg.num_nodes
 
     if cfg.skewed:
@@ -112,13 +187,7 @@ def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
     else:
         keys = jax.random.randint(k_key, (r,), 0, k).astype(jnp.int32)
 
-    if cfg.region_weights is not None:
-        w = jnp.asarray(cfg.region_weights, jnp.float32)
-        natural = jax.random.choice(k_nat, n, (k,), p=w / jnp.sum(w)).astype(
-            jnp.int32
-        )
-    else:
-        natural = jax.random.randint(k_nat, (k,), 0, n).astype(jnp.int32)
+    natural = _natural_nodes(cfg, k_nat)
     stay = jax.random.bernoulli(k_node, cfg.affinity, (r,))
     # A non-natural request lands uniformly on one of the other n-1 nodes.
     shift = jax.random.randint(k_other, (r,), 1, n)
@@ -131,24 +200,150 @@ def generate_trace(cfg: WorkloadConfig, seed: int | Array = 0) -> Trace:
         phase = (jnp.arange(r, dtype=jnp.int32) * cfg.diurnal_shifts) // r
         nodes = ((nodes + phase) % n).astype(jnp.int32)
 
-    if cfg.object_bytes_sigma > 0:
-        # fold_in (not an extra split) so keys/nodes/reads are byte-identical
-        # to traces generated before sizes existed (pinned seed goldens).
-        k_size = jax.random.fold_in(k_other, 2)
-        sizes = cfg.object_bytes * jnp.exp(
-            cfg.object_bytes_sigma * jax.random.normal(k_size, (k,))
-        )
-    else:
-        sizes = jnp.full((k,), cfg.object_bytes, jnp.float32)
-
+    sizes = _key_sizes(cfg, k_other)
     is_read = jax.random.bernoulli(k_rw, cfg.read_fraction, (r,))
     return Trace(
         keys=keys,
         nodes=nodes,
         is_read=is_read,
         natural_node=natural,
-        object_bytes=sizes.astype(jnp.float32),
+        object_bytes=sizes,
     )
+
+
+# ---------------------------------------------------------------------------
+# Streamed trace generation: positional slices of the identical PRNG stream.
+# ---------------------------------------------------------------------------
+
+
+def _sliced_bits(key: Array, pos: Array, total: int) -> Array:
+    """``jax.random.bits(key, (total,), uint32)[pos]`` in O(|pos|).
+
+    jax's classic threefry layout for a length-``total`` draw: the counters
+    ``iota(total)`` (odd sizes pad one zero) are split into two half-length
+    lanes of ``h = (total+1)//2``, and block ``j`` encrypts the counter pair
+    ``(j, j+h)``. Output position ``p < h`` is lane 0 of block ``p``;
+    ``p >= h`` is lane 1 of block ``p - h``. We bind the threefry primitive
+    on exactly those counters, so any position subset reproduces the full
+    draw's bits without materialising it. Positions ``>= total`` fall into
+    counter space the full draw never used — callers mask those rows.
+    """
+    h = (total + 1) // 2
+    p = pos.astype(jnp.uint32)
+    is_lo = pos < h
+    j = jnp.where(is_lo, pos, pos - h).astype(jnp.uint32)
+    # Lane-0 blocks pair with counter j+h — except the final odd block,
+    # whose partner is the zero pad.
+    c1 = jnp.where(is_lo, jnp.where(pos + h < total, p + h, 0), p)
+    k0 = jnp.broadcast_to(key[0], pos.shape).astype(jnp.uint32)
+    k1 = jnp.broadcast_to(key[1], pos.shape).astype(jnp.uint32)
+    out_lo, out_hi = threefry2x32_p.bind(k0, k1, j, c1)
+    return jnp.where(is_lo, out_lo, out_hi)
+
+
+def _sliced_randint(
+    key: Array, pos: Array, total: int, minval: int, maxval: int
+) -> Array:
+    """``jax.random.randint(key, (total,), minval, maxval)[pos]`` — the
+    double-draw modular-reduction transform of ``jax._src.random._randint``
+    replicated op-for-op on sliced bits (int32, static python bounds)."""
+    k1, k2 = jax.random.split(key)
+    higher = _sliced_bits(k1, pos, total)
+    lower = _sliced_bits(k2, pos, total)
+    span_i = maxval - minval if maxval > minval else 1
+    span = np.uint32(span_i)
+    multiplier = np.uint32(((2**16 % span_i) ** 2) % span_i)
+    offset = ((higher % span) * multiplier + (lower % span)) % span
+    return (minval + offset.astype(jnp.int32)).astype(jnp.int32)
+
+
+def _sliced_uniform(key: Array, pos: Array, total: int) -> Array:
+    """``jax.random.uniform(key, (total,))[pos]``: randomise the mantissa at
+    exponent 1, shift to [0, 1) — bit-for-bit the ``_uniform`` transform."""
+    bits = _sliced_bits(key, pos, total)
+    float_bits = (bits >> np.uint32(9)) | np.float32(1.0).view(np.uint32)
+    floats = jax.lax.bitcast_convert_type(float_bits, jnp.float32) - np.float32(1.0)
+    return jax.lax.max(
+        np.float32(0.0), floats * np.float32(1.0) + np.float32(0.0)
+    )
+
+
+def _sliced_bernoulli(key: Array, p, pos: Array, total: int) -> Array:
+    """``jax.random.bernoulli(key, p, (total,))[pos]``."""
+    return _sliced_uniform(key, pos, total) < jnp.float32(p)
+
+
+def generate_key_state(
+    cfg: WorkloadConfig, seed: int | Array = 0
+) -> tuple[Array, Array]:
+    """The per-key state of a trace — ``(natural_node [K] i32,
+    object_bytes [K] f32)`` — bit-identical to the corresponding
+    :func:`generate_trace` fields, without drawing any request. O(K), drawn
+    once per streamed run."""
+    _check_region_weights(cfg)
+    _, _, _, _, k_nat, k_other = _workload_keys(seed)
+    return _natural_nodes(cfg, k_nat), _key_sizes(cfg, k_other)
+
+
+def _request_window(
+    cfg: WorkloadConfig, keys6: tuple[Array, ...], pos: Array, natural: Array
+) -> TraceChunk:
+    """Per-request fields at arbitrary positions ``pos`` — the streamed
+    engine's in-scan spelling (``keys6`` from :func:`_workload_keys`,
+    ``natural`` the full ``[K]`` map from :func:`generate_key_state`)."""
+    k_hot, k_key, k_node, k_rw, _, k_other = keys6
+    r, k, n = cfg.num_requests, cfg.num_keys, cfg.num_nodes
+
+    if cfg.skewed:
+        n_hot = max(1, int(k * cfg.hot_fraction))
+        pick_hot = _sliced_bernoulli(k_hot, cfg.hot_traffic, pos, r)
+        hot_ids = _sliced_randint(k_key, pos, r, 0, n_hot)
+        cold_ids = _sliced_randint(
+            jax.random.fold_in(k_key, 1), pos, r, n_hot, k
+        )
+        keys = jnp.where(pick_hot, hot_ids, cold_ids).astype(jnp.int32)
+    else:
+        keys = _sliced_randint(k_key, pos, r, 0, k).astype(jnp.int32)
+
+    stay = _sliced_bernoulli(k_node, cfg.affinity, pos, r)
+    shift = _sliced_randint(k_other, pos, r, 1, n)
+    nat_of_key = natural[keys]
+    nodes = jnp.where(stay, nat_of_key, (nat_of_key + shift) % n).astype(jnp.int32)
+
+    if cfg.diurnal_shifts > 0:
+        phase = (pos.astype(jnp.int32) * cfg.diurnal_shifts) // r
+        nodes = ((nodes + phase) % n).astype(jnp.int32)
+
+    is_read = _sliced_bernoulli(k_rw, cfg.read_fraction, pos, r)
+    return TraceChunk(keys=keys, nodes=nodes, is_read=is_read)
+
+
+def generate_trace_chunk(
+    cfg: WorkloadConfig,
+    seed: int | Array,
+    chunk_idx: int | Array,
+    chunk_size: int,
+    natural: Array | None = None,
+) -> TraceChunk:
+    """Request positions ``[chunk_idx*chunk_size, (chunk_idx+1)*chunk_size)``
+    of the trace ``generate_trace(cfg, seed)`` would materialise —
+    **bit-identical to slicing its output** (same ``fold_in`` stream), in
+    O(chunk_size) memory.
+
+    ``chunk_idx`` may be traced (the engine calls this inside ``lax.scan``).
+    ``natural`` is the full ``[K]`` natural-source map from
+    :func:`generate_key_state`; pass it to amortise the O(K) per-key draw
+    across chunks (recomputed from ``seed`` when ``None``). Rows whose
+    position is ``>= cfg.num_requests`` (a final chunk that overruns the
+    trace) carry in-range garbage the caller must mask.
+    """
+    _check_region_weights(cfg)
+    keys6 = _workload_keys(seed)
+    if natural is None:
+        natural = _natural_nodes(cfg, keys6[4])
+    start = jnp.asarray(chunk_idx, jnp.int32) * chunk_size
+    pos = start + jnp.arange(chunk_size, dtype=jnp.int32)
+    return _request_window(cfg, keys6, pos, natural)
 
 
 def wan5_workload(**kwargs) -> WorkloadConfig:

@@ -1,12 +1,8 @@
 """Property tests for the repartition execution layer (core/repartition.py):
 `plan_moves` schedules are unique / capacity-bounded / hottest-consistent,
 and `publish_and_fill` with ``axis_name=None`` matches the real ``shard_map``
-collective path on a 2-rank CPU mesh (run in a subprocess, following the
-repo convention that the main pytest process stays single-device)."""
-
-import os
-import subprocess
-import sys
+collective path on a 2-rank CPU mesh (via the ``run_multi_rank`` conftest
+fixture — a subprocess, so the main pytest process stays single-device)."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +10,6 @@ import pytest
 
 from repro.core.placement import PlacementPlan
 from repro.core.repartition import create_cache, plan_moves, publish_and_fill
-
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def random_plan(rng, k, n):
@@ -114,8 +108,6 @@ def test_publish_and_fill_fills_desired_slots():
 
 
 SHARD_MAP_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 from functools import partial
 import jax, jax.numpy as jnp, numpy as np
 from jax.experimental.shard_map import shard_map
@@ -171,11 +163,6 @@ print("SHARD_MAP_EQUIVALENCE_OK")
 """
 
 
-def test_publish_and_fill_matches_shard_map_two_ranks():
-    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
-    proc = subprocess.run(
-        [sys.executable, "-c", SHARD_MAP_SCRIPT],
-        capture_output=True, text=True, env=env, timeout=300,
-    )
-    assert proc.returncode == 0, proc.stdout + proc.stderr
-    assert "SHARD_MAP_EQUIVALENCE_OK" in proc.stdout
+def test_publish_and_fill_matches_shard_map_two_ranks(run_multi_rank):
+    out = run_multi_rank(SHARD_MAP_SCRIPT, num_devices=2, timeout=300)
+    assert "SHARD_MAP_EQUIVALENCE_OK" in out

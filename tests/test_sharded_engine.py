@@ -1,0 +1,107 @@
+"""Key-sharded engine ⇄ single-device equivalence (the PR-7 acceptance
+scenario): a 2-virtual-device ``shard_map`` run of the wan5/skewed scenario
+must be bit-exact on histogram counts and move counters and allclose on f32
+reductions (busy, latency sums, occupancy — they re-associate across
+shards), for both replay backends × both trace modes, with the queueing
+contention model enabled (its demand fold is psum'd inside
+``load_factor_ref``).
+
+Multi-rank runs use the ``run_multi_rank`` conftest fixture (fresh
+subprocess with forced virtual devices); the validation surface
+(divisibility, topk/capacity rejection, device count) is tested in-process
+because it raises before any mesh is touched.
+"""
+
+import pytest
+
+from repro.kvsim import (
+    RedynisPolicy,
+    TopKPolicy,
+    run_scenario,
+    wan5_cluster,
+    wan5_workload,
+)
+
+SHARDED_EQUIVALENCE_SCRIPT = r"""
+import numpy as np
+from repro.kvsim import (run_scenario, wan5_workload, wan5_cluster,
+                         RedynisPolicy, StaticPolicy, TelemetryConfig,
+                         ServiceConfig)
+
+wl = wan5_workload(num_requests=20000, num_keys=500)
+cl = wan5_cluster()._replace(service=ServiceConfig(enabled=True))
+CASES = [
+    (StaticPolicy(mode='local'), 'jax', 'materialized'),
+    (StaticPolicy(mode='local'), 'pallas', 'streamed'),
+    (RedynisPolicy(), 'jax', 'materialized'),
+    (RedynisPolicy(), 'jax', 'streamed'),
+    (RedynisPolicy(), 'pallas', 'materialized'),
+    (RedynisPolicy(), 'pallas', 'streamed'),
+]
+for pol, backend, trace_mode in CASES:
+    kw = dict(seed=3, daemon_interval=1000, telemetry=TelemetryConfig(),
+              replay_backend=backend, trace_mode=trace_mode)
+    r1, t1 = run_scenario(wl, cl, pol, **kw)
+    r2, t2 = run_scenario(wl, cl, pol, num_shards=NUM_SHARDS, **kw)
+    # Integer-count surfaces: bit-exact under psum.
+    np.testing.assert_array_equal(t1.hist_group, t2.hist_group)
+    assert r1.hit_rate == r2.hit_rate
+    assert r1.replication_moves == r2.replication_moves
+    assert r1.deletion_moves == r2.deletion_moves
+    assert r1.evictions == r2.evictions
+    # f32 reductions: re-associated across shards, allclose.
+    np.testing.assert_allclose(r1.node_busy_ms, r2.node_busy_ms, rtol=1e-4)
+    np.testing.assert_allclose(
+        r1.mean_latency_ms, r2.mean_latency_ms, rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        r1.throughput_ops_s, r2.throughput_ops_s, rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        r1.peak_occupancy_bytes, r2.peak_occupancy_bytes, rtol=1e-4
+    )
+    np.testing.assert_allclose(
+        t1.occupancy_bytes, t2.occupancy_bytes, rtol=1e-4
+    )
+    np.testing.assert_allclose(t1.load_factor, t2.load_factor, rtol=1e-4)
+    print('OK', type(pol).name, backend, trace_mode)
+print('SHARDED_ENGINE_EQUIVALENCE_OK')
+"""
+
+
+def test_sharded_matches_single_device_two_ranks(run_multi_rank):
+    script = SHARDED_EQUIVALENCE_SCRIPT.replace("NUM_SHARDS", "2")
+    out = run_multi_rank(script, num_devices=2, timeout=600)
+    assert "SHARDED_ENGINE_EQUIVALENCE_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_matches_single_device_four_ranks(run_multi_rank):
+    script = SHARDED_EQUIVALENCE_SCRIPT.replace("NUM_SHARDS", "4")
+    out = run_multi_rank(script, num_devices=4, timeout=600)
+    assert "SHARDED_ENGINE_EQUIVALENCE_OK" in out
+
+
+def test_num_shards_must_divide_num_keys():
+    wl = wan5_workload(num_requests=100, num_keys=501)
+    with pytest.raises(ValueError, match="divisible"):
+        run_scenario(wl, wan5_cluster(), RedynisPolicy(), seed=0, num_shards=2)
+
+
+def test_topk_rejected_sharded():
+    wl = wan5_workload(num_requests=100, num_keys=500)
+    with pytest.raises(ValueError, match="topk"):
+        run_scenario(wl, wan5_cluster(), TopKPolicy(), seed=0, num_shards=2)
+
+
+def test_finite_capacity_rejected_sharded():
+    wl = wan5_workload(num_requests=100, num_keys=500)
+    cl = wan5_cluster()._replace(capacity_bytes=10_000.0)
+    with pytest.raises(ValueError, match="capacity"):
+        run_scenario(wl, cl, RedynisPolicy(), seed=0, num_shards=2)
+
+
+def test_unknown_trace_mode_rejected():
+    wl = wan5_workload(num_requests=100, num_keys=500)
+    with pytest.raises(ValueError, match="trace_mode"):
+        run_scenario(wl, wan5_cluster(), RedynisPolicy(), seed=0, trace_mode="lazy")
