@@ -36,8 +36,10 @@ memory win as a tracked column — see ``_peak_live_bytes``), and
 ``--trendline`` adds the multi-device scaling trendline: one subprocess
 per device count (``XLA_FLAGS=--xla_force_host_platform_device_count=S``
 must be set before jax initialises, hence the fresh interpreter per
-point) runs the key-sharded streamed engine and reports requests/sec plus
-``scaling_vs_1shard``. The spec-scale run targets 100M+ requests over
+point) runs the key-sharded streamed engine — routing tier off AND on in
+that SAME subprocess — and reports requests/sec, ``scaling_vs_1shard``,
+and ``routing_on_off_ratio`` (the directory tier's wall-clock cost
+multiple, a machine-independent ratio since PR 8). The spec-scale run targets 100M+ requests over
 10⁷ keys (``--trendline-requests 100000000 --trendline-keys 10000000``);
 the checked-in baseline records a CI-tractable configuration of the same
 shape. ``--scale-acceptance`` times one ≥10M-request streamed run on a
@@ -90,6 +92,7 @@ from repro.core.policy import (
     split_policy,
 )
 from repro.kvsim import (
+    RoutingConfig,
     SimResult,
     TelemetryConfig,
     WorkloadConfig,
@@ -359,7 +362,10 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None,
     box) and the trendline's ``scaling_vs_1shard`` ratios
     (``kind="scaling"`` — the sharded and 1-shard runs share one box too,
     so a drop means the sharded program itself regressed, e.g. a collective
-    that grew from psum to all-gather)."""
+    that grew from psum to all-gather). The trendline's
+    ``routing_on_off_ratio`` (``kind="routing"`` — both sides share one
+    process) gates in the OTHER direction: a ratio that GREW >20% over the
+    baseline means the routing tier itself got more expensive."""
     if not os.path.exists(baseline_path):
         print(f"NOTE,no baseline at {baseline_path}, skipping regression check")
         return []
@@ -377,21 +383,39 @@ def check_regression(rows, baseline_path, threshold=0.20, speedups=None,
         tuple(_trendline_key(r)): r["scaling_vs_1shard"]
         for r in base_metrics.get("trendline", [])
     }
+    base_routing = {
+        tuple(_trendline_key(r)): r["routing_on_off_ratio"]
+        for r in base_metrics.get("trendline", [])
+        if "routing_on_off_ratio" in r
+    }
     warned, matched = [], 0
     for row in trendline or []:
         ref = base_trend.get(tuple(_trendline_key(row)))
-        if ref is None or ref <= 0 or row["num_shards"] == 1:
-            continue
-        ratio = row["scaling_vs_1shard"] / ref
-        if ratio < 1.0 - threshold:
-            warned.append({"kind": "scaling", **row})
-            print(
-                "WARNING,engine_scaling_regression,"
-                f"shards={row['num_shards']}/nk={row['num_keys']},"
-                f"now={row['scaling_vs_1shard']:.2f}x,baseline={ref:.2f}x,"
-                f"ratio={ratio:.2f}",
-                flush=True,
-            )
+        if ref is not None and ref > 0 and row["num_shards"] > 1:
+            ratio = row["scaling_vs_1shard"] / ref
+            if ratio < 1.0 - threshold:
+                warned.append({"kind": "scaling", **row})
+                print(
+                    "WARNING,engine_scaling_regression,"
+                    f"shards={row['num_shards']}/nk={row['num_keys']},"
+                    f"now={row['scaling_vs_1shard']:.2f}x,baseline={ref:.2f}x,"
+                    f"ratio={ratio:.2f}",
+                    flush=True,
+                )
+        ref = base_routing.get(tuple(_trendline_key(row)))
+        if ref is not None and ref > 0 and "routing_on_off_ratio" in row:
+            # Inverted sense: this ratio is a COST multiple (routing-on /
+            # routing-off wall time), so growth is the regression.
+            ratio = row["routing_on_off_ratio"] / ref
+            if ratio > 1.0 + threshold:
+                warned.append({"kind": "routing", **row})
+                print(
+                    "WARNING,engine_routing_overhead_regression,"
+                    f"shards={row['num_shards']}/nk={row['num_keys']},"
+                    f"now={row['routing_on_off_ratio']:.2f}x,"
+                    f"baseline={ref:.2f}x,ratio={ratio:.2f}",
+                    flush=True,
+                )
     for row in speedups or []:
         ref = base_speedups.get(tuple(_speedup_key(row)))
         if ref is None or ref <= 0:
@@ -448,14 +472,40 @@ TRENDLINE_DEVICE_COUNTS = (1, 2, 4, 8)
 _TRENDLINE_MARK = "TRENDLINE_ROW,"
 
 
+# The routing-tier configuration the trendline prices: lagged publishes
+# (ring buffer in the carry) with the unbounded/warm cache — the always-on
+# consult + mis-route-pricing path every routed request pays. The bounded
+# decay-LFU cache is deliberately excluded: its per-chunk [R, K] top_k (+
+# all_gather when sharded) costs 3-20x and scales with the shard count,
+# which would swamp the ratio with one optional feature's cost and make
+# the 20%-growth CI gate flaky.
+def _trendline_routing(num_keys):
+    return RoutingConfig(publish_lag_chunks=8)
+
+
 def _trendline_worker(num_shards, num_requests, num_keys, repeats,
                       daemon_interval, policy_spec):
-    """Runs inside the forced-device-count subprocess: measure one streamed
-    key-sharded run and print the row as a machine-readable line."""
+    """Runs inside the forced-device-count subprocess: measure the streamed
+    key-sharded run with the routing tier OFF and ON — both in this ONE
+    subprocess (one backend init, one warmed cache per side; spawning a
+    second interpreter per device count would double the dominant
+    fixed cost and put the two sides of the ratio in different processes)
+    — and print the row as a machine-readable line.
+
+    ``routing_on_off_ratio`` divides per-side minima (routing-on /
+    routing-off wall time, so 1.10 = the directory tier costs 10%): both
+    sides share one box AND one process, so the ratio is machine-
+    independent and regression-gateable like ``speedup_vs_legacy``."""
     pol = parse_policy(policy_spec)
     wl = _wan5_workload(num_requests, num_keys)
+    cluster = wan5_cluster()
     med, lo = _measure(
-        "scan", pol, wl, wan5_cluster(), daemon_interval, None, "jax",
+        "scan", pol, wl, cluster, daemon_interval, None, "jax",
+        repeats, trace_mode="streamed", num_shards=num_shards,
+    )
+    routed = cluster._replace(routing=_trendline_routing(num_keys))
+    med_on, lo_on = _measure(
+        "scan", pol, wl, routed, daemon_interval, None, "jax",
         repeats, trace_mode="streamed", num_shards=num_shards,
     )
     row = {
@@ -464,6 +514,9 @@ def _trendline_worker(num_shards, num_requests, num_keys, repeats,
         "daemon_interval": daemon_interval, "trace_mode": "streamed",
         "wall_s": med, "wall_s_min": lo,
         "requests_per_s": num_requests / med,
+        "wall_s_routing_on": med_on, "wall_s_min_routing_on": lo_on,
+        "requests_per_s_routing_on": num_requests / med_on,
+        "routing_on_off_ratio": lo_on / lo,
         "peak_live_bytes": _peak_live_bytes(
             num_requests, num_keys, wl.num_nodes, daemon_interval,
             "streamed", num_shards,
@@ -530,6 +583,7 @@ def run_trendline(device_counts, num_requests, num_keys, repeats,
             num_shards=row["num_shards"], num_keys=row["num_keys"],
             num_requests=row["num_requests"],
             scaling_vs_1shard=round(row["scaling_vs_1shard"], 3),
+            routing_on_off_ratio=round(row["routing_on_off_ratio"], 3),
             peak_live_mib=round(row["peak_live_bytes"] / 2**20, 1),
         )
     return rows
@@ -771,13 +825,16 @@ def main(
         topology="wan5", skewed=True, read_fraction=0.9,
     )
     if fail_on_regression:
-        hard = [w for w in warned if w.get("kind") in ("speedup", "scaling")]
+        hard = [
+            w for w in warned
+            if w.get("kind") in ("speedup", "scaling", "routing")
+        ]
         if hard:
             raise SystemExit(
                 f"FAIL,engine_ratio_regression,{len(hard)} machine-"
-                f"independent ratio(s) (fused-vs-legacy speedup or sharded-"
-                f"vs-1-shard scaling) >20% below baseline (see WARNING "
-                f"lines above)"
+                f"independent ratio(s) (fused-vs-legacy speedup, sharded-"
+                f"vs-1-shard scaling, or routing-tier on/off overhead) "
+                f">20% off baseline (see WARNING lines above)"
             )
     return metrics
 

@@ -114,6 +114,8 @@ CONTENTION_BEGIN = "<!-- CONTENTION_TAIL_TABLE_BEGIN -->"
 CONTENTION_END = "<!-- CONTENTION_TAIL_TABLE_END -->"
 TRENDLINE_BEGIN = "<!-- SCALE_TRENDLINE_TABLE_BEGIN -->"
 TRENDLINE_END = "<!-- SCALE_TRENDLINE_TABLE_END -->"
+ROUTING_BEGIN = "<!-- ROUTING_STALENESS_TABLE_BEGIN -->"
+ROUTING_END = "<!-- ROUTING_STALENESS_TABLE_END -->"
 
 
 def find_engine_throughput_json():
@@ -140,13 +142,15 @@ def trendline_table(bench) -> str:
             "`benchmarks/engine_throughput.py --trendline`)"
         )
     lines = [
-        "| shards | sim-req/s | scaling vs 1 shard | peak live MiB/device | wall s |",
-        "|---|---|---|---|---|",
+        "| shards | sim-req/s | scaling vs 1 shard | routing on/off | peak live MiB/device | wall s |",
+        "|---|---|---|---|---|---|",
     ]
     for r in rows:
+        ratio = r.get("routing_on_off_ratio")
         lines.append(
             f"| {r['num_shards']} | {r['requests_per_s']:,.0f} | "
             f"{r['scaling_vs_1shard']:.2f}x | "
+            f"{f'{ratio:.2f}x' if ratio is not None else '—'} | "
             f"{r['peak_live_bytes'] / 2**20:.1f} | {r['wall_s']:.2f} |"
         )
     lines.append("")
@@ -171,6 +175,62 @@ def trendline_table(bench) -> str:
             f"materialised path."
         )
     lines.append(tail)
+    return "\n".join(lines)
+
+
+def find_directory_staleness_json():
+    """BENCH_directory_staleness.json from $BENCH_DIR, the repo root, else
+    the checked-in baselines directory."""
+    dirs = [
+        os.environ.get("BENCH_DIR"),
+        ROOT,
+        os.path.join(ROOT, "benchmarks", "baselines"),
+    ]
+    for d in filter(None, dirs):
+        p = os.path.join(d, "BENCH_directory_staleness.json")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def routing_staleness_table(bench) -> str:
+    """§Routing-tier staleness frontier from the directory_staleness rows."""
+    m = bench["metrics"]
+    rows = m.get("lag_rows", [])
+    if not rows:
+        return (
+            "(no lag rows in BENCH_directory_staleness.json — re-run "
+            "`benchmarks/directory_staleness.py`)"
+        )
+    lines = [
+        "| publish lag (chunks) | mean ms | P99 ms | read P99 ms | mis-routes | stale consults | beats best static |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['publish_lag_chunks']} | {r['mean_latency_ms']:.2f} | "
+            f"{r['p99_ms']:.1f} | {r['p99_read_ms']:.1f} | "
+            f"{r['mis_routes']:.0f} | {r['stale_consults']:.0f} | "
+            f"{'yes' if r['beats_best_static'] else 'no'} |"
+        )
+    lines.append("")
+    statics = m.get("static_rows", {})
+    best = m.get("best_realizable_static", "?")
+    static_txt = ", ".join(
+        f"`static:{mode}` mean {row['mean_latency_ms']:.2f} / "
+        f"P99 {row['p99_ms']:.1f}"
+        for mode, row in statics.items()
+    )
+    win = m.get("max_winning_lag")
+    lines.append(
+        f"(redynis on diurnal wan5 — {bench['num_requests']:,} requests / "
+        f"{bench['num_keys']:,} keys, daemon_interval "
+        f"{bench['daemon_interval']}, read fraction "
+        f"{bench['read_fraction']}; statics on the same trace: {static_txt}; "
+        f"best realizable static by mean: `static:{best}`. Staleness "
+        f"budget: redynis beats it on mean AND P99 through publish lag "
+        f"{win if win is not None else '— none'}.)"
+    )
     return "\n".join(lines)
 
 
@@ -253,6 +313,16 @@ def main() -> None:
         doc = re.sub(
             re.escape(TRENDLINE_BEGIN) + r".*?" + re.escape(TRENDLINE_END),
             f"{TRENDLINE_BEGIN}\n{trendline_table(bench)}\n{TRENDLINE_END}",
+            doc,
+            flags=re.DOTALL,
+        )
+    routing_json = find_directory_staleness_json()
+    if routing_json is not None and ROUTING_BEGIN in doc and ROUTING_END in doc:
+        bench = load(routing_json)
+        doc = re.sub(
+            re.escape(ROUTING_BEGIN) + r".*?" + re.escape(ROUTING_END),
+            f"{ROUTING_BEGIN}\n{routing_staleness_table(bench)}\n"
+            f"{ROUTING_END}",
             doc,
             flags=re.DOTALL,
         )

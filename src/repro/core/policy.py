@@ -112,6 +112,7 @@ __all__ = [
     "policy_repr",
     "policy_sweep",
     "policy_masked_step",
+    "publish_mask",
 ]
 
 
@@ -700,6 +701,15 @@ def _policy_sweep(
 
 
 policy_sweep = partial(jax.jit, static_argnames=("policy",))(_policy_sweep)
+
+
+def publish_mask(old_hosts: Array, new_hosts: Array) -> Array:
+    """Per-key ``[K] bool``: which keys' replica rows a daemon step actually
+    changed — the *versioned publish* a placement commit emits toward the
+    directory tier (``repro.kvsim.routing``). Due-masked steps that commit
+    nothing publish nothing, so directory versions only advance on real
+    placement changes."""
+    return jnp.any(old_hosts != new_hosts, axis=-1)
 
 
 def policy_masked_step(

@@ -51,6 +51,7 @@ __all__ = [
     "load_factor_ref",
     "contention_wait_ref",
     "contention_extra_ms_ref",
+    "routing_extra_ms_ref",
 ]
 
 READ_MODES = ("map", "no_local", "ideal")
@@ -274,6 +275,85 @@ def contention_extra_ms_ref(
         axis_name=axis_name,
     )
     return contention_wait_ref(demand, rho, serving), rho
+
+
+# ---------------------------------------------------------------------------
+# Routing-tier pricing (RoutingConfig — see kvsim/routing.py for the model).
+# Like contention, the routing penalty is a jnp pre-pass producing a
+# per-request ``extra_ms`` that every consumer folds into the latency at the
+# SAME canonical elementwise position (``lat = lat + extra`` before the valid
+# mask) — so the jax scan, the reference engine, and the Pallas kernel (which
+# receives the composed ``extra_ms`` input) can never drift, and the
+# mis-route/fetch counters come from this one shared pass.
+# ---------------------------------------------------------------------------
+
+
+def routing_extra_ms_ref(
+    hosts: Array,  # [K, N] bool — authoritative frozen map (true serving)
+    pub_hosts: Array,  # [K, N] bool — published (lagged) directory view
+    cached: Array,  # [B] bool — the consulted router caches this key
+    fresh: Array,  # [B] bool — ... at the key's current publish version
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    valid: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    *,
+    read_mode: str,
+    home_node: int,
+) -> tuple[Array, Array, Array, Array, Array]:
+    """The whole routing-tier pre-pass: ``(extra_ms [B] f32, consults [B],
+    fetches [B], stale [B], mis_routed [B])`` (the last four bool).
+
+    Only requests that genuinely need ownership knowledge consult their
+    router: reads without a local replica under ``read_mode="map"``, every
+    read under ``"no_local"`` (the local copy is invisible by definition),
+    none under ``"ideal"`` — and writes never (Algorithm 2 commits at the
+    requester before the master relay resolves owners server-side).
+
+    Pricing per consult:
+
+      * fresh  — the cached row is current: route as today, 0 extra.
+      * stale  — route via the *published* map: if the published serving
+        node differs from the true one, pay the forward-hop + redirect
+        detour ``rtt[x, s_pub] + rtt[s_pub, s_true] - rtt[x, s_true]``
+        (the request still ultimately completes at the true serving
+        replica, whose RTT the base latency model already charged).
+      * miss   — a directory-fetch round trip to ``home_node`` first
+        (``rtt[x, home]``), then the fetched row IS the published view, so
+        the same detour applies on top.
+    """
+    b = keys.shape[0]
+    zeros_f = jnp.zeros((b,), jnp.float32)
+    zeros_b = jnp.zeros((b,), bool)
+    if read_mode == "ideal":
+        # Ideal serves everything locally at pure service cost — there is
+        # no ownership lookup to get stale.
+        return zeros_f, zeros_b, zeros_b, zeros_b, zeros_b
+    replicas = hosts[keys]  # [B, N]
+    local = replicas[jnp.arange(b), nodes]
+    if read_mode == "no_local":
+        consult = is_read & valid
+    else:
+        consult = is_read & ~local & valid
+    s_true = serving_node_ref(replicas, nodes, is_read, rtt, read_mode=read_mode)
+    s_pub = serving_node_ref(
+        pub_hosts[keys], nodes, is_read, rtt, read_mode=read_mode
+    )
+    mis = s_pub != s_true
+    detour = jnp.where(
+        mis, rtt[nodes, s_pub] + rtt[s_pub, s_true] - rtt[nodes, s_true], 0.0
+    ).astype(jnp.float32)
+    fetch = rtt[nodes, home_node].astype(jnp.float32)
+    extra = jnp.where(
+        consult & ~fresh,
+        detour + jnp.where(cached, 0.0, fetch),
+        0.0,
+    ).astype(jnp.float32)
+    fetches = consult & ~cached
+    stale = consult & cached & ~fresh
+    mis_routed = consult & ~fresh & mis
+    return extra, consult, fetches, stale, mis_routed
 
 
 def chunk_replay_ref(

@@ -51,8 +51,10 @@ from repro.kvsim.cluster import (
     WAN5_RTT_MS,
     ClusterConfig,
     Scenario,
+    RoutingConfig,
     ServiceConfig,
     flat_rtt,
+    normalize_routing,
     normalize_service,
     wan5_cluster,
     wan5_edge_cluster,
@@ -89,6 +91,8 @@ __all__ = [
     "Scenario",
     "ServiceConfig",
     "normalize_service",
+    "RoutingConfig",
+    "normalize_routing",
     "flat_rtt",
     "wan5_cluster",
     "wan5_edge_cluster",

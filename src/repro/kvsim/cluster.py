@@ -51,12 +51,15 @@ from repro.kernels.chunk_replay.ref import (
     read_latency_ref,
     write_latency_ref,
 )
+from repro.kvsim.routing import RoutingConfig, normalize_routing
 
 __all__ = [
     "ClusterConfig",
     "Scenario",
     "ServiceConfig",
+    "RoutingConfig",
     "normalize_service",
+    "normalize_routing",
     "read_latency",
     "write_latency",
     "nearest_replica_rtt",
@@ -188,6 +191,12 @@ class ClusterConfig(NamedTuple):
     # paper's model and the bit-exact golden path). A ServiceConfig is a
     # nested NamedTuple, so the ClusterConfig stays a valid jit static.
     service: ServiceConfig | None = None
+    # Routing/directory tier (None = requests teleport to the right replica
+    # with free, fresh ownership knowledge — the paper's model and the
+    # bit-exact golden path). See repro.kvsim.routing for the TurboKV-style
+    # cached-directory model; also a nested NamedTuple, so the config stays
+    # a valid jit static.
+    routing: RoutingConfig | None = None
 
     def rtt_matrix(self) -> Array:
         """The ``[N, N]`` RTT matrix as a device array."""

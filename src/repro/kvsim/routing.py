@@ -1,0 +1,323 @@
+"""Routing tier with a stale-directory cache (TurboKV-style metadata tier).
+
+Redynis's evaluation — and every engine in this repo before this module —
+assumes requests teleport to the correct replica with perfectly fresh
+ownership knowledge. TurboKV (2010.14931) models the directory as a
+first-class tier: router sites hold a *popularity-aware cache* of the
+ownership map, stale entries pay a mis-route penalty, and directory updates
+propagate at a lag behind repartitioning decisions (DINOMO, 2209.08743,
+shows that metadata freshness is the limiting factor during elastic
+reconfiguration). This module is that tier:
+
+  * **R router sites** (:class:`RoutingConfig.num_routers`; 0 = one router
+    per cluster node). A request from node ``x`` consults router ``x % R``.
+  * **Bounded, popularity-aware cache**: per router a ``[R, K]``
+    eligibility mask + the directory *version* each entry was last
+    refreshed at. Admission is decay-LFU over the consult stream: per chunk
+    ``score = score * decay + consults`` and the top ``cache_entries``
+    scores per router stay cached (ties at the threshold are all admitted —
+    the capacity is a bound of ``cache_entries`` plus ties).
+    ``cache_entries = 0`` (or >= the keyspace) is the *unbounded warm
+    cache*: every entry is always cached, nothing is ever evicted.
+  * **Versioned publishes**: every daemon placement commit bumps a per-key
+    authoritative version (``repro.core.policy.publish_mask``). The
+    directory *publishes* at ``publish_lag_chunks`` behind the daemon via a
+    ring buffer folded through the engine's scan carry, so routers — and
+    directory fetches — see the ownership map as it was L chunks ago.
+  * **Consult outcomes** (priced by
+    ``repro.kernels.chunk_replay.ref.routing_extra_ms_ref``, the single
+    canonical latency oracle): a *fresh* hit routes as today (0 extra);
+    a *stale* entry routes via the published map and pays the mis-route
+    detour (forward hop to the stale owner + redirect to the true serving
+    replica); a *miss* pays a directory-fetch round trip to
+    ``home_node`` and then routes via the published (possibly still stale)
+    row. Only requests that would actually consult the directory pay:
+    reads without a local replica under ``read_mode="map"``, every read
+    under ``"no_local"``, nothing under ``"ideal"`` — and writes never
+    (Algorithm 2 commits at the requester before the master relay).
+
+Modelling notes (documented approximations, pinned by tests):
+
+  * Stale entries route via the *published* map — the directory tier's
+    propagation horizon — rather than per-entry historical snapshots;
+    each entry's individual age (authoritative version minus the version
+    it was refreshed at) feeds the staleness-age histogram instead.
+  * Detours add latency but do not shift the contention demand fold: the
+    request is ultimately served by the true serving replica, so the
+    queueing model keeps charging demand there.
+  * ``publish_lag_chunks = 0`` with an unbounded cache prices every
+    consult at exactly ``0.0`` extra — adding that to a non-negative f32
+    latency is a bit-exact identity, which is what the zero-lag /
+    infinite-cache equivalence property in tests/test_routing.py pins.
+
+Off by default: ``ClusterConfig.routing = None`` (or
+``RoutingConfig(enabled=False)``, collapsed by :func:`normalize_routing`)
+compiles the exact pre-routing program, so every seed golden holds
+bit-exact — the same structural-no-op contract as ``TelemetryConfig`` and
+``ServiceConfig``.
+
+This module must stay import-free of ``repro.kvsim.cluster`` (which
+imports it to attach :class:`RoutingConfig` to ``ClusterConfig``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+__all__ = [
+    "STALE_AGE_BINS",
+    "RoutingConfig",
+    "RouterState",
+    "normalize_routing",
+    "router_of",
+    "init_router_state",
+    "published_view",
+    "consult_probe",
+    "router_cache_update",
+    "publish_commit",
+    "stale_age_fold",
+]
+
+# Staleness-age histogram width: ages (authoritative version minus the
+# version a consulted entry was refreshed at) are counted into linear bins
+# 0..STALE_AGE_BINS-2 with the last bin absorbing everything older.
+STALE_AGE_BINS = 16
+
+
+class RoutingConfig(NamedTuple):
+    """Directory/routing-tier knobs (hashable — rides on ``ClusterConfig``,
+    which is already a jit static, so no new static argnames are needed).
+
+    Off by default at the cluster level (``routing=None``); constructing a
+    config turns the tier on unless ``enabled=False``.
+    """
+
+    enabled: bool = True
+    num_routers: int = 0  # router sites; 0 = one per cluster node
+    cache_entries: int = 0  # per-router cache capacity; 0 = unbounded/warm
+    publish_lag_chunks: int = 0  # directory publish lag behind the daemon
+    home_node: int = 0  # directory home (miss round-trip destination)
+    decay: float = 1.0  # per-chunk decay of the LFU admission score
+
+    def validate(self) -> "RoutingConfig":
+        if self.num_routers < 0:
+            raise ValueError(
+                f"num_routers must be >= 0 (0 = one per node), got "
+                f"{self.num_routers}"
+            )
+        if self.cache_entries < 0:
+            raise ValueError(
+                f"cache_entries must be >= 0 (0 = unbounded), got "
+                f"{self.cache_entries}"
+            )
+        if self.publish_lag_chunks < 0:
+            raise ValueError(
+                f"publish_lag_chunks must be >= 0, got "
+                f"{self.publish_lag_chunks}"
+            )
+        if self.home_node < 0:
+            raise ValueError(
+                f"home_node must be a node index, got {self.home_node}"
+            )
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(
+                f"decay must lie in (0, 1], got {self.decay}"
+            )
+        return self
+
+
+def normalize_routing(routing: "RoutingConfig | None") -> "RoutingConfig | None":
+    """Collapse disabled configs to ``None`` so ``routing=None`` and
+    ``RoutingConfig(enabled=False)`` compile the identical program (the
+    same contract as ``normalize_service`` / ``normalize_telemetry``)."""
+    if routing is None or not routing.enabled:
+        return None
+    return routing.validate()
+
+
+class RouterState(NamedTuple):
+    """The routing tier's scan-carry state. ``None`` fields are empty
+    pytree nodes, so each host-static configuration carries exactly the
+    state it needs and nothing else:
+
+      * ``cached``/``score`` are ``None`` for the unbounded warm cache
+        (everything is always cached; no admission ranking runs).
+      * ``ver`` is ``None`` under an inactive policy (a frozen map never
+        publishes — every cached entry is trivially fresh).
+      * the ring leaves are ``None`` at ``publish_lag_chunks == 0`` (the
+        published view IS the current frozen map).
+    """
+
+    cached: Array | None  # [R, Kl] bool cache eligibility
+    cached_ver: Array  # [R, Kl] i32 version each entry was refreshed at
+    score: Array | None  # [R, Kl] f32 decay-LFU admission score
+    ver: Array | None  # [Kl] i32 authoritative per-key publish version
+    ring_hosts: Array | None  # [L+1, Kl, N] bool published-map ring
+    ring_ver: Array | None  # [L+1, Kl] i32 published-version ring
+
+
+def router_of(nodes: Array, num_routers: int) -> Array:
+    """Router site consulted by each request ``[B] i32``: node ``x`` maps
+    to router ``x % R`` (with R = N, the degenerate one-router-per-node
+    deployment; smaller R models shared regional routers)."""
+    return (nodes % num_routers).astype(jnp.int32)
+
+
+def init_router_state(
+    hosts0: Array,  # [Kl, N] initial (shard-local) replica map
+    *,
+    num_routers: int,
+    cache_entries: int,
+    publish_lag_chunks: int,
+    active: bool,
+) -> RouterState:
+    """Cold-start router state for one engine run (shard-local shapes)."""
+    local_keys, _ = hosts0.shape
+    bounded = cache_entries > 0
+    lag = publish_lag_chunks
+    return RouterState(
+        cached=(
+            jnp.zeros((num_routers, local_keys), bool) if bounded else None
+        ),
+        cached_ver=jnp.zeros((num_routers, local_keys), jnp.int32),
+        score=(
+            jnp.zeros((num_routers, local_keys), jnp.float32)
+            if bounded else None
+        ),
+        ver=jnp.zeros((local_keys,), jnp.int32) if active else None,
+        ring_hosts=(
+            jnp.broadcast_to(hosts0, (lag + 1,) + hosts0.shape)
+            if active and lag > 0 else None
+        ),
+        ring_ver=(
+            jnp.zeros((lag + 1, local_keys), jnp.int32)
+            if active and lag > 0 else None
+        ),
+    )
+
+
+def published_view(
+    rstate: RouterState,
+    hosts: Array,  # [Kl, N] the chunk's frozen authoritative map
+    chunk: Array,  # scalar i32 chunk index
+    *,
+    publish_lag_chunks: int,
+) -> tuple[Array, Array]:
+    """The directory's *published* ownership view at this chunk:
+    ``(pub_hosts [Kl, N], pub_ver [Kl])`` — the authoritative state
+    ``publish_lag_chunks`` chunks ago (clamped to the initial map for the
+    first chunks). Inactive policies never publish, so their view is the
+    frozen map at version zero."""
+    if rstate.ver is None:
+        return hosts, jnp.zeros((hosts.shape[0],), jnp.int32)
+    if publish_lag_chunks == 0:
+        return hosts, rstate.ver
+    slot = chunk % (publish_lag_chunks + 1)
+    return rstate.ring_hosts[slot], rstate.ring_ver[slot]
+
+
+def consult_probe(
+    rstate: RouterState,
+    rb: Array,  # [B] i32 router site per request
+    ck: Array,  # [B] i32 (shard-local) key per request
+) -> tuple[Array, Array, Array]:
+    """Per-request cache probe: ``(cached [B] bool, fresh [B] bool,
+    age [B] i32)``. ``fresh`` means the entry's refresh version matches the
+    key's authoritative version; ``age`` is the version gap on stale
+    entries (0 elsewhere)."""
+    ent_ver = rstate.cached_ver[rb, ck]
+    if rstate.cached is None:
+        ent_cached = jnp.ones(rb.shape, bool)
+    else:
+        ent_cached = rstate.cached[rb, ck]
+    if rstate.ver is None:
+        key_ver = jnp.zeros(rb.shape, jnp.int32)
+    else:
+        key_ver = rstate.ver[ck]
+    fresh = ent_cached & (ent_ver >= key_ver)
+    age = jnp.maximum(key_ver - ent_ver, 0)
+    return ent_cached, fresh, age
+
+
+def router_cache_update(
+    rstate: RouterState,
+    rb: Array,  # [B] i32 router site per request
+    ck: Array,  # [B] i32 (shard-local) key per request
+    consult: Array,  # [B] bool — requests that consulted the directory
+    pub_ver: Array,  # [Kl] i32 published version (what a refresh installs)
+    *,
+    cache_entries: int,
+    decay: float,
+    axis_name: str | None = None,
+) -> RouterState:
+    """End-of-chunk cache maintenance (the state is frozen *during* a chunk,
+    like the replica map): consulted entries refresh to the published
+    version (a miss fetched the row, a stale consult learned the correct
+    location after its redirect), the decay-LFU score folds the chunk's
+    consults in, and — bounded — the per-router top-``cache_entries``
+    scores stay cached.
+
+    The admission threshold is the exact global C-th largest score per
+    router: unsharded via one ``top_k``; key-sharded via local top-C +
+    ``all_gather`` (the global top C is a subset of the union of local top
+    Cs, so ranking the gathered candidates is exact, not approximate).
+    """
+    counts = jnp.zeros_like(rstate.cached_ver, jnp.float32).at[rb, ck].add(
+        jnp.where(consult, 1.0, 0.0)
+    )
+    touched = counts > 0.0
+    new_ver = jnp.where(touched, pub_ver[None, :], rstate.cached_ver)
+    if cache_entries == 0:
+        return rstate._replace(cached_ver=new_ver)
+    local_keys = counts.shape[1]
+    new_score = rstate.score * jnp.float32(decay) + counts
+    candidates = jax.lax.top_k(new_score, min(cache_entries, local_keys))[0]
+    if axis_name is not None:
+        candidates = jax.lax.all_gather(
+            candidates, axis_name, axis=1, tiled=True
+        )
+    kth = jax.lax.top_k(candidates, cache_entries)[0][:, -1]  # [R]
+    new_cached = (new_score >= kth[:, None]) & (new_score > 0.0)
+    return rstate._replace(
+        cached=new_cached, cached_ver=new_ver, score=new_score
+    )
+
+
+def publish_commit(
+    rstate: RouterState,
+    changed: Array,  # [Kl] bool — keys whose replica row the daemon changed
+    new_hosts: Array,  # [Kl, N] the map the NEXT chunk will see frozen
+    chunk: Array,  # scalar i32 chunk index
+    *,
+    publish_lag_chunks: int,
+) -> RouterState:
+    """Fold one daemon step's versioned publish into the carry: bump the
+    authoritative version of every changed key, and (lagged) overwrite the
+    ring slot this chunk just read — it is next read ``publish_lag_chunks +
+    1`` chunks from now, which is exactly what makes the published view the
+    authoritative state L chunks ago."""
+    if rstate.ver is None:
+        return rstate
+    ver = rstate.ver + changed.astype(jnp.int32)
+    if publish_lag_chunks == 0:
+        return rstate._replace(ver=ver)
+    slot = chunk % (publish_lag_chunks + 1)
+    return rstate._replace(
+        ver=ver,
+        ring_hosts=rstate.ring_hosts.at[slot].set(new_hosts),
+        ring_ver=rstate.ring_ver.at[slot].set(ver),
+    )
+
+
+def stale_age_fold(age: Array, stale: Array) -> Array:
+    """One chunk's staleness-age histogram ``[STALE_AGE_BINS] f32``: the
+    version gap of every *stale* consult, linear bins with the last bin
+    absorbing ages ``>= STALE_AGE_BINS - 1``."""
+    idx = jnp.clip(age, 0, STALE_AGE_BINS - 1)
+    return jnp.zeros((STALE_AGE_BINS,), jnp.float32).at[idx].add(
+        jnp.where(stale, 1.0, 0.0)
+    )

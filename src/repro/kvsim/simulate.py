@@ -121,16 +121,31 @@ from repro.kernels.chunk_replay.ops import (
     chunk_latency,
     chunk_replay,
 )
-from repro.kernels.chunk_replay.ref import contention_extra_ms_ref
+from repro.kernels.chunk_replay.ref import (
+    contention_extra_ms_ref,
+    routing_extra_ms_ref,
+)
 from repro.kernels.latency_histogram.ref import bin_index
 from repro.core.policy import (
     PolicyContext,
     describe_policy,
     policy_masked_step,
     policy_sweep,
+    publish_mask,
     split_policy,
 )
 from repro.kvsim.cluster import ClusterConfig, Scenario, normalize_service
+from repro.kvsim.routing import (
+    STALE_AGE_BINS,
+    consult_probe,
+    init_router_state,
+    normalize_routing,
+    publish_commit,
+    published_view,
+    router_cache_update,
+    router_of,
+    stale_age_fold,
+)
 from repro.kvsim.telemetry import (
     SimTrace,
     TelemetryConfig,
@@ -181,10 +196,21 @@ class ShardSpec(NamedTuple):
     ``psum`` assembles the global aggregates (busy fold, histograms, move
     counters, occupancy, the contention demand fold) exactly where the
     daemon needs cluster-wide values.
+
+    ``pad`` lifts the historical ``K % S == 0`` restriction: when the key
+    axis does not divide evenly, ``run_scenario`` pads ``natural`` /
+    ``object_bytes`` with ``pad`` trailing dummy keys so every shard holds
+    ``ceil(K / S)`` rows, and the engine masks the padded rows out of all
+    per-key state (never live, never owned, zero bytes). Requests are drawn
+    from the REAL keyspace, so no padded key is ever requested. ``pad == 0``
+    (every dividing K, and the whole unsharded world) compiles the exact
+    historical program — the field is a jit static, so it only splits the
+    compile cache, never the math.
     """
 
     axis_name: str | None = None
     num_shards: int = 1
+    pad: int = 0
 
     @property
     def active(self) -> bool:
@@ -203,6 +229,13 @@ class SimResult(NamedTuple):
     evictions: float  # subset of deletions caused by key expiry
     capacity_evictions: float  # held replicas evicted by the budget projection
     peak_occupancy_bytes: np.ndarray  # [N] peak replica bytes per node
+    # Routing/directory-tier counters (all zero when ClusterConfig.routing
+    # is off — the fields default so the pre-routing result shape is a
+    # strict prefix and existing consumers are untouched).
+    router_consults: float = 0.0  # directory consults
+    directory_fetches: float = 0.0  # cache misses (home-node round trips)
+    mis_routes: float = 0.0  # consults detoured by a stale ownership view
+    stale_consults: float = 0.0  # consults that hit a stale cache entry
 
 
 def _initial_hosts(
@@ -333,6 +366,43 @@ def _contention_kwargs(
     )
 
 
+def _routing_kwargs(cluster: ClusterConfig, num_keys: int) -> dict | None:
+    """Host-side resolution of the routing tier: the resolved knobs the
+    engines consume, or ``None`` when the cluster has no enabled
+    :class:`RoutingConfig` (the bit-exact pre-routing path — the same
+    contract as :func:`_contention_kwargs`).
+
+    ``num_routers = 0`` resolves to one router per cluster node, and a
+    ``cache_entries`` at or beyond the keyspace collapses to 0 (the
+    unbounded warm cache) so the admission ranking compiles away when it
+    could never evict anything.
+    """
+    routing = normalize_routing(cluster.routing)
+    if routing is None:
+        return None
+    if routing.home_node >= cluster.num_nodes:
+        raise ValueError(
+            f"routing.home_node={routing.home_node} is not a node index "
+            f"(num_nodes={cluster.num_nodes})"
+        )
+    if routing.num_routers > cluster.num_nodes:
+        raise ValueError(
+            f"routing.num_routers={routing.num_routers} exceeds "
+            f"num_nodes={cluster.num_nodes} (routers are consulted per "
+            f"requesting node, node x -> router x % R)"
+        )
+    cache_entries = routing.cache_entries
+    if cache_entries >= num_keys:
+        cache_entries = 0
+    return dict(
+        num_routers=routing.num_routers or cluster.num_nodes,
+        cache_entries=cache_entries,
+        publish_lag_chunks=routing.publish_lag_chunks,
+        home_node=routing.home_node,
+        decay=routing.decay,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Fused engine: one lax.scan over chunks, policy due-masked inside the body.
 # ---------------------------------------------------------------------------
@@ -438,6 +508,10 @@ def _simulate(
     # pre-pass is absent from the compiled program entirely — the exact
     # pre-contention bits (goldens pinned by tests/test_service_time.py).
     contention = _contention_kwargs(cluster, policy.read_mode, daemon_interval)
+    # Host-side static: with no enabled RoutingConfig the directory tier is
+    # absent from the compiled program entirely — the exact pre-routing
+    # bits (goldens pinned by tests/test_routing.py).
+    routing = _routing_kwargs(cluster, num_keys - shard.pad)
 
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
@@ -465,11 +539,19 @@ def _simulate(
             chunked(pv),
         )
 
-    store = _seed_store(
-        _initial_hosts(nat_local, local_keys, n, policy.initial_placement),
-        local_keys,
-        n,
-    )
+    hosts0 = _initial_hosts(nat_local, local_keys, n, policy.initial_placement)
+    if shard.active and shard.pad:
+        # Padded tail keys (ceil-division sharding, satellite of PR 8) are
+        # dead weight: never live, never hosted, zero bytes — so no policy
+        # sweep, occupancy sample, or counter ever sees them and the
+        # non-dividing-K run stays bit-exact with the unsharded engine.
+        real = (shard_base + jnp.arange(kps, dtype=jnp.int32)) < (
+            num_keys - shard.pad
+        )
+        hosts0 = hosts0 & real[:, None]
+    store = _seed_store(hosts0, local_keys, n)
+    if shard.active and shard.pad:
+        store = store._replace(live=real)
     pstate = policy.init(store, ctx)
     zero = jnp.float32(0.0)
     # The O(K·N) occupancy sample is a loop constant for inactive policies
@@ -488,6 +570,9 @@ def _simulate(
         r * n <= 64 * 1024 * 1024
         and trace_mode == "materialized"
         and not shard.active
+        # A frozen map does NOT freeze the routing tier: router caches and
+        # consult counters evolve per chunk, so routing always scans.
+        and routing is None
     )
     if not policy.is_active and replay_backend == "jax" and static_fast:
         # Static fast path: a frozen map makes the ENTIRE request path
@@ -607,9 +692,38 @@ def _simulate(
                 jnp.zeros((num_chunks, n), jnp.float32)
                 if rho_c is None else rho_c
             ),
+            # Routing forces the scan path, so the fast path's routing
+            # series are structurally zero (kept [C]-shaped for SimTrace).
+            router_consults=zeros_c,
+            directory_fetches=zeros_c,
+            mis_routes=zeros_c,
+            stale_consults=zeros_c,
+            stale_age_hist=jnp.zeros(
+                (num_chunks, STALE_AGE_BINS), jnp.float32
+            ),
         )
         return leaves, ys
 
+    if routing is None:
+        # None is a legal (empty) pytree carry leaf: with routing off the
+        # scan carry is structurally identical to the pre-routing program.
+        rcarry0 = None
+    else:
+        rstate0 = init_router_state(
+            store.hosts,
+            num_routers=routing["num_routers"],
+            cache_entries=routing["cache_entries"],
+            publish_lag_chunks=routing["publish_lag_chunks"],
+            active=policy.is_active,
+        )
+        # RouterState + running consult/fetch/mis-route/stale counters.
+        rcarry0 = (
+            rstate0,
+            zero,
+            zero,
+            zero,
+            zero,
+        )
     init = (
         store,
         pstate,
@@ -622,13 +736,14 @@ def _simulate(
         zero,  # evic (expiry)
         zero,  # cap_evic
         occ0,  # peak (seeded by the initial map)
+        rcarry0,
     )
     scalars = _replay_scalars(cluster)
 
     def body(carry, x):
         (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
-            cap_evic, peak,
+            cap_evic, peak, rcarry,
         ) = carry
         if trace_mode == "streamed":
             # In-scan trace generation: this chunk's request window, drawn
@@ -651,7 +766,27 @@ def _simulate(
             mine = (ck // kps) == shard_idx
             ck = jnp.where(mine, ck - shard_base, 0)
             cv = cv & mine
+        route = None
+        if routing is not None:
+            # Routing pre-pass on the chunk's frozen map: consult the
+            # region's router cache against the PUBLISHED (possibly lagged)
+            # ownership view and price fresh hits / stale mis-routes /
+            # directory fetches per request (routing_extra_ms_ref is the
+            # canonical oracle both replay backends consume).
+            rstate, r_consults, r_fetches, r_mis, r_stale = rcarry
+            pub_hosts, pub_ver = published_view(
+                rstate, store.hosts, c,
+                publish_lag_chunks=routing["publish_lag_chunks"],
+            )
+            rb = router_of(cn, routing["num_routers"])
+            ent_cached, fresh, age = consult_probe(rstate, rb, ck)
+            route, consult, fetchb, staleb, misb = routing_extra_ms_ref(
+                store.hosts, pub_hosts, ent_cached, fresh, ck, cn, cr, cv,
+                rtt, read_mode=policy.read_mode,
+                home_node=routing["home_node"],
+            )
         rho = None
+        extra = None
         if contention is not None:
             # Queueing pre-pass on the chunk's frozen map: per-request
             # contention wait + per-node load factor (the canonical
@@ -662,6 +797,11 @@ def _simulate(
                 store.hosts, ck, cn, cr, cv, rtt, obj_local, **contention,
                 axis_name=shard.axis_name if shard.active else None,
             )
+        if route is not None:
+            # Canonical composition order (routing first, ONE f32 add):
+            # every engine and backend folds the same composed surcharge at
+            # the same elementwise position, so the bits agree everywhere.
+            extra = route if extra is None else route + extra
         if replay_backend == "pallas":
             # The fused one-pass kernel: gather, latency, hit flags, busy
             # fold — and the telemetry histogram when enabled — in one
@@ -674,7 +814,7 @@ def _simulate(
                     lo=1.0 if telemetry is None else telemetry.lo_ms,
                     hi=10_000.0 if telemetry is None else telemetry.hi_ms,
                     backend="pallas",
-                    extra_ms=None if contention is None else extra,
+                    extra_ms=extra,
                     **scalars,
                 )
             )
@@ -685,7 +825,7 @@ def _simulate(
             lat, read_hits = _chunk_latency(
                 store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
             )
-            if contention is not None:
+            if extra is not None:
                 # Same elementwise position as chunk_replay_ref: after the
                 # base latency, before the validity mask — identical bits
                 # across engines and backends.
@@ -712,12 +852,31 @@ def _simulate(
             occ = occ0
         peak = jnp.maximum(peak, occ)
         zero = jnp.float32(0.0)
+        if routing is not None:
+            # Per-chunk routing diagnostics + decay-LFU cache refresh.
+            # Consulted entries re-sync to the PUBLISHED version — a stale
+            # router learns at most the lagged view, never the live map.
+            fsum = lambda m: jnp.sum(m.astype(jnp.float32))
+            d_consults, d_fetches = fsum(consult), fsum(fetchb)
+            d_mis, d_stale = fsum(misb), fsum(staleb)
+            d_age = stale_age_fold(age, staleb)
+            r_consults = r_consults + d_consults
+            r_fetches = r_fetches + d_fetches
+            r_mis = r_mis + d_mis
+            r_stale = r_stale + d_stale
+            rstate = router_cache_update(
+                rstate, rb, ck, consult, pub_ver,
+                cache_entries=routing["cache_entries"],
+                decay=routing["decay"],
+                axis_name=shard.axis_name if shard.active else None,
+            )
         chunk_moves = (zero, zero, zero, zero)
         if policy.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request
             # (sharded: only the shard's own rows fold into its local
             # store — foreign rows are already masked out of cv).
             store = record_accesses(store, ck, cn, now=c, valid=cv)
+            prev_hosts = store.hosts
             stats, pstate, store = policy_masked_step(
                 policy, pstate, store, c, (c % policy.period) == 0, ctx
             )
@@ -729,6 +888,15 @@ def _simulate(
                 stats.adds, stats.drops, stats.expiry_evictions,
                 stats.capacity_evictions,
             )
+            if routing is not None:
+                # Versioned publish: keys the daemon just moved bump their
+                # directory version and enter the publish queue; routers
+                # see the new owners publish_lag_chunks later.
+                rstate = publish_commit(
+                    rstate, publish_mask(prev_hosts, store.hosts),
+                    store.hosts, c,
+                    publish_lag_chunks=routing["publish_lag_chunks"],
+                )
         if telemetry is None:
             ys = None
         else:
@@ -756,26 +924,41 @@ def _simulate(
                 load_factor=(
                     jnp.zeros((n,), jnp.float32) if rho is None else rho
                 ),
+                router_consults=zero if routing is None else d_consults,
+                directory_fetches=zero if routing is None else d_fetches,
+                mis_routes=zero if routing is None else d_mis,
+                stale_consults=zero if routing is None else d_stale,
+                stale_age_hist=(
+                    jnp.zeros((STALE_AGE_BINS,), jnp.float32)
+                    if routing is None else d_age
+                ),
             )
+        rcarry = (
+            None if routing is None
+            else (rstate, r_consults, r_fetches, r_mis, r_stale)
+        )
         return (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
-            cap_evic, peak,
+            cap_evic, peak, rcarry,
         ), ys
 
-    (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak), ys = (
-        jax.lax.scan(body, init, xs)
-    )
+    (
+        (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak,
+         rcarry),
+        ys,
+    ) = jax.lax.scan(body, init, xs)
+    routing_totals = () if rcarry is None else tuple(rcarry[1:])
     if shard.active:
         # One collective round after the scan assembles the global
         # aggregates from the per-shard partial sums (peak and the
         # telemetry occupancy/load_factor leaves are already global — they
         # were psum'd at the sample point inside the body).
-        (busy, lat_sum, hits, reads, repl, drop, evic, cap_evic) = (
-            jax.lax.psum(
-                (busy, lat_sum, hits, reads, repl, drop, evic, cap_evic),
-                shard.axis_name,
-            )
-        )
+        agg = (
+            busy, lat_sum, hits, reads, repl, drop, evic, cap_evic,
+        ) + routing_totals
+        agg = jax.lax.psum(agg, shard.axis_name)
+        busy, lat_sum, hits, reads, repl, drop, evic, cap_evic = agg[:8]
+        routing_totals = agg[8:]
         if ys is not None:
             ys = psum_leaves(ys, shard.axis_name)
     makespan_ms = jnp.max(busy)
@@ -789,7 +972,7 @@ def _simulate(
         evic,
         cap_evic,
         peak,
-    ), ys
+    ) + routing_totals, ys
 
 
 @lru_cache(maxsize=1)
@@ -911,11 +1094,6 @@ def _check_scale_out(
         raise ValueError(f"{caller}: num_shards={num_shards} must be >= 1")
     if num_shards == 1:
         return
-    if workload.num_keys % num_shards:
-        raise ValueError(
-            f"{caller}: num_keys={workload.num_keys} must be divisible by "
-            f"num_shards={num_shards} (contiguous block sharding)"
-        )
     if getattr(type(static), "name", "") == "topk":
         raise ValueError(
             f"{caller}: the topk policy ranks keys with a GLOBAL argsort "
@@ -984,7 +1162,14 @@ def run_scenario(
     _check_scale_out(
         "run_scenario", workload, cluster, static, trace_mode, num_shards
     )
-    shard = ShardSpec("keys", num_shards) if num_shards > 1 else ShardSpec()
+    if num_shards > 1:
+        # Ceil-division block sharding: a non-dividing K pads the final
+        # shard with dead keys (zero bytes, masked out of the live map
+        # inside _simulate) so every shard holds the same block length.
+        kps = -(-workload.num_keys // num_shards)
+        shard = ShardSpec("keys", num_shards, kps * num_shards - workload.num_keys)
+    else:
+        shard = ShardSpec()
     if trace_mode == "streamed":
         keys = nodes = is_read = None
         natural, object_bytes = _generate_key_state_jit(workload, seed)
@@ -996,6 +1181,13 @@ def run_scenario(
         natural, object_bytes = trace.natural_node, trace.object_bytes
         stream_seed = None
         stream_workload = None
+    if shard.pad:
+        natural = jnp.concatenate(
+            [natural, jnp.zeros((shard.pad,), natural.dtype)]
+        )
+        object_bytes = jnp.concatenate(
+            [object_bytes, jnp.zeros((shard.pad,), object_bytes.dtype)]
+        )
     engine = (
         _sharded_simulate_jit(num_shards) if shard.active else _simulate_jit()
     )
@@ -1016,17 +1208,24 @@ def run_scenario(
         workload=stream_workload,
         shard=shard,
     )
-    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
+    (
+        tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak,
+        *routing_totals,
+    ) = leaves
     result = SimResult(
-        throughput_ops_s=float(tput),
-        hit_rate=float(hit),
-        mean_latency_ms=float(mean_lat),
-        node_busy_ms=np.asarray(busy, dtype=np.float64),
-        replication_moves=float(repl),
-        deletion_moves=float(drop),
-        evictions=float(evic),
-        capacity_evictions=float(cap_evic),
-        peak_occupancy_bytes=np.asarray(peak, dtype=np.float64),
+        float(tput),
+        float(hit),
+        float(mean_lat),
+        np.asarray(busy, dtype=np.float64),
+        float(repl),
+        float(drop),
+        float(evic),
+        float(cap_evic),
+        np.asarray(peak, dtype=np.float64),
+        # (router_consults, directory_fetches, mis_routes, stale_consults)
+        # — present only when cluster.routing is enabled; the pre-routing
+        # leaf tuple is a strict prefix, so the defaults fill in otherwise.
+        *[float(x) for x in routing_totals],
     )
     if telemetry is None:
         return result
@@ -1068,6 +1267,18 @@ def _reference_engine(
     )
     pstate = static.init(store, ctx)
     contention = _contention_kwargs(cluster, static.read_mode, daemon_interval)
+    routing = _routing_kwargs(cluster, k)
+    rstate = None
+    history: list = []
+    if routing is not None:
+        rstate = init_router_state(
+            store.hosts,
+            num_routers=routing["num_routers"],
+            cache_entries=routing["cache_entries"],
+            publish_lag_chunks=routing["publish_lag_chunks"],
+            active=static.is_active,
+        )
+    r_consults = r_fetches = r_mis = r_stale = 0.0
 
     total_lat = np.zeros((n,), dtype=np.float64)
     hits = 0.0
@@ -1093,7 +1304,29 @@ def _reference_engine(
         lat, read_hits = _chunk_latency(
             store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
+        route = None
+        if routing is not None:
+            # Same routing pre-pass as the fused engine. The published view
+            # is reconstructed from a Python history of (hosts, version)
+            # chunk-start snapshots: the view at chunk c is the snapshot
+            # taken publish_lag_chunks earlier (clamped to the initial map)
+            # — exactly what the scan's ring buffer holds.
+            lag = routing["publish_lag_chunks"]
+            if static.is_active:
+                history.append((store.hosts, rstate.ver))
+                pub_hosts, pub_ver = history[max(c - lag, 0)]
+            else:
+                pub_hosts = store.hosts
+                pub_ver = jnp.zeros((k,), jnp.int32)
+            rb = router_of(nodes, routing["num_routers"])
+            ent_cached, fresh, age = consult_probe(rstate, rb, keys)
+            route, consult, fetchb, staleb, misb = routing_extra_ms_ref(
+                store.hosts, pub_hosts, ent_cached, fresh, keys, nodes,
+                is_read, jnp.ones(keys.shape, bool), rtt,
+                read_mode=static.read_mode, home_node=routing["home_node"],
+            )
         rho = None
+        extra = None
         if contention is not None:
             # Same pre-pass, same elementwise position as the fused engine
             # (reference chunks carry no padding — every row is valid).
@@ -1101,6 +1334,10 @@ def _reference_engine(
                 store.hosts, keys, nodes, is_read,
                 jnp.ones(keys.shape, bool), rtt, obj, **contention,
             )
+        if route is not None:
+            # Canonical composition order (routing first, ONE f32 add).
+            extra = route if extra is None else route + extra
+        if extra is not None:
             lat = lat + extra
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
@@ -1114,10 +1351,30 @@ def _reference_engine(
         # Per-chunk occupancy sample on the frozen map, for every policy.
         occ = np.asarray(_node_occupancy(store.hosts, obj), np.float64)
         peak_occ = np.maximum(peak_occ, occ)
+        chunk_routing = (0.0, 0.0, 0.0, 0.0)
+        age_hist = np.zeros((STALE_AGE_BINS,), np.float64)
+        if routing is not None:
+            chunk_routing = (
+                float(jnp.sum(consult)),
+                float(jnp.sum(fetchb)),
+                float(jnp.sum(misb)),
+                float(jnp.sum(staleb)),
+            )
+            r_consults += chunk_routing[0]
+            r_fetches += chunk_routing[1]
+            r_mis += chunk_routing[2]
+            r_stale += chunk_routing[3]
+            age_hist = np.asarray(stale_age_fold(age, staleb), np.float64)
+            rstate = router_cache_update(
+                rstate, rb, keys, consult, pub_ver,
+                cache_entries=routing["cache_entries"],
+                decay=routing["decay"],
+            )
         chunk_moves = (0.0, 0.0, 0.0, 0.0)
         if static.is_active:
             # Algorithm 1 bookkeeping: log usage heuristics per request.
             store = record_accesses(store, keys, nodes, now=c)
+            prev_hosts = store.hosts
             if c % static.period == 0:
                 plan, pstate, store = policy_sweep(
                     static, pstate, store, c, ctx
@@ -1132,6 +1389,13 @@ def _reference_engine(
                 drop_moves += chunk_moves[1]
                 evictions += chunk_moves[2]
                 cap_evictions += chunk_moves[3]
+            if routing is not None:
+                # Versioned publish — same bump the fused engine applies
+                # after its masked policy step (no-op when nothing moved).
+                changed = publish_mask(prev_hosts, store.hosts)
+                rstate = rstate._replace(
+                    ver=rstate.ver + changed.astype(jnp.int32)
+                )
         if telemetry is not None:
             group = nodes * 2 + is_read.astype(jnp.int32)
             w = jnp.ones(lat.shape, jnp.float32)
@@ -1152,6 +1416,11 @@ def _reference_engine(
                     np.zeros((n,), np.float64) if rho is None
                     else np.asarray(rho, np.float64)
                 ),
+                router_consults=chunk_routing[0],
+                directory_fetches=chunk_routing[1],
+                mis_routes=chunk_routing[2],
+                stale_consults=chunk_routing[3],
+                stale_age_hist=age_hist,
             ))
             raw_lats.append(np.asarray(lat, np.float64))
 
@@ -1166,6 +1435,10 @@ def _reference_engine(
         evictions=evictions,
         capacity_evictions=cap_evictions,
         peak_occupancy_bytes=peak_occ,
+        router_consults=r_consults,
+        directory_fetches=r_fetches,
+        mis_routes=r_mis,
+        stale_consults=r_stale,
     )
     if telemetry is None:
         return result, None, None
@@ -1229,17 +1502,21 @@ def confidence_interval_99(samples: np.ndarray) -> tuple:
 
 
 def _result_from_leaves(leaves, seed_idx: int) -> SimResult:
-    tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak = leaves
+    (
+        tput, hit, mean_lat, busy, repl, drop, evic, cap_evic, peak,
+        *routing_totals,
+    ) = leaves
     return SimResult(
-        throughput_ops_s=float(tput[seed_idx]),
-        hit_rate=float(hit[seed_idx]),
-        mean_latency_ms=float(mean_lat[seed_idx]),
-        node_busy_ms=np.asarray(busy[seed_idx], dtype=np.float64),
-        replication_moves=float(repl[seed_idx]),
-        deletion_moves=float(drop[seed_idx]),
-        evictions=float(evic[seed_idx]),
-        capacity_evictions=float(cap_evic[seed_idx]),
-        peak_occupancy_bytes=np.asarray(peak[seed_idx], dtype=np.float64),
+        float(tput[seed_idx]),
+        float(hit[seed_idx]),
+        float(mean_lat[seed_idx]),
+        np.asarray(busy[seed_idx], dtype=np.float64),
+        float(repl[seed_idx]),
+        float(drop[seed_idx]),
+        float(evic[seed_idx]),
+        float(cap_evic[seed_idx]),
+        np.asarray(peak[seed_idx], dtype=np.float64),
+        *[float(x[seed_idx]) for x in routing_totals],
     )
 
 

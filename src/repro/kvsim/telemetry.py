@@ -149,6 +149,14 @@ class TelemetryLeaves(NamedTuple):
     # zeros when contention is off. A point sample like occupancy: merges
     # by averaging, not summing.
     load_factor: Array | float = 0.0
+    # Routing/directory-tier counters (RoutingConfig — repro.kvsim.routing);
+    # all zeros when the tier is off. Plain additive counters: they merge
+    # and psum like hits/reads.
+    router_consults: Array | float = 0.0  # [C] directory consults
+    directory_fetches: Array | float = 0.0  # [C] cache misses (home fetches)
+    mis_routes: Array | float = 0.0  # [C] consults detoured by staleness
+    stale_consults: Array | float = 0.0  # [C] consults on stale entries
+    stale_age_hist: Array | float = 0.0  # [C, STALE_AGE_BINS] version-gap ages
 
 
 def chunk_histogram(
@@ -248,6 +256,8 @@ def psum_leaves(leaves: TelemetryLeaves, axis_name: str) -> TelemetryLeaves:
             leaves.hist, leaves.hits, leaves.reads, leaves.lat_sum,
             leaves.count, leaves.adds, leaves.drops,
             leaves.expiry_evictions, leaves.capacity_evictions,
+            leaves.router_consults, leaves.directory_fetches,
+            leaves.mis_routes, leaves.stale_consults, leaves.stale_age_hist,
         ),
         axis_name,
     )
@@ -255,6 +265,9 @@ def psum_leaves(leaves: TelemetryLeaves, axis_name: str) -> TelemetryLeaves:
         hist=summed[0], hits=summed[1], reads=summed[2], lat_sum=summed[3],
         count=summed[4], adds=summed[5], drops=summed[6],
         expiry_evictions=summed[7], capacity_evictions=summed[8],
+        router_consults=summed[9], directory_fetches=summed[10],
+        mis_routes=summed[11], stale_consults=summed[12],
+        stale_age_hist=summed[13],
     )
 
 
@@ -363,6 +376,15 @@ class SimTrace(NamedTuple):
     # [C, N] per-chunk serving-node load factor rho (all zeros when the
     # cluster has no enabled ServiceConfig — contention off).
     load_factor: np.ndarray | None = None
+    # Routing/directory-tier per-chunk series (all zeros when the cluster
+    # has no enabled RoutingConfig): consults, misses that paid a home-node
+    # fetch, stale-entry consults, staleness-detoured consults, and the
+    # [C, STALE_AGE_BINS] version-gap age histogram of stale consults.
+    router_consults: np.ndarray | None = None  # [C]
+    directory_fetches: np.ndarray | None = None  # [C]
+    mis_routes: np.ndarray | None = None  # [C]
+    stale_consults: np.ndarray | None = None  # [C]
+    stale_age_hist: np.ndarray | None = None  # [C, STALE_AGE_BINS]
 
     # -- histogram views (all simple row-sums of hist_group) ---------------
 
@@ -415,6 +437,14 @@ class SimTrace(NamedTuple):
         """P50/P90/P95/P99/P99.9 as a dict (the BENCH ``quantiles`` block)."""
         return quantile_summary(self._select(split), self.edges)
 
+    # -- routing-tier diagnostics -------------------------------------------
+
+    @property
+    def mis_route_rate(self) -> np.ndarray:
+        """``[C]`` fraction of each chunk's directory consults that were
+        detoured by a stale ownership view (0 where nothing consulted)."""
+        return self.mis_routes / np.maximum(self.router_consults, 1.0)
+
     # -- convergence / oscillation diagnostics ------------------------------
 
     def convergence_chunk(self, eps: float = 0.01) -> int:
@@ -463,4 +493,9 @@ def build_trace(
         requests=count,
         raw_latency_ms=raw_latency_ms,
         load_factor=np.asarray(leaves.load_factor, np.float64),
+        router_consults=np.asarray(leaves.router_consults, np.float64),
+        directory_fetches=np.asarray(leaves.directory_fetches, np.float64),
+        mis_routes=np.asarray(leaves.mis_routes, np.float64),
+        stale_consults=np.asarray(leaves.stale_consults, np.float64),
+        stale_age_hist=np.asarray(leaves.stale_age_hist, np.float64),
     )

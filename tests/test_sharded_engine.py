@@ -8,8 +8,10 @@ contention model enabled (its demand fold is psum'd inside
 
 Multi-rank runs use the ``run_multi_rank`` conftest fixture (fresh
 subprocess with forced virtual devices); the validation surface
-(divisibility, topk/capacity rejection, device count) is tested in-process
-because it raises before any mesh is touched.
+(topk/capacity rejection, device count) is tested in-process because it
+raises before any mesh is touched. A non-dividing ``K % S != 0`` keyspace
+is legal since PR 8: the final shard is padded with dead keys (zero bytes,
+masked out of the live map) and must stay equivalent to the unsharded run.
 """
 
 import pytest
@@ -28,7 +30,7 @@ from repro.kvsim import (run_scenario, wan5_workload, wan5_cluster,
                          RedynisPolicy, StaticPolicy, TelemetryConfig,
                          ServiceConfig)
 
-wl = wan5_workload(num_requests=20000, num_keys=500)
+wl = wan5_workload(num_requests=20000, num_keys=NUM_KEYS)
 cl = wan5_cluster()._replace(service=ServiceConfig(enabled=True))
 CASES = [
     (StaticPolicy(mode='local'), 'jax', 'materialized'),
@@ -69,23 +71,41 @@ print('SHARDED_ENGINE_EQUIVALENCE_OK')
 """
 
 
+def _script(num_shards: int, num_keys: int, cases: str | None = None) -> str:
+    script = (
+        SHARDED_EQUIVALENCE_SCRIPT
+        .replace("NUM_SHARDS", str(num_shards))
+        .replace("NUM_KEYS", str(num_keys))
+    )
+    if cases is not None:
+        script = script.replace("CASES = [", f"CASES = {cases} or [")
+    return script
+
+
 def test_sharded_matches_single_device_two_ranks(run_multi_rank):
-    script = SHARDED_EQUIVALENCE_SCRIPT.replace("NUM_SHARDS", "2")
-    out = run_multi_rank(script, num_devices=2, timeout=600)
+    out = run_multi_rank(_script(2, 500), num_devices=2, timeout=600)
     assert "SHARDED_ENGINE_EQUIVALENCE_OK" in out
 
 
 @pytest.mark.slow
 def test_sharded_matches_single_device_four_ranks(run_multi_rank):
-    script = SHARDED_EQUIVALENCE_SCRIPT.replace("NUM_SHARDS", "4")
-    out = run_multi_rank(script, num_devices=4, timeout=600)
+    out = run_multi_rank(_script(4, 500), num_devices=4, timeout=600)
     assert "SHARDED_ENGINE_EQUIVALENCE_OK" in out
 
 
-def test_num_shards_must_divide_num_keys():
-    wl = wan5_workload(num_requests=100, num_keys=501)
-    with pytest.raises(ValueError, match="divisible"):
-        run_scenario(wl, wan5_cluster(), RedynisPolicy(), seed=0, num_shards=2)
+def test_sharded_non_dividing_keyspace_two_ranks(run_multi_rank):
+    """PR-8 satellite: K=501 over 2 shards (ceil-division padding) must be
+    bit-exact on counts and allclose on f32 reductions vs the unsharded
+    run — active policy + static baseline, both trace modes."""
+    cases = (
+        "[(StaticPolicy(mode='local'), 'jax', 'materialized'),"
+        " (RedynisPolicy(), 'jax', 'materialized'),"
+        " (RedynisPolicy(), 'jax', 'streamed')]"
+    )
+    out = run_multi_rank(
+        _script(2, 501, cases), num_devices=2, timeout=600
+    )
+    assert "SHARDED_ENGINE_EQUIVALENCE_OK" in out
 
 
 def test_topk_rejected_sharded():
