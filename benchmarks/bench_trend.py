@@ -1,0 +1,315 @@
+"""Bench-trend dashboard: the perf trajectory of the checked-in baselines.
+
+Every benchmark persists a ``BENCH_<name>.json`` (``common.write_bench_json``
+stamps ``schema_version`` + ``git_commit``), and the blessed copies live in
+``benchmarks/baselines/`` — one file per benchmark, *rewritten in place* as
+PRs land. The trajectory is therefore the git history of those files: this
+tool walks ``git log`` per baseline, loads every committed revision (plus
+the working-tree copy when it differs), flattens each payload into dotted
+scalar metrics, and renders a per-metric trend table — first / previous /
+latest / Δ% — with regression flags.
+
+Regression gating is deliberately narrow: only *machine-independent* gated
+metrics are flagged (the ``checks.*`` booleans every benchmark emits, and
+counters declared in ``GATES``), because committed wall-times and
+throughputs come from whatever machine ran the blessing run. Timing columns
+still trend in the table; they just never fail CI.
+
+Usage::
+
+    python benchmarks/bench_trend.py                     # print trend tables
+    python benchmarks/bench_trend.py --fail-on-regression  # CI gate (exit 1)
+    python benchmarks/bench_trend.py --json trend.json   # machine-readable
+
+``make_report.py`` imports :func:`render_markdown` to refresh the
+``BENCH_TREND_TABLE`` block in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join("benchmarks", "baselines")
+
+# (bench glob, dotted-metric glob, mode) — the machine-independent gates.
+#   "truthy":       flag when the metric goes truthy -> falsy
+#   "non_increase": flag when the metric increases between the last two points
+GATES = [
+    ("*", "checks.*", "truthy"),
+    ("*", "*.passed", "truthy"),
+    ("*", "regressions", "non_increase"),
+]
+
+# Per-bench dotted-prefix allowlist for the EXPERIMENTS.md table (the CLI
+# always prints everything). Unknown benches fall back to all metrics.
+HEADLINE_PREFIXES = {
+    "engine_throughput": (
+        "checks.", "regressions", "wall_time_s",
+        "rows.mean.requests_per_s", "speedups.mean.",
+        "scale_acceptance.requests_per_s", "scale_acceptance.passed",
+    ),
+    "directory_staleness": (
+        "checks.", "best_static_mean_ms", "best_static_p99_ms",
+        "max_winning_lag", "wall_time_s", "lag_rows.mean.mean_latency_ms",
+        "lag_rows.mean.p99_ms",
+    ),
+    "tail_latency": (
+        "wall_time_s", "rows.mean.mean_latency_ms", "rows.mean.p999_ms",
+        "rows.mean.p50_ms",
+    ),
+    "attribution": ("checks.", "rows.mean.", "wall_time_s"),
+}
+
+
+def flatten_metrics(payload: dict) -> dict:
+    """``BENCH_*.json`` payload -> flat ``{dotted.path: float}``.
+
+    Dicts nest with ``.``; numeric scalars (bools become 0/1) are kept;
+    strings are dropped. Lists of dicts — the per-config row tables — are
+    summarised instead of exploded: each numeric field contributes its MEAN
+    under ``<list>.mean.<field>`` plus a ``<list>.len`` count, so a trend
+    over "the rows got slower on average" survives without 200 columns.
+    """
+    out: dict = {}
+
+    def walk(prefix: str, val) -> None:
+        if isinstance(val, bool):
+            out[prefix] = float(val)
+        elif isinstance(val, (int, float)):
+            out[prefix] = float(val)
+        elif isinstance(val, dict):
+            for k, v in sorted(val.items()):
+                walk(f"{prefix}.{k}" if prefix else str(k), v)
+        elif isinstance(val, list) and val and all(
+            isinstance(e, dict) for e in val
+        ):
+            out[f"{prefix}.len"] = float(len(val))
+            fields: dict = {}
+            for e in val:
+                for k, v in e.items():
+                    if isinstance(v, bool):
+                        v = float(v)
+                    if isinstance(v, (int, float)):
+                        fields.setdefault(k, []).append(float(v))
+            for k, vs in sorted(fields.items()):
+                out[f"{prefix}.mean.{k}"] = sum(vs) / len(vs)
+
+    walk("", payload.get("metrics", {}))
+    return out
+
+
+def _git(*args: str) -> str:
+    return subprocess.run(
+        ["git", *args], cwd=ROOT, capture_output=True, text=True, check=True
+    ).stdout
+
+
+def baseline_files() -> list[str]:
+    """Repo-relative paths of the checked-in baseline BENCH files."""
+    d = os.path.join(ROOT, BASELINE_DIR)
+    if not os.path.isdir(d):
+        return []
+    return sorted(
+        os.path.join(BASELINE_DIR, f)
+        for f in os.listdir(d)
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+
+
+def collect_trajectory(relpath: str) -> list[dict]:
+    """All committed revisions of one baseline file (oldest first), plus a
+    trailing ``worktree`` point when the file on disk differs from HEAD's
+    copy. Each point: ``{"rev", "bench", "schema_version", "git_commit",
+    "unix_time", "metrics": {dotted: float}}``. Unparseable revisions are
+    skipped."""
+    try:
+        revs = _git(
+            "log", "--reverse", "--format=%H", "--", relpath
+        ).split()
+    except subprocess.CalledProcessError:
+        revs = []
+    points = []
+    last_blob = None
+    for rev in revs:
+        try:
+            blob = _git("show", f"{rev}:{relpath}")
+            payload = json.loads(blob)
+        except (subprocess.CalledProcessError, json.JSONDecodeError):
+            continue
+        last_blob = blob
+        points.append(_point(rev[:10], payload))
+    disk = os.path.join(ROOT, relpath)
+    if os.path.exists(disk):
+        with open(disk) as fh:
+            blob = fh.read()
+        if blob != last_blob:
+            try:
+                points.append(_point("worktree", json.loads(blob)))
+            except json.JSONDecodeError:
+                pass
+    return points
+
+
+def _point(rev: str, payload: dict) -> dict:
+    return {
+        "rev": rev,
+        "bench": payload.get("bench", "?"),
+        "schema_version": payload.get("schema_version"),
+        "git_commit": (payload.get("git_commit") or "")[:10] or None,
+        "unix_time": payload.get("unix_time"),
+        "metrics": flatten_metrics(payload),
+    }
+
+
+def _gate_mode(bench: str, metric: str) -> str | None:
+    for bench_pat, metric_pat, mode in GATES:
+        if fnmatch.fnmatch(bench, bench_pat) and fnmatch.fnmatch(
+            metric, metric_pat
+        ):
+            return mode
+    return None
+
+
+def trend_rows(points: list[dict]) -> list[dict]:
+    """Per-metric trend over a trajectory: first / prev / last / Δ% (last
+    vs prev, ``None`` when prev is 0 or missing) / regression flag."""
+    if not points:
+        return []
+    bench = points[-1]["bench"]
+    metrics = sorted(points[-1]["metrics"])
+    rows = []
+    for m in metrics:
+        series = [p["metrics"].get(m) for p in points]
+        present = [v for v in series if v is not None]
+        last = series[-1]
+        prev = next(
+            (v for v in reversed(series[:-1]) if v is not None), None
+        )
+        first = present[0]
+        delta = (
+            100.0 * (last - prev) / abs(prev)
+            if prev not in (None, 0.0) and last is not None
+            else None
+        )
+        mode = _gate_mode(bench, m)
+        regressed = False
+        if mode == "truthy" and last is not None:
+            regressed = bool(prev) and not bool(last)
+        elif mode == "non_increase" and last is not None and prev is not None:
+            regressed = last > prev
+        rows.append(
+            {
+                "metric": m,
+                "first": first,
+                "prev": prev,
+                "last": last,
+                "delta_pct": delta,
+                "gated": mode is not None,
+                "regressed": regressed,
+            }
+        )
+    return rows
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def _table(rows: list[dict], points: list[dict]) -> list[str]:
+    n = len(points)
+    span = f"{points[0]['rev']} → {points[-1]['rev']}"
+    lines = [
+        f"{n} point{'s' if n != 1 else ''} ({span})",
+        "",
+        "| metric | first | prev | latest | Δ% | flag |",
+        "|---|---:|---:|---:|---:|---|",
+    ]
+    for r in rows:
+        if r["regressed"]:
+            flag = "**REGRESSED**"
+        elif r["gated"]:
+            flag = "gated ✓"
+        else:
+            flag = ""
+        delta = "—" if r["delta_pct"] is None else f"{r['delta_pct']:+.1f}%"
+        lines.append(
+            f"| `{r['metric']}` | {_fmt(r['first'])} | {_fmt(r['prev'])} "
+            f"| {_fmt(r['last'])} | {delta} | {flag} |"
+        )
+    return lines
+
+
+def render_markdown(headline_only: bool = True) -> tuple[str, int]:
+    """The full dashboard as markdown. Returns ``(text, num_regressions)``."""
+    out: list[str] = []
+    regressions = 0
+    for rel in baseline_files():
+        points = collect_trajectory(rel)
+        if not points:
+            continue
+        bench = points[-1]["bench"]
+        rows = trend_rows(points)
+        regressions += sum(r["regressed"] for r in rows)
+        if headline_only:
+            prefixes = HEADLINE_PREFIXES.get(bench)
+            if prefixes:
+                rows = [
+                    r
+                    for r in rows
+                    if r["regressed"]
+                    or any(r["metric"].startswith(p) for p in prefixes)
+                ]
+        out.append(f"**{bench}** — `{rel}`")
+        out.extend(_table(rows, points))
+        out.append("")
+    if not out:
+        out = ["(no committed BENCH baselines found)"]
+    return "\n".join(out).rstrip() + "\n", regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--fail-on-regression",
+        action="store_true",
+        help="exit 1 when any gated metric regressed between the last two "
+        "trajectory points",
+    )
+    ap.add_argument(
+        "--json", metavar="PATH", help="also write the trajectory as JSON"
+    )
+    ap.add_argument(
+        "--all-metrics",
+        action="store_true",
+        help="print every flattened metric, not just the headline set",
+    )
+    args = ap.parse_args(argv)
+
+    text, regressions = render_markdown(headline_only=not args.all_metrics)
+    print(text)
+    if args.json:
+        doc = {
+            rel: collect_trajectory(rel) for rel in baseline_files()
+        }
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+        print(f"WROTE,{args.json}")
+    if regressions:
+        print(f"REGRESSIONS,{regressions}")
+    if args.fail_on_regression and regressions:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

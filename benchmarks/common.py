@@ -15,11 +15,18 @@ __all__ = [
     "time_fn",
     "emit",
     "banner",
+    "git_commit",
     "write_bench_json",
     "json_rows",
     "dedupe_policies",
+    "BENCH_SCHEMA_VERSION",
     "WAN5_WORKLOAD_KWARGS",
 ]
+
+# Version stamp for the BENCH_*.json payload shape; bench_trend.py uses it
+# (with the git commit) to align and order trajectory points. Bump when a
+# top-level payload key changes meaning.
+BENCH_SCHEMA_VERSION = 1
 
 # The wan5 geo-traffic preset the policy benchmarks share (policy_matrix,
 # tail_latency): skewed sources concentrated in two hot regions. Kept here
@@ -80,6 +87,25 @@ def banner(title: str) -> None:
     print(f"\n=== {title} ===", flush=True)
 
 
+def git_commit() -> str | None:
+    """The repo's HEAD commit hash, or ``None`` outside a git checkout (the
+    bench files must stay writable from exported tarballs)."""
+    import subprocess
+
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True,
+            text=True,
+            timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
 def write_bench_json(
     name: str, metrics: dict, quantiles: dict | None = None, **meta
 ) -> str:
@@ -102,7 +128,14 @@ def write_bench_json(
     out_dir = os.environ.get("BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{name}.json")
-    payload = {"bench": name, "unix_time": time.time(), **meta, "metrics": metrics}
+    payload = {
+        "bench": name,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "git_commit": git_commit(),
+        "unix_time": time.time(),
+        **meta,
+        "metrics": metrics,
+    }
     if quantiles is not None:
         payload["quantiles"] = quantiles
     with open(path, "w") as fh:

@@ -116,6 +116,10 @@ TRENDLINE_BEGIN = "<!-- SCALE_TRENDLINE_TABLE_BEGIN -->"
 TRENDLINE_END = "<!-- SCALE_TRENDLINE_TABLE_END -->"
 ROUTING_BEGIN = "<!-- ROUTING_STALENESS_TABLE_BEGIN -->"
 ROUTING_END = "<!-- ROUTING_STALENESS_TABLE_END -->"
+ATTRIBUTION_BEGIN = "<!-- ATTRIBUTION_TABLE_BEGIN -->"
+ATTRIBUTION_END = "<!-- ATTRIBUTION_TABLE_END -->"
+BENCH_TREND_BEGIN = "<!-- BENCH_TREND_TABLE_BEGIN -->"
+BENCH_TREND_END = "<!-- BENCH_TREND_TABLE_END -->"
 
 
 def find_engine_throughput_json():
@@ -234,6 +238,78 @@ def routing_staleness_table(bench) -> str:
     return "\n".join(lines)
 
 
+def find_attribution_json():
+    """BENCH_attribution.json from $BENCH_DIR, the repo root, else the
+    checked-in baselines directory."""
+    dirs = [
+        os.environ.get("BENCH_DIR"),
+        ROOT,
+        os.path.join(ROOT, "benchmarks", "baselines"),
+    ]
+    for d in filter(None, dirs):
+        p = os.path.join(d, "BENCH_attribution.json")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def attribution_table(bench) -> str:
+    """§Observability per-policy component breakdown (wan5)."""
+    m = bench["metrics"]
+    components = m.get("components", {})
+    rows = {r["policy"]: r for r in m.get("rows", [])}
+    if not components:
+        return (
+            "(no component rows in BENCH_attribution.json — re-run "
+            "`benchmarks/latency_attribution.py`)"
+        )
+    policies = list(components)
+    comp_names = list(next(iter(components.values())))
+    header = "| component | " + " | ".join(
+        f"`{p}`" for p in policies
+    ) + " |"
+    lines = [header, "|---|" + "---|" * len(policies)]
+    for name in comp_names:
+        cells = []
+        for p in policies:
+            s = components[p][name]
+            cells.append(f"{s['mean_ms']:.2f} ({100 * s['share']:.0f}%)")
+        lines.append(f"| {name} | " + " | ".join(cells) + " |")
+    totals = " | ".join(
+        f"**{rows[p]['mean_latency_ms']:.2f}**" if p in rows else "—"
+        for p in policies
+    )
+    lines.append(f"| **total mean ms** | {totals} |")
+    lines.append("")
+    ok = all(m.get("checks", {}).values()) if m.get("checks") else None
+    lines.append(
+        f"(per-request mean ms (share of total); wan5 + ServiceConfig + "
+        f"RoutingConfig(publish_lag_chunks="
+        f"{bench.get('routing_publish_lag_chunks', '?')}), "
+        f"{bench['num_requests']:,} requests, read fraction "
+        f"{bench['read_fraction']}; component-sum-reconstructs-total "
+        f"checks: {'all pass' if ok else 'FAILING' if ok is not None else '?'}.)"
+    )
+    return "\n".join(lines)
+
+
+def bench_trend_table() -> str:
+    """§Observability bench-trend dashboard (delegates to bench_trend.py,
+    which walks the git history of benchmarks/baselines/BENCH_*.json)."""
+    try:
+        import bench_trend
+    except ImportError:
+        from benchmarks import bench_trend
+
+    text, regressions = bench_trend.render_markdown(headline_only=True)
+    if regressions:
+        text += (
+            f"\n**{regressions} gated metric(s) REGRESSED** — see "
+            f"`python benchmarks/bench_trend.py --all-metrics`.\n"
+        )
+    return text.rstrip()
+
+
 def tail_latency_table(bench) -> str:
     """§Telemetry quantile matrix from the tail_latency benchmark rows."""
     lines = [
@@ -313,6 +389,23 @@ def main() -> None:
         doc = re.sub(
             re.escape(TRENDLINE_BEGIN) + r".*?" + re.escape(TRENDLINE_END),
             f"{TRENDLINE_BEGIN}\n{trendline_table(bench)}\n{TRENDLINE_END}",
+            doc,
+            flags=re.DOTALL,
+        )
+    attr_json = find_attribution_json()
+    if attr_json is not None and ATTRIBUTION_BEGIN in doc and ATTRIBUTION_END in doc:
+        bench = load(attr_json)
+        doc = re.sub(
+            re.escape(ATTRIBUTION_BEGIN) + r".*?" + re.escape(ATTRIBUTION_END),
+            f"{ATTRIBUTION_BEGIN}\n{attribution_table(bench)}\n"
+            f"{ATTRIBUTION_END}",
+            doc,
+            flags=re.DOTALL,
+        )
+    if BENCH_TREND_BEGIN in doc and BENCH_TREND_END in doc:
+        doc = re.sub(
+            re.escape(BENCH_TREND_BEGIN) + r".*?" + re.escape(BENCH_TREND_END),
+            f"{BENCH_TREND_BEGIN}\n{bench_trend_table()}\n{BENCH_TREND_END}",
             doc,
             flags=re.DOTALL,
         )

@@ -166,6 +166,43 @@ for lag in (0, 8, 64):
         f"({beats})"
     )
 
+# --- 2e. latency provenance: WHERE do the milliseconds come from? -----------
+# attribution= decomposes every request's latency along the 8-component
+# taxonomy priced in kernels/chunk_replay/ref.py (component sums
+# reconstruct the total exactly). The head-to-head the paper's argument
+# rests on: static replication kills read RTT but pays the write-broadcast
+# leg on EVERY write, while redynis pays a small transient routing-detour
+# (stale-directory redirects while placement converges) instead. Off by
+# default — attribution=None replays the bit-exact unattributed program.
+from repro.kvsim import AttributionConfig, wan5_workload
+
+wl_at = wan5_workload(num_requests=10_000, num_keys=400, read_fraction=0.9)
+cl_at = wan5_cluster()._replace(
+    service=ServiceConfig(serve_bytes_per_ms=128.0, capacity_factor=2.0),
+    routing=RoutingConfig(publish_lag_chunks=2, cache_entries=64),
+)
+print("\nlatency attribution (wan5, 90% reads), redynis vs replicated:")
+breakdowns = {}
+for pol in (RedynisPolicy(h=0.2), StaticPolicy(mode="replicated")):
+    r, trace = run_scenario(
+        wl_at, cl_at, pol,
+        telemetry=TelemetryConfig(attribution=AttributionConfig()),
+    )
+    attr = trace.attribution
+    breakdowns[describe_policy(pol)] = attr
+    top3 = sorted(attr.items(), key=lambda kv: -kv[1]["mean_ms"])[:3]
+    parts = "  ".join(
+        f"{name}={s['mean_ms']:.1f}ms({s['share']:.0%})" for name, s in top3
+    )
+    print(f"  {describe_policy(pol):28s} mean={r.mean_latency_ms:6.1f} ms  {parts}")
+rd, st_ = breakdowns.values()
+print(
+    "  -> replicated pays the broadcast leg "
+    f"({st_['write_broadcast']['mean_ms']:.1f} ms/req), redynis trades it "
+    f"for a {rd['routing_detour']['mean_ms']:.2f} ms detour + "
+    f"{rd['directory_fetch']['mean_ms']:.2f} ms directory-fetch cost"
+)
+
 # --- 3. the same algorithm placing MoE experts ------------------------------
 ep = ExpertPlacement(num_layers=2, num_experts=16, num_nodes=4, slots=4, period=5)
 st = ep.init_state()

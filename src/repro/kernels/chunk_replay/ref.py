@@ -41,10 +41,13 @@ from repro.kernels.latency_histogram.ref import bin_index
 
 __all__ = [
     "READ_MODES",
+    "COMPONENTS",
+    "NUM_COMPONENTS",
     "nearest_replica_rtt_ref",
     "read_latency_ref",
     "write_latency_ref",
     "chunk_latency_ref",
+    "chunk_components_ref",
     "chunk_replay_ref",
     "serving_node_ref",
     "service_demand_ref",
@@ -52,9 +55,41 @@ __all__ = [
     "contention_wait_ref",
     "contention_extra_ms_ref",
     "routing_extra_ms_ref",
+    "routing_extra_split_ref",
 ]
 
 READ_MODES = ("map", "no_local", "ideal")
+
+# The latency-provenance taxonomy: every request's total latency is the sum
+# of exactly these additive components, priced HERE (the canonical oracle)
+# so the scan engine, the reference engine, both replay backends, the
+# static fast path, and the sharded mesh can never disagree on attribution.
+#
+#   service         base per-op service cost (``service_ms`` — both paths)
+#   read_rtt        nearest-visible-replica RTT (Algorithm 1, reads)
+#   write_relay     requester -> master-propagator relay leg (Algorithm 2)
+#   write_broadcast parallel post, completing at the farthest owner ack
+#   transfer        payload transfer charge (reads with no local copy;
+#                   writes whose relay+post genuinely crossed a link)
+#   contention_wait M/M/1 residence-time excess (``contention_extra_ms_ref``)
+#   routing_detour  stale-directory forward-hop + redirect detour
+#   directory_fetch router cache-miss round trip to the home node
+#
+# ``service`` is not in the issue's seven named network components but is
+# required for the reconstruction invariant (component sum == total
+# latency); the remaining rows are zero wherever the request didn't pay
+# them, so per-component histograms weight by ``component > 0``.
+COMPONENTS = (
+    "service",
+    "read_rtt",
+    "write_relay",
+    "write_broadcast",
+    "transfer",
+    "contention_wait",
+    "routing_detour",
+    "directory_fetch",
+)
+NUM_COMPONENTS = len(COMPONENTS)
 
 
 def nearest_replica_rtt_ref(rtt: Array, replicas: Array, nodes: Array) -> Array:
@@ -150,6 +185,86 @@ def chunk_latency_ref(
 
     lat = jnp.where(is_read, r_lat, w_lat)
     return lat, hit & is_read
+
+
+def chunk_components_ref(
+    hosts: Array,  # [K, N] bool frozen replica map
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    *,
+    service_ms,
+    master: int,
+    xfer_read_ms,
+    xfer_write_ms,
+    read_mode: str,
+    contention_ms: Array | None = None,  # [B] f32 (contention_extra_ms_ref)
+    routing_detour_ms: Array | None = None,  # [B] f32 (routing_extra_split_ref)
+    directory_fetch_ms: Array | None = None,  # [B] f32 (routing_extra_split_ref)
+) -> Array:
+    """Per-request latency decomposed along :data:`COMPONENTS`:
+    ``[NUM_COMPONENTS, B] f32``.
+
+    Recomputes the same sub-expressions :func:`chunk_latency_ref` composes
+    (identical f32 bits per piece) and routes each into its named row, so
+    ``components.sum(0) (+ valid mask)`` reconstructs
+    ``chunk_latency_ref(...) + extra_ms`` — allclose under f32 (the sum
+    re-associates the write path's ``(relay + post) + xfer`` grouping),
+    with every row bit-identical across engines, backends, and shardings.
+    The engine-supplied pre-pass surcharges (contention wait, routing
+    detour, directory fetch) drop straight into their rows; ``None`` rows
+    are structural zeros.
+    """
+    b = keys.shape[0]
+    zeros = jnp.zeros((b,), jnp.float32)
+    service = jnp.full((b,), service_ms, jnp.float32)
+    if read_mode == "ideal":
+        read_rtt = write_relay = write_broadcast = transfer = zeros
+    else:
+        n = rtt.shape[0]
+        replicas = hosts[keys]  # [B, N]
+        hit = replicas[jnp.arange(b), nodes]
+        if read_mode == "no_local":
+            read_replicas = replicas & (
+                jnp.arange(n)[None, :] != nodes[:, None]
+            )
+        else:
+            read_replicas = replicas
+        # Read legs — the exact pieces read_latency_ref sums.
+        nearest = nearest_replica_rtt_ref(rtt, read_replicas, nodes)
+        has_local = read_replicas[jnp.arange(b), nodes]
+        r_xfer = jnp.where(has_local, 0.0, xfer_read_ms)
+        # Write legs — the exact pieces write_latency_ref sums, with the
+        # sole-local-owner short-circuit applied per leg.
+        owner_count = jnp.sum(replicas, axis=-1)
+        sole_local = hit & (owner_count == 1)
+        if read_mode == "no_local":
+            sole_local = jnp.zeros_like(sole_local)
+        relay = jnp.where(nodes == master, 0.0, rtt[nodes, master])
+        non_master_owners = replicas & (jnp.arange(n)[None, :] != master)
+        post = jnp.max(
+            jnp.where(non_master_owners, rtt[master][None, :], 0.0), axis=-1
+        )
+        w_xfer = jnp.where(relay + post > 0, xfer_write_ms, 0.0)
+        paid = ~sole_local
+        read_rtt = jnp.where(is_read, nearest, 0.0)
+        write_relay = jnp.where(is_read, 0.0, jnp.where(paid, relay, 0.0))
+        write_broadcast = jnp.where(is_read, 0.0, jnp.where(paid, post, 0.0))
+        transfer = jnp.where(
+            is_read, r_xfer, jnp.where(paid, w_xfer, 0.0)
+        )
+    comps = [
+        service,
+        read_rtt.astype(jnp.float32),
+        write_relay.astype(jnp.float32),
+        write_broadcast.astype(jnp.float32),
+        transfer.astype(jnp.float32),
+        zeros if contention_ms is None else contention_ms,
+        zeros if routing_detour_ms is None else routing_detour_ms,
+        zeros if directory_fetch_ms is None else directory_fetch_ms,
+    ]
+    return jnp.stack(comps).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -323,13 +438,46 @@ def routing_extra_ms_ref(
         (``rtt[x, home]``), then the fetched row IS the published view, so
         the same detour applies on top.
     """
+    detour_part, fetch_part, consult, fetches, stale, mis_routed = (
+        routing_extra_split_ref(
+            hosts, pub_hosts, cached, fresh, keys, nodes, is_read, valid,
+            rtt, read_mode=read_mode, home_node=home_node,
+        )
+    )
+    return detour_part + fetch_part, consult, fetches, stale, mis_routed
+
+
+def routing_extra_split_ref(
+    hosts: Array,  # [K, N] bool — authoritative frozen map (true serving)
+    pub_hosts: Array,  # [K, N] bool — published (lagged) directory view
+    cached: Array,  # [B] bool — the consulted router caches this key
+    fresh: Array,  # [B] bool — ... at the key's current publish version
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    valid: Array,  # [B] bool
+    rtt: Array,  # [N, N] f32
+    *,
+    read_mode: str,
+    home_node: int,
+) -> tuple[Array, Array, Array, Array, Array, Array]:
+    """:func:`routing_extra_ms_ref` with the surcharge split into its two
+    provenance components: ``(detour_ms [B] f32, fetch_ms [B] f32,
+    consults [B], fetches [B], stale [B], mis_routed [B])``.
+
+    ``detour_ms + fetch_ms`` is row-wise bit-identical to the combined
+    ``extra_ms`` the un-split form always charged (per row the split is
+    ``detour + fetch`` vs ``detour + where(cached, 0, fetch)`` with the same
+    f32 add on the same operands), so the attribution layer reads the split
+    while the engines' composed surcharge keeps its exact historical bits.
+    """
     b = keys.shape[0]
     zeros_f = jnp.zeros((b,), jnp.float32)
     zeros_b = jnp.zeros((b,), bool)
     if read_mode == "ideal":
         # Ideal serves everything locally at pure service cost — there is
         # no ownership lookup to get stale.
-        return zeros_f, zeros_b, zeros_b, zeros_b, zeros_b
+        return zeros_f, zeros_f, zeros_b, zeros_b, zeros_b, zeros_b
     replicas = hosts[keys]  # [B, N]
     local = replicas[jnp.arange(b), nodes]
     if read_mode == "no_local":
@@ -345,15 +493,14 @@ def routing_extra_ms_ref(
         mis, rtt[nodes, s_pub] + rtt[s_pub, s_true] - rtt[nodes, s_true], 0.0
     ).astype(jnp.float32)
     fetch = rtt[nodes, home_node].astype(jnp.float32)
-    extra = jnp.where(
-        consult & ~fresh,
-        detour + jnp.where(cached, 0.0, fetch),
-        0.0,
+    detour_part = jnp.where(consult & ~fresh, detour, 0.0).astype(jnp.float32)
+    fetch_part = jnp.where(
+        consult & ~fresh & ~cached, fetch, 0.0
     ).astype(jnp.float32)
     fetches = consult & ~cached
     stale = consult & cached & ~fresh
     mis_routed = consult & ~fresh & mis
-    return extra, consult, fetches, stale, mis_routed
+    return detour_part, fetch_part, consult, fetches, stale, mis_routed
 
 
 def chunk_replay_ref(

@@ -70,10 +70,19 @@ from repro.kvsim.simulate import (
     run_scenario_reference,
 )
 from repro.kvsim.telemetry import (
+    COMPONENTS,
+    NUM_COMPONENTS,
     QUANTILE_LABELS,
+    AttributionConfig,
+    FlightRecorderConfig,
     SimTrace,
     TelemetryConfig,
     histogram_quantile,
+)
+from repro.kvsim.tracing import (
+    chrome_trace_events,
+    write_chrome_trace,
+    write_jsonl,
 )
 
 __all__ = [
@@ -102,8 +111,15 @@ __all__ = [
     "SimResult",
     "SimTrace",
     "TelemetryConfig",
+    "AttributionConfig",
+    "FlightRecorderConfig",
+    "COMPONENTS",
+    "NUM_COMPONENTS",
     "histogram_quantile",
     "QUANTILE_LABELS",
+    "chrome_trace_events",
+    "write_chrome_trace",
+    "write_jsonl",
     "run_scenario",
     "run_scenario_reference",
     "run_experiment",

@@ -122,8 +122,9 @@ from repro.kernels.chunk_replay.ops import (
     chunk_replay,
 )
 from repro.kernels.chunk_replay.ref import (
+    chunk_components_ref,
     contention_extra_ms_ref,
-    routing_extra_ms_ref,
+    routing_extra_split_ref,
 )
 from repro.kernels.latency_histogram.ref import bin_index
 from repro.core.policy import (
@@ -147,9 +148,12 @@ from repro.kvsim.routing import (
     stale_age_fold,
 )
 from repro.kvsim.telemetry import (
+    NUM_COMPONENTS,
     SimTrace,
     TelemetryConfig,
     TelemetryLeaves,
+    attribution_chunk_hist,
+    attribution_trace_hist,
     build_trace,
     chunk_histogram,
     leaves_quantile,
@@ -262,6 +266,22 @@ def _replay_scalars(cluster: ClusterConfig) -> dict:
         xfer_read_ms=cluster.transfer_ms(cluster.value_bytes),
         xfer_write_ms=cluster.transfer_ms(cluster.value_bytes + cluster.key_bytes),
     )
+
+
+def _flight_positions(fcfg, chunk_idx, chunk_size: int) -> Array:
+    """In-chunk sample offsets ``[S] i32`` for the flight recorder.
+
+    ``"stride"`` picks fixed equally-spaced offsets (chunk-independent, so
+    the sample plan is a loop constant); ``"reservoir"`` draws uniform
+    offsets from a counter-derived key (``fold_in(chunk)``) — deterministic
+    per chunk, identical between the scan engine and the reference loop,
+    and independent of the workload's request stream."""
+    s = fcfg.samples_per_chunk
+    if fcfg.mode == "stride":
+        stride = max(chunk_size // s, 1)
+        return (jnp.arange(s, dtype=jnp.int32) * stride) % chunk_size
+    key = jax.random.fold_in(jax.random.PRNGKey(0x9E37), chunk_idx)
+    return jax.random.randint(key, (s,), 0, chunk_size, dtype=jnp.int32)
 
 
 def _chunk_latency(
@@ -512,6 +532,12 @@ def _simulate(
     # absent from the compiled program entirely — the exact pre-routing
     # bits (goldens pinned by tests/test_routing.py).
     routing = _routing_kwargs(cluster, num_keys - shard.pad)
+    # Host-side statics: with attribution/flight off (the defaults —
+    # normalize_telemetry collapses disabled sub-configs to None) their
+    # leaves stay None, the scan emits NO extra ys, and the compiled
+    # program is structurally identical to the pre-provenance engine.
+    acfg = None if telemetry is None else telemetry.attribution
+    fcfg = None if telemetry is None else telemetry.flight
 
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
@@ -658,6 +684,61 @@ def _simulate(
             return leaves, None
         w = pv.astype(jnp.float32)
         zeros_c = jnp.zeros((num_chunks,), jnp.float32)
+        # Latency provenance on the fast path: price the WHOLE padded trace
+        # through the component oracle in one pass (the frozen map makes
+        # every component loop-invariant too; contention waits, the only
+        # chunk-varying term, fold in from the vmapped pre-pass above).
+        sa_hist = sa_sum = sf_meta = sf_vals = None
+        if acfg is not None or fcfg is not None:
+            with jax.named_scope("attribution_components"):
+                comps = chunk_components_ref(
+                    store.hosts, pk, pn, pr, rtt,
+                    read_mode=policy.read_mode,
+                    contention_ms=(
+                        None if rho_c is None else extra_c.reshape(-1)
+                    ),
+                    **_replay_scalars(cluster),
+                )
+                if pad:
+                    comps = jnp.where(pv[None, :], comps, 0.0)
+        if acfg is not None:
+            with jax.named_scope("attribution_fold"):
+                sa_hist = attribution_trace_hist(
+                    comps, pn * 2 + pr.astype(jnp.int32), w, acfg, n,
+                    num_chunks,
+                )
+                sa_sum = jnp.sum(
+                    comps.reshape(
+                        NUM_COMPONENTS, num_chunks, daemon_interval
+                    ),
+                    axis=2,
+                ).T
+        if fcfg is not None:
+            # Same sample plan as the scan body (gathered whole-trace here);
+            # the routing column is -1: routing always forces the scan path.
+            with jax.named_scope("flight_recorder"):
+                cidx = jnp.arange(num_chunks, dtype=jnp.int32)
+                jpos = jax.vmap(
+                    lambda cc: _flight_positions(fcfg, cc, daemon_interval)
+                )(cidx)
+                gpos = cidx[:, None] * daemon_interval + jpos
+                own = pv[gpos]
+                mi32 = lambda v: jnp.where(own, v, 0).astype(jnp.int32)
+                sf_meta = jnp.stack(
+                    [
+                        mi32(gpos),
+                        mi32(pk[gpos]),
+                        mi32(pn[gpos]),
+                        mi32(jnp.full_like(gpos, -1)),
+                        mi32(pr[gpos].astype(jnp.int32) | 2),
+                    ],
+                    axis=2,
+                )
+                scomps = comps[:, gpos]
+                sf_vals = jnp.concatenate(
+                    [jnp.sum(scomps, axis=0, keepdims=True), scomps],
+                    axis=0,
+                ).transpose(1, 2, 0)
         if (
             slot_idx is not None
             and telemetry.backend != "pallas"
@@ -701,6 +782,10 @@ def _simulate(
             stale_age_hist=jnp.zeros(
                 (num_chunks, STALE_AGE_BINS), jnp.float32
             ),
+            attr_hist=sa_hist,
+            attr_sum=sa_sum,
+            flight_meta=sf_meta,
+            flight_vals=sf_vals,
         )
         return leaves, ys
 
@@ -766,48 +851,76 @@ def _simulate(
             mine = (ck // kps) == shard_idx
             ck = jnp.where(mine, ck - shard_base, 0)
             cv = cv & mine
-        route = None
+        route = detour_part = fetch_part = None
         if routing is not None:
             # Routing pre-pass on the chunk's frozen map: consult the
             # region's router cache against the PUBLISHED (possibly lagged)
             # ownership view and price fresh hits / stale mis-routes /
-            # directory fetches per request (routing_extra_ms_ref is the
-            # canonical oracle both replay backends consume).
-            rstate, r_consults, r_fetches, r_mis, r_stale = rcarry
-            pub_hosts, pub_ver = published_view(
-                rstate, store.hosts, c,
-                publish_lag_chunks=routing["publish_lag_chunks"],
-            )
-            rb = router_of(cn, routing["num_routers"])
-            ent_cached, fresh, age = consult_probe(rstate, rb, ck)
-            route, consult, fetchb, staleb, misb = routing_extra_ms_ref(
-                store.hosts, pub_hosts, ent_cached, fresh, ck, cn, cr, cv,
-                rtt, read_mode=policy.read_mode,
-                home_node=routing["home_node"],
-            )
+            # directory fetches per request (routing_extra_split_ref is the
+            # canonical oracle both replay backends consume; the
+            # detour/fetch split is row-wise bit-identical to the fused
+            # surcharge, so ``route`` carries the exact pre-split bits).
+            with jax.named_scope("routing_prepass"):
+                rstate, r_consults, r_fetches, r_mis, r_stale = rcarry
+                pub_hosts, pub_ver = published_view(
+                    rstate, store.hosts, c,
+                    publish_lag_chunks=routing["publish_lag_chunks"],
+                )
+                rb = router_of(cn, routing["num_routers"])
+                ent_cached, fresh, age = consult_probe(rstate, rb, ck)
+                (
+                    detour_part, fetch_part, consult, fetchb, staleb, misb,
+                ) = routing_extra_split_ref(
+                    store.hosts, pub_hosts, ent_cached, fresh, ck, cn, cr,
+                    cv, rtt, read_mode=policy.read_mode,
+                    home_node=routing["home_node"],
+                )
+                route = detour_part + fetch_part
         rho = None
-        extra = None
+        cont_extra = None
         if contention is not None:
             # Queueing pre-pass on the chunk's frozen map: per-request
             # contention wait + per-node load factor (the canonical
             # composition both replay backends consume). Sharded, each
             # shard folds its own requests' demand and the psum inside
             # load_factor_ref assembles the cluster-wide rho.
-            extra, rho = contention_extra_ms_ref(
-                store.hosts, ck, cn, cr, cv, rtt, obj_local, **contention,
-                axis_name=shard.axis_name if shard.active else None,
-            )
+            with jax.named_scope("contention_prepass"):
+                cont_extra, rho = contention_extra_ms_ref(
+                    store.hosts, ck, cn, cr, cv, rtt, obj_local,
+                    **contention,
+                    axis_name=shard.axis_name if shard.active else None,
+                )
+        extra = cont_extra
         if route is not None:
             # Canonical composition order (routing first, ONE f32 add):
             # every engine and backend folds the same composed surcharge at
             # the same elementwise position, so the bits agree everywhere.
             extra = route if extra is None else route + extra
+        comps = None
+        if acfg is not None or fcfg is not None:
+            # Latency provenance: re-price this chunk through the component
+            # oracle (identical sub-expressions to chunk_latency_ref, so
+            # the per-request component sum reconstructs the total — see
+            # tests/test_attribution.py). Invalid/foreign rows zero out.
+            with jax.named_scope("attribution_components"):
+                comps = chunk_components_ref(
+                    store.hosts, ck, cn, cr, rtt,
+                    read_mode=policy.read_mode,
+                    contention_ms=cont_extra,
+                    routing_detour_ms=detour_part,
+                    directory_fetch_ms=fetch_part,
+                    **scalars,
+                )
+                comps = jnp.where(cv[None, :], comps, 0.0)
         if replay_backend == "pallas":
             # The fused one-pass kernel: gather, latency, hit flags, busy
             # fold — and the telemetry histogram when enabled — in one
             # pass over request tiles (no [B, N] HBM intermediates).
-            d_busy, chunk_lat, chunk_hits, chunk_reads, chunk_count, hist = (
-                chunk_replay(
+            with jax.named_scope("chunk_replay"):
+                (
+                    d_busy, chunk_lat, chunk_hits, chunk_reads, chunk_count,
+                    hist,
+                ) = chunk_replay(
                     store.hosts, ck, cn, cr, cv, rtt,
                     read_mode=policy.read_mode,
                     num_bins=0 if telemetry is None else telemetry.num_bins,
@@ -817,20 +930,20 @@ def _simulate(
                     extra_ms=extra,
                     **scalars,
                 )
-            )
             busy = busy + d_busy
         else:
             # Pure-jnp path, op-for-op the pre-fusion engine (bit-exact
             # with the seed goldens, including the carry-scatter busy).
-            lat, read_hits = _chunk_latency(
-                store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
-            )
-            if extra is not None:
-                # Same elementwise position as chunk_replay_ref: after the
-                # base latency, before the validity mask — identical bits
-                # across engines and backends.
-                lat = lat + extra
-            lat = jnp.where(cv, lat, 0.0)
+            with jax.named_scope("chunk_replay"):
+                lat, read_hits = _chunk_latency(
+                    store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
+                )
+                if extra is not None:
+                    # Same elementwise position as chunk_replay_ref: after
+                    # the base latency, before the validity mask —
+                    # identical bits across engines and backends.
+                    lat = lat + extra
+                lat = jnp.where(cv, lat, 0.0)
             chunk_lat = jnp.sum(lat)
             chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
             chunk_reads = jnp.sum((cr & cv).astype(jnp.float32))
@@ -875,11 +988,12 @@ def _simulate(
             # Algorithm 1 bookkeeping: log usage heuristics per request
             # (sharded: only the shard's own rows fold into its local
             # store — foreign rows are already masked out of cv).
-            store = record_accesses(store, ck, cn, now=c, valid=cv)
-            prev_hosts = store.hosts
-            stats, pstate, store = policy_masked_step(
-                policy, pstate, store, c, (c % policy.period) == 0, ctx
-            )
+            with jax.named_scope("policy_step"):
+                store = record_accesses(store, ck, cn, now=c, valid=cv)
+                prev_hosts = store.hosts
+                stats, pstate, store = policy_masked_step(
+                    policy, pstate, store, c, (c % policy.period) == 0, ctx
+                )
             repl = repl + stats.adds
             drop = drop + stats.drops
             evic = evic + stats.expiry_evictions
@@ -910,6 +1024,52 @@ def _simulate(
                     lat, cn * 2 + cr.astype(jnp.int32),
                     cv.astype(jnp.float32), telemetry, n,
                 )
+            ahist = asum = fmeta = fvals = None
+            if acfg is not None:
+                # Per-component grouped histograms + per-chunk component
+                # sums. ALWAYS the pure-jnp scatter-add, regardless of
+                # replay backend — integer counts are bit-exact across
+                # jax/pallas by construction.
+                with jax.named_scope("attribution_fold"):
+                    ahist = attribution_chunk_hist(
+                        comps, cn * 2 + cr.astype(jnp.int32),
+                        cv.astype(jnp.float32), acfg, n,
+                    )
+                    asum = jnp.sum(comps, axis=1)
+            if fcfg is not None:
+                # Flight recorder: sample S in-chunk offsets and capture
+                # each sampled request's identity + component vector.
+                # EVERY field is masked by ownership/validity (zeros
+                # otherwise, valid bit 0) — sharded, at most one shard
+                # contributes a given slot and psum IS the assembly
+                # (LEAF_KINDS kind "records").
+                with jax.named_scope("flight_recorder"):
+                    jpos = _flight_positions(fcfg, c, daemon_interval)
+                    own = cv[jpos]
+                    gpos = c * daemon_interval + jpos
+                    gkey = (
+                        ck[jpos] + shard_base if shard.active else ck[jpos]
+                    )
+                    srouter = (
+                        rb[jpos] if routing is not None
+                        else jnp.full_like(jpos, -1)
+                    )
+                    mi32 = lambda v: jnp.where(own, v, 0).astype(jnp.int32)
+                    fmeta = jnp.stack(
+                        [
+                            mi32(gpos),
+                            mi32(gkey),
+                            mi32(cn[jpos]),
+                            mi32(srouter),
+                            mi32(cr[jpos].astype(jnp.int32) | 2),
+                        ],
+                        axis=1,
+                    )
+                    scomps = comps[:, jpos]  # masked via comps' cv zeroing
+                    fvals = jnp.concatenate(
+                        [jnp.sum(scomps, axis=0, keepdims=True), scomps],
+                        axis=0,
+                    ).T
             ys = TelemetryLeaves(
                 hist=hist,
                 hits=chunk_hits,
@@ -932,6 +1092,10 @@ def _simulate(
                     jnp.zeros((STALE_AGE_BINS,), jnp.float32)
                     if routing is None else d_age
                 ),
+                attr_hist=ahist,
+                attr_sum=asum,
+                flight_meta=fmeta,
+                flight_vals=fvals,
             )
         rcarry = (
             None if routing is None
@@ -1245,12 +1409,16 @@ def _reference_engine(
     seed: int,
     daemon_interval: int,
     telemetry: TelemetryConfig | None,
-) -> tuple[SimResult, TelemetryLeaves | None, np.ndarray | None]:
+) -> tuple[
+    SimResult, TelemetryLeaves | None, np.ndarray | None, np.ndarray | None
+]:
     """The retained per-chunk Python loop. Returns ``(result, telemetry
-    leaves | None, raw per-request latencies | None)`` — the raw latencies
-    are what the histogram-quantile tests compare ``np.percentile``
-    against, and only this engine materialises them (the fused scan never
-    leaves the device)."""
+    leaves | None, raw per-request latencies | None, raw per-request
+    component matrix | None)`` — the raw latencies are what the
+    histogram-quantile tests compare ``np.percentile`` against, and only
+    this engine materialises them (the fused scan never leaves the
+    device). The raw ``[NUM_COMPONENTS, R]`` component matrix is the
+    attribution analogue (present only with attribution/flight enabled)."""
     trace = generate_trace(workload, seed)
     k, n, r = workload.num_keys, workload.num_nodes, workload.num_requests
     rtt = cluster.rtt_matrix()
@@ -1293,6 +1461,9 @@ def _reference_engine(
     )
     telem: list = []
     raw_lats: list = []
+    raw_comps: list = []
+    acfg = None if telemetry is None else telemetry.attribution
+    fcfg = None if telemetry is None else telemetry.flight
 
     num_chunks = (r + daemon_interval - 1) // daemon_interval
     for c in range(num_chunks):
@@ -1304,7 +1475,7 @@ def _reference_engine(
         lat, read_hits = _chunk_latency(
             store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
-        route = None
+        route = detour_part = fetch_part = None
         if routing is not None:
             # Same routing pre-pass as the fused engine. The published view
             # is reconstructed from a Python history of (hosts, version)
@@ -1320,25 +1491,41 @@ def _reference_engine(
                 pub_ver = jnp.zeros((k,), jnp.int32)
             rb = router_of(nodes, routing["num_routers"])
             ent_cached, fresh, age = consult_probe(rstate, rb, keys)
-            route, consult, fetchb, staleb, misb = routing_extra_ms_ref(
+            (
+                detour_part, fetch_part, consult, fetchb, staleb, misb,
+            ) = routing_extra_split_ref(
                 store.hosts, pub_hosts, ent_cached, fresh, keys, nodes,
                 is_read, jnp.ones(keys.shape, bool), rtt,
                 read_mode=static.read_mode, home_node=routing["home_node"],
             )
+            route = detour_part + fetch_part
         rho = None
-        extra = None
+        cont_extra = None
         if contention is not None:
             # Same pre-pass, same elementwise position as the fused engine
             # (reference chunks carry no padding — every row is valid).
-            extra, rho = contention_extra_ms_ref(
+            cont_extra, rho = contention_extra_ms_ref(
                 store.hosts, keys, nodes, is_read,
                 jnp.ones(keys.shape, bool), rtt, obj, **contention,
             )
+        extra = cont_extra
         if route is not None:
             # Canonical composition order (routing first, ONE f32 add).
             extra = route if extra is None else route + extra
         if extra is not None:
             lat = lat + extra
+        comps = None
+        if acfg is not None or fcfg is not None:
+            # Same component oracle as the fused engine, on the same frozen
+            # map and pre-pass outputs (reference chunks have no padding).
+            comps = chunk_components_ref(
+                store.hosts, keys, nodes, is_read, rtt,
+                read_mode=static.read_mode,
+                contention_ms=cont_extra,
+                routing_detour_ms=detour_part,
+                directory_fetch_ms=fetch_part,
+                **_replay_scalars(cluster),
+            )
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
         chunk_lat = float(jnp.sum(lat))
@@ -1399,6 +1586,43 @@ def _reference_engine(
         if telemetry is not None:
             group = nodes * 2 + is_read.astype(jnp.int32)
             w = jnp.ones(lat.shape, jnp.float32)
+            ahist = asum = fmeta = fvals = None
+            if acfg is not None:
+                ahist = np.asarray(
+                    attribution_chunk_hist(comps, group, w, acfg, n),
+                    np.float64,
+                )
+                asum = np.asarray(jnp.sum(comps, axis=1), np.float64)
+            if fcfg is not None:
+                # Same per-chunk sample plan as the scan engine; offsets
+                # past this (possibly short, final) chunk's length are
+                # masked exactly like the scan masks its padded tail.
+                b = int(lat.shape[0])
+                jpos = np.asarray(
+                    _flight_positions(fcfg, c, daemon_interval)
+                )
+                own = jpos < b
+                jc = np.minimum(jpos, b - 1)
+                mi = lambda v: np.where(own, v, 0).astype(np.int64)
+                router_np = (
+                    np.asarray(rb, np.int64) if routing is not None
+                    else np.full((b,), -1, np.int64)
+                )
+                fmeta = np.stack(
+                    [
+                        mi(lo + jpos),
+                        mi(np.asarray(keys)[jc]),
+                        mi(np.asarray(nodes)[jc]),
+                        mi(router_np[jc]),
+                        mi(np.asarray(is_read)[jc].astype(np.int64) | 2),
+                    ],
+                    axis=1,
+                )
+                comps_np = np.asarray(comps, np.float64)
+                scomps = np.where(own[None, :], comps_np[:, jc], 0.0)
+                fvals = np.concatenate(
+                    [scomps.sum(axis=0, keepdims=True), scomps], axis=0
+                ).T
             telem.append(TelemetryLeaves(
                 hist=np.asarray(
                     chunk_histogram(lat, group, w, telemetry, n), np.float64
@@ -1421,8 +1645,14 @@ def _reference_engine(
                 mis_routes=chunk_routing[2],
                 stale_consults=chunk_routing[3],
                 stale_age_hist=age_hist,
+                attr_hist=ahist,
+                attr_sum=asum,
+                flight_meta=fmeta,
+                flight_vals=fvals,
             ))
             raw_lats.append(np.asarray(lat, np.float64))
+            if comps is not None:
+                raw_comps.append(np.asarray(comps, np.float64))
 
     makespan_ms = float(total_lat.max())
     result = SimResult(
@@ -1441,9 +1671,10 @@ def _reference_engine(
         stale_consults=r_stale,
     )
     if telemetry is None:
-        return result, None, None
+        return result, None, None, None
     leaves = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *telem)
-    return result, leaves, np.concatenate(raw_lats)
+    raw_c = np.concatenate(raw_comps, axis=1) if raw_comps else None
+    return result, leaves, np.concatenate(raw_lats), raw_c
 
 
 def run_scenario_reference(
@@ -1466,12 +1697,14 @@ def run_scenario_reference(
         workload, cluster, "run_scenario_reference", policy
     )
     telemetry = normalize_telemetry(telemetry)
-    result, leaves, raw = _reference_engine(
+    result, leaves, raw, raw_c = _reference_engine(
         workload, cluster, static, params, seed, daemon_interval, telemetry
     )
     if telemetry is None:
         return result
-    return result, build_trace(leaves, telemetry, raw_latency_ms=raw)
+    return result, build_trace(
+        leaves, telemetry, raw_latency_ms=raw, raw_components=raw_c
+    )
 
 
 def confidence_interval_99(samples: np.ndarray) -> tuple:
@@ -1666,7 +1899,7 @@ def run_experiment(
                 static, params = split_policy(pol)
                 results, leaves = [], []
                 for it in range(iterations):
-                    res, lv, _ = _reference_engine(
+                    res, lv, _, _ = _reference_engine(
                         wl, cluster, static, params, it, daemon_interval,
                         telemetry,
                     )

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import Array
 
+from repro.kernels.chunk_replay.ref import COMPONENTS, NUM_COMPONENTS
 from repro.kernels.latency_histogram.ref import (
     bin_edges,
     bin_index,
@@ -54,11 +55,16 @@ from repro.kernels.latency_histogram.ref import (
 )
 
 __all__ = [
+    "AttributionConfig",
+    "FlightRecorderConfig",
     "TelemetryConfig",
     "TelemetryLeaves",
+    "LEAF_KINDS",
     "SimTrace",
     "chunk_histogram",
     "trace_histogram",
+    "attribution_chunk_hist",
+    "attribution_trace_hist",
     "merge_leaves",
     "psum_leaves",
     "build_trace",
@@ -68,12 +74,95 @@ __all__ = [
     "quantile_summary",
     "normalize_telemetry",
     "QUANTILE_LABELS",
+    "COMPONENTS",
+    "NUM_COMPONENTS",
+    "FLIGHT_META_FIELDS",
 ]
 
 TELEMETRY_BACKENDS = ("jax", "pallas")
+FLIGHT_SAMPLING_MODES = ("stride", "reservoir")
+
+# Column order of the flight recorder's integer record plane (see
+# :class:`FlightRecorderConfig`): ``flags`` packs bit 0 = is_read,
+# bit 1 = valid (a cleared valid bit marks an unsampled / padded slot).
+FLIGHT_META_FIELDS = ("pos", "key", "node", "router", "flags")
 
 # The canonical report quantiles: label -> q.
 QUANTILE_LABELS = {"p50": 0.5, "p90": 0.9, "p95": 0.95, "p99": 0.99, "p999": 0.999}
+
+
+class AttributionConfig(NamedTuple):
+    """Latency-provenance knobs (hashable — nests inside the
+    :class:`TelemetryConfig` jit static).
+
+    When enabled the engines decompose every request's latency along the
+    canonical :data:`~repro.kernels.chunk_replay.ref.COMPONENTS` taxonomy
+    (priced in ``kernels/chunk_replay/ref.py``) and fold per-component
+    grouped ``[2N, num_bins]`` histograms plus per-chunk component sums
+    through the scan. Components get their own bin range: the default
+    ``lo_ms=0.01`` floor sits two decades below the total-latency floor
+    because individual legs (base service cost, short detours) are often
+    sub-millisecond and would otherwise all collapse into the underflow
+    bucket. Per-component histograms weight by ``component > 0`` — a row
+    counts only the requests that actually paid that component.
+    Off (``None`` on the telemetry config) by default: the compiled
+    program is structurally identical and results stay bit-exact.
+    """
+
+    enabled: bool = True
+    num_bins: int = 64
+    lo_ms: float = 0.01
+    hi_ms: float = 10_000.0
+
+    def validate(self) -> None:
+        if self.num_bins < 4:
+            raise ValueError(
+                f"attribution num_bins must be >= 4, got {self.num_bins}"
+            )
+        if not (0.0 < self.lo_ms < self.hi_ms):
+            raise ValueError(
+                f"attribution needs 0 < lo_ms < hi_ms, got lo_ms="
+                f"{self.lo_ms} hi_ms={self.hi_ms}"
+            )
+
+    def edges(self) -> np.ndarray:
+        """Host-side ``[num_bins + 1]`` bin edges: ``[0, lo, ..., hi, inf]``."""
+        return bin_edges(self.lo_ms, self.hi_ms, self.num_bins)
+
+
+class FlightRecorderConfig(NamedTuple):
+    """Sampled per-request structured records (hashable — nests inside the
+    :class:`TelemetryConfig` jit static).
+
+    Each chunk contributes ``samples_per_chunk`` records captured as scan
+    ``ys``: an integer plane (:data:`FLIGHT_META_FIELDS` — global request
+    position, key, requesting node, router or -1, is_read/valid flags) and
+    a float plane ``[1 + NUM_COMPONENTS]`` (total latency followed by the
+    component vector, so every record satisfies the reconstruction
+    invariant by construction). ``mode="stride"`` samples fixed equally
+    spaced in-chunk offsets (deterministic, identical across engines,
+    backends, and shardings); ``"reservoir"`` draws uniform in-chunk
+    offsets from a counter-based fold of the chunk index (still
+    deterministic per chunk, but unbiased across in-chunk position for
+    periodic workloads). Export via ``repro.kvsim.tracing`` (JSON-lines or
+    Chrome trace-event format).
+    """
+
+    enabled: bool = True
+    samples_per_chunk: int = 8
+    mode: str = "stride"
+
+    def validate(self) -> None:
+        if self.samples_per_chunk < 1:
+            raise ValueError(
+                f"flight samples_per_chunk must be >= 1, got "
+                f"{self.samples_per_chunk}"
+            )
+        if self.mode not in FLIGHT_SAMPLING_MODES:
+            raise ValueError(
+                f"unknown flight sampling mode {self.mode!r}; expected one "
+                f"of {FLIGHT_SAMPLING_MODES}"
+            )
 
 
 class TelemetryConfig(NamedTuple):
@@ -95,6 +184,12 @@ class TelemetryConfig(NamedTuple):
     lo_ms: float = 1.0
     hi_ms: float = 10_000.0
     backend: str = "jax"
+    # Latency-provenance sub-layers, both off by default (None — the
+    # structurally-identical bit-exact program). normalize_telemetry
+    # collapses a disabled sub-config to None so both spellings hit the
+    # same jit cache entry.
+    attribution: AttributionConfig | None = None
+    flight: FlightRecorderConfig | None = None
 
     def validate(self) -> None:
         if self.num_bins < 4:
@@ -120,11 +215,23 @@ class TelemetryConfig(NamedTuple):
 
 def normalize_telemetry(telemetry) -> TelemetryConfig | None:
     """``None``-or-disabled collapses to ``None`` so the jit static cache
-    (and the structural no-op guarantee) treats both spellings identically."""
+    (and the structural no-op guarantee) treats both spellings identically.
+    The nested attribution/flight sub-configs get the same treatment:
+    disabled collapses to ``None`` (their bit-exact off state)."""
     if telemetry is None or not telemetry.enabled:
         return None
     telemetry.validate()
-    return telemetry
+    attribution = telemetry.attribution
+    if attribution is not None and not attribution.enabled:
+        attribution = None
+    if attribution is not None:
+        attribution.validate()
+    flight = telemetry.flight
+    if flight is not None and not flight.enabled:
+        flight = None
+    if flight is not None:
+        flight.validate()
+    return telemetry._replace(attribution=attribution, flight=flight)
 
 
 class TelemetryLeaves(NamedTuple):
@@ -157,6 +264,55 @@ class TelemetryLeaves(NamedTuple):
     mis_routes: Array | float = 0.0  # [C] consults detoured by staleness
     stale_consults: Array | float = 0.0  # [C] consults on stale entries
     stale_age_hist: Array | float = 0.0  # [C, STALE_AGE_BINS] version-gap ages
+    # Latency-provenance leaves (AttributionConfig / FlightRecorderConfig —
+    # None when the sub-layer is off: a None field is an EMPTY pytree node,
+    # so the disabled scan emits no extra ys and the compiled program stays
+    # structurally identical to the pre-attribution engine).
+    attr_hist: Array | None = None  # [C, NUM_COMPONENTS, 2N, Ba] counts
+    attr_sum: Array | None = None  # [C, NUM_COMPONENTS] summed ms
+    flight_meta: Array | None = None  # [C, S, 5] i32 (FLIGHT_META_FIELDS)
+    flight_vals: Array | None = None  # [C, S, 1 + NUM_COMPONENTS] f32
+
+
+# The single merge contract every leaf declares itself under (the
+# exhaustive taxonomy test pins LEAF_KINDS == TelemetryLeaves._fields, so a
+# new leaf CANNOT silently skip the shard fold or the batch merge):
+#
+#   "sum"     additive counter/histogram. Shard fold: ``psum`` (integer-
+#             valued f32 counts sum exactly, so sharded histograms stay
+#             bit-identical). Batch merge (seeds / policy rows): sum.
+#   "mean"    point sample of global state (occupancy, load factor) —
+#             already psum-assembled at the sample point inside the scan
+#             body, so the shard fold passes it through untouched; the
+#             batch merge averages (summing would inflate by batch size).
+#   "records" structured samples (flight recorder). Shard fold: ``psum``
+#             IS the assembly — every sampled slot is contributed by at
+#             most the one shard owning its request (others send zeros),
+#             so the sum reconstructs the record exactly. Batch merge:
+#             keep row 0's records (summing across seeds would corrupt
+#             them; a merged trace documents seed/policy-row 0's flight).
+LEAF_KINDS = {
+    "hist": "sum",
+    "hits": "sum",
+    "reads": "sum",
+    "lat_sum": "sum",
+    "count": "sum",
+    "adds": "sum",
+    "drops": "sum",
+    "expiry_evictions": "sum",
+    "capacity_evictions": "sum",
+    "occupancy": "mean",
+    "load_factor": "mean",
+    "router_consults": "sum",
+    "directory_fetches": "sum",
+    "mis_routes": "sum",
+    "stale_consults": "sum",
+    "stale_age_hist": "sum",
+    "attr_hist": "sum",
+    "attr_sum": "sum",
+    "flight_meta": "records",
+    "flight_vals": "records",
+}
 
 
 def chunk_histogram(
@@ -221,54 +377,114 @@ def trace_histogram(
     return hist.reshape(num_chunks, g, cfg.num_bins).astype(jnp.float32)
 
 
+def attribution_chunk_hist(
+    comps: Array,  # [NUM_COMPONENTS, B] per-request component ms (masked)
+    group: Array,  # [B] i32 group id = node * 2 + is_read
+    weight: Array,  # [B] f32, 0 masks padded/foreign rows
+    acfg: AttributionConfig,
+    num_nodes: int,
+) -> Array:
+    """One chunk's ``[NUM_COMPONENTS, 2N, Ba]`` per-component grouped
+    histograms. Always the pure-jnp scatter-add, whatever the replay
+    backend: a component count is an integer fold, so one shared
+    implementation is what makes attribution histograms bit-identical
+    across the jax/pallas backends (and across shardings, via psum). Each
+    component row weights by ``component > 0`` — only requests that
+    actually paid the component are counted in its distribution."""
+
+    def one(comp: Array) -> Array:
+        w = weight * (comp > 0).astype(jnp.float32)
+        return latency_histogram_ref(
+            comp, group, w,
+            num_groups=2 * num_nodes, num_bins=acfg.num_bins,
+            lo=jnp.float32(acfg.lo_ms), hi=jnp.float32(acfg.hi_ms),
+        )
+
+    return jax.vmap(one)(comps)
+
+
+def attribution_trace_hist(
+    comps: Array,  # [NUM_COMPONENTS, C * B] whole-trace components (masked)
+    group: Array,  # [C * B] i32 group id = node * 2 + is_read
+    weight: Array,  # [C * B] f32, 0 masks padded rows
+    acfg: AttributionConfig,
+    num_nodes: int,
+    num_chunks: int,
+) -> Array:
+    """The whole trace's ``[C, NUM_COMPONENTS, 2N, Ba]`` per-chunk
+    attribution histograms in ONE flat bincount — the static-fast-path
+    companion of :func:`attribution_chunk_hist` (counts are integers, so
+    the result is bit-identical to C per-chunk scatter-adds)."""
+    g = 2 * num_nodes
+    ncomp, rp = comps.shape
+    b = rp // num_chunks
+    chunk = jnp.arange(rp, dtype=jnp.int32) // b
+    idx = bin_index(comps, acfg.lo_ms, acfg.hi_ms, acfg.num_bins)
+    w = weight[None, :] * (comps > 0).astype(jnp.float32)
+    comp_ids = jnp.arange(ncomp, dtype=jnp.int32)[:, None]
+    flat = (
+        (chunk[None, :] * ncomp + comp_ids) * g + group[None, :]
+    ) * acfg.num_bins + idx
+    hist = jnp.bincount(
+        flat.reshape(-1), weights=w.reshape(-1),
+        length=num_chunks * ncomp * g * acfg.num_bins,
+    )
+    return hist.reshape(
+        num_chunks, ncomp, g, acfg.num_bins
+    ).astype(jnp.float32)
+
+
 def merge_leaves(leaves: TelemetryLeaves, axis: int = 0) -> TelemetryLeaves:
-    """Merge a batch axis away (seeds, policy rows). Histograms and
-    counters are additive and *sum*; the derived rates/quantiles are then
-    recomputed from the merged sums by :func:`build_trace`. ``occupancy``
-    and ``load_factor`` are point samples, not counters — summing would
-    inflate them by the batch size — so they *average* across the batch
-    instead."""
+    """Merge a batch axis away (seeds, policy rows), leaf-by-leaf per the
+    :data:`LEAF_KINDS` contract: ``"sum"`` leaves sum (the derived
+    rates/quantiles are recomputed from the merged sums by
+    :func:`build_trace`), ``"mean"`` point samples average (summing would
+    inflate them by the batch size), ``"records"`` keep batch row 0's
+    samples. ``None`` leaves (disabled sub-layers) pass through."""
     n = np.asarray(leaves.occupancy).shape[axis]
-    merged = jax.tree_util.tree_map(
-        lambda a: np.asarray(a, dtype=np.float64).sum(axis=axis), leaves
-    )
-    return merged._replace(
-        occupancy=merged.occupancy / n,
-        load_factor=merged.load_factor / n,
-    )
+    merged = {}
+    for name, kind in LEAF_KINDS.items():
+        leaf = getattr(leaves, name)
+        if leaf is None:
+            merged[name] = None
+            continue
+        a = np.asarray(leaf, dtype=np.float64)
+        if a.ndim == 0:
+            merged[name] = a  # disabled scalar leaf: nothing to merge
+        elif kind == "sum":
+            merged[name] = a.sum(axis=axis)
+        elif kind == "mean":
+            merged[name] = a.sum(axis=axis) / n
+        else:  # records
+            merged[name] = np.take(a, 0, axis=axis)
+    return TelemetryLeaves(**merged)
 
 
 def psum_leaves(leaves: TelemetryLeaves, axis_name: str) -> TelemetryLeaves:
     """Merge per-shard telemetry into global telemetry inside a key-sharded
-    ``shard_map`` program — the collective twin of :func:`merge_leaves`.
+    ``shard_map`` program — the collective twin of :func:`merge_leaves`,
+    driven by the same :data:`LEAF_KINDS` contract so a new leaf cannot
+    skip the shard fold by omission (the taxonomy test fails instead).
 
-    Every additive leaf (histograms, hit/read/latency/request counters,
-    daemon move counters) psums across the shard axis; histogram counts are
-    integer-valued f32 sums, so the psum is *exact* and sharded histograms
-    stay bit-identical to single-device ones (the merge is sum-associative
-    — the same property the seed-merge tests pin). ``occupancy`` and
-    ``load_factor`` pass through untouched: the engine already assembles
-    those as global values inside the scan body (occupancy is psum'd at the
-    sample point so the running *peak* is taken over the global vector;
-    the load factor's demand fold psums inside the contention pre-pass)."""
-    summed = jax.lax.psum(
-        (
-            leaves.hist, leaves.hits, leaves.reads, leaves.lat_sum,
-            leaves.count, leaves.adds, leaves.drops,
-            leaves.expiry_evictions, leaves.capacity_evictions,
-            leaves.router_consults, leaves.directory_fetches,
-            leaves.mis_routes, leaves.stale_consults, leaves.stale_age_hist,
-        ),
-        axis_name,
-    )
-    return leaves._replace(
-        hist=summed[0], hits=summed[1], reads=summed[2], lat_sum=summed[3],
-        count=summed[4], adds=summed[5], drops=summed[6],
-        expiry_evictions=summed[7], capacity_evictions=summed[8],
-        router_consults=summed[9], directory_fetches=summed[10],
-        mis_routes=summed[11], stale_consults=summed[12],
-        stale_age_hist=summed[13],
-    )
+    ``"sum"`` leaves (histograms, hit/read/latency/request counters, daemon
+    move counters, attribution counters) psum across the shard axis;
+    counts are integer-valued f32 sums, so the psum is *exact* and sharded
+    histograms stay bit-identical to single-device ones (the merge is
+    sum-associative — the same property the seed-merge tests pin).
+    ``"records"`` leaves also psum: the engine masks each flight slot to
+    the single shard owning its request (all others contribute zeros), so
+    the collective sum IS the record assembly, exactly. ``"mean"`` leaves
+    (occupancy, load factor) pass through untouched: the engine already
+    assembles those as global values inside the scan body (occupancy is
+    psum'd at the sample point so the running *peak* is taken over the
+    global vector; the load factor's demand fold psums inside the
+    contention pre-pass)."""
+    folded = {
+        name: jax.lax.psum(getattr(leaves, name), axis_name)
+        for name, kind in LEAF_KINDS.items()
+        if kind in ("sum", "records") and getattr(leaves, name) is not None
+    }
+    return leaves._replace(**folded)
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +601,17 @@ class SimTrace(NamedTuple):
     mis_routes: np.ndarray | None = None  # [C]
     stale_consults: np.ndarray | None = None  # [C]
     stale_age_hist: np.ndarray | None = None  # [C, STALE_AGE_BINS]
+    # Latency-provenance views (populated only with an enabled
+    # AttributionConfig / FlightRecorderConfig on the telemetry config).
+    attr_edges: np.ndarray | None = None  # [Ba+1] component bin edges (ms)
+    attr_hist_group: np.ndarray | None = None  # [NUM_COMPONENTS, 2N, Ba]
+    attr_chunk_sum_ms: np.ndarray | None = None  # [C, NUM_COMPONENTS]
+    attr_chunk_mean_ms: np.ndarray | None = None  # [C, NUM_COMPONENTS] /req
+    flight_meta: np.ndarray | None = None  # [C, S, 5] (FLIGHT_META_FIELDS)
+    flight_vals: np.ndarray | None = None  # [C, S, 1 + NUM_COMPONENTS]
+    # [NUM_COMPONENTS, R] raw per-request components — reference engine
+    # only (the oracle the per-component quantile tests compare against).
+    raw_components: np.ndarray | None = None
 
     # -- histogram views (all simple row-sums of hist_group) ---------------
 
@@ -437,6 +664,99 @@ class SimTrace(NamedTuple):
         """P50/P90/P95/P99/P99.9 as a dict (the BENCH ``quantiles`` block)."""
         return quantile_summary(self._select(split), self.edges)
 
+    # -- latency provenance (cost attribution + flight recorder) ------------
+
+    def _comp_index(self, component) -> int:
+        if isinstance(component, (int, np.integer)):
+            return int(component)
+        return COMPONENTS.index(component)
+
+    def component_hist(self, component, split="all") -> np.ndarray:
+        """One component's ``[Ba]`` histogram (by name or index); ``split``
+        follows :meth:`quantile` (``"all"``/``"read"``/``"write"``/node)."""
+        rows = self.attr_hist_group[self._comp_index(component)]  # [2N, Ba]
+        if isinstance(split, (int, np.integer)):
+            return rows[int(split) * 2 : int(split) * 2 + 2].sum(axis=0)
+        return {
+            "all": rows.sum(axis=0),
+            "read": rows[1::2].sum(axis=0),
+            "write": rows[0::2].sum(axis=0),
+        }[split]
+
+    def component_quantile(self, component, q: float, split="all") -> float:
+        """Interpolated per-component latency quantile — over the requests
+        that actually paid the component (the ``component > 0`` weighting
+        the attribution histograms fold)."""
+        return histogram_quantile(
+            self.component_hist(component, split), self.attr_edges, q
+        )
+
+    @property
+    def attribution(self) -> dict:
+        """The per-component provenance summary: for every
+        :data:`COMPONENTS` name a dict with ``count`` (requests that paid
+        it), ``mean_ms`` (averaged over ALL valid requests — the additive
+        decomposition of the run's mean latency), ``share`` (fraction of
+        total latency), and interpolated P50–P99.9 over the paying
+        requests. Requires an enabled AttributionConfig."""
+        if self.attr_hist_group is None:
+            raise ValueError(
+                "attribution requires TelemetryConfig(attribution="
+                "AttributionConfig())"
+            )
+        total_requests = float(self.requests.sum())
+        comp_sums = self.attr_chunk_sum_ms.sum(axis=0)  # [NUM_COMPONENTS]
+        total_ms = float(comp_sums.sum())
+        out = {}
+        for i, name in enumerate(COMPONENTS):
+            hist = self.attr_hist_group[i].sum(axis=0)
+            out[name] = {
+                "count": float(hist.sum()),
+                "mean_ms": float(comp_sums[i]) / max(total_requests, 1.0),
+                "share": float(comp_sums[i]) / max(total_ms, 1e-300),
+                **{
+                    label: histogram_quantile(hist, self.attr_edges, q)
+                    for label, q in QUANTILE_LABELS.items()
+                },
+            }
+        return out
+
+    def flight_records(self) -> list[dict]:
+        """The flight recorder's sampled requests as structured dicts
+        (valid samples only), ordered by global request position. Each
+        record carries the :data:`FLIGHT_META_FIELDS` integers (``router``
+        is -1 with no routing tier), ``is_read``, ``chunk``, ``total_ms``,
+        and the per-component breakdown under ``components``. Requires an
+        enabled FlightRecorderConfig."""
+        if self.flight_meta is None:
+            raise ValueError(
+                "flight_records requires TelemetryConfig(flight="
+                "FlightRecorderConfig())"
+            )
+        meta = np.asarray(self.flight_meta, np.int64)  # [C, S, 5]
+        vals = np.asarray(self.flight_vals, np.float64)  # [C, S, 1+NCOMP]
+        records = []
+        for c in range(meta.shape[0]):
+            for s in range(meta.shape[1]):
+                pos, key, node, router, flags = meta[c, s]
+                if not (flags >> 1) & 1:  # valid bit clear: unsampled slot
+                    continue
+                records.append({
+                    "pos": int(pos),
+                    "chunk": int(c),
+                    "key": int(key),
+                    "node": int(node),
+                    "router": int(router),
+                    "is_read": bool(flags & 1),
+                    "total_ms": float(vals[c, s, 0]),
+                    "components": {
+                        name: float(vals[c, s, 1 + i])
+                        for i, name in enumerate(COMPONENTS)
+                    },
+                })
+        records.sort(key=lambda r: r["pos"])
+        return records
+
     # -- routing-tier diagnostics -------------------------------------------
 
     @property
@@ -468,6 +788,7 @@ def build_trace(
     leaves: TelemetryLeaves,
     cfg: TelemetryConfig,
     raw_latency_ms: np.ndarray | None = None,
+    raw_components: np.ndarray | None = None,
 ) -> SimTrace:
     """Materialise a :class:`SimTrace` from raw (chunk-leading) leaves —
     either one run's, or a seed-merged aggregate from :func:`merge_leaves`."""
@@ -476,7 +797,24 @@ def build_trace(
     chunk_hist = hist_c.sum(axis=1)  # [C, B]
     reads = np.asarray(leaves.reads, dtype=np.float64)
     count = np.asarray(leaves.count, dtype=np.float64)
+    attr: dict = {}
+    if cfg.attribution is not None and leaves.attr_hist is not None:
+        attr_hist = np.asarray(leaves.attr_hist, np.float64)  # [C,NC,2N,Ba]
+        attr_sum = np.asarray(leaves.attr_sum, np.float64)  # [C, NC]
+        attr = dict(
+            attr_edges=cfg.attribution.edges(),
+            attr_hist_group=attr_hist.sum(axis=0),
+            attr_chunk_sum_ms=attr_sum,
+            attr_chunk_mean_ms=attr_sum / np.maximum(count, 1.0)[:, None],
+        )
+    if cfg.flight is not None and leaves.flight_meta is not None:
+        attr.update(
+            flight_meta=np.asarray(leaves.flight_meta, np.int64),
+            flight_vals=np.asarray(leaves.flight_vals, np.float64),
+        )
     return SimTrace(
+        **attr,
+        raw_components=raw_components,
         edges=edges,
         hist_group=hist_c.sum(axis=0),
         chunk_hist=chunk_hist,

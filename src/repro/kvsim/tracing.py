@@ -1,0 +1,111 @@
+"""Flight-recorder export: JSON-lines and Chrome trace-event format.
+
+The simulator's flight recorder (``TelemetryConfig.flight``) samples a few
+requests per chunk inside the fused scan and surfaces them as
+``SimTrace.flight_records()`` — a list of plain dicts with the request's
+identity (global position, key, serving node, router, read/write) and its
+full latency-component vector (the 8-way provenance taxonomy from
+``repro.kernels.chunk_replay.ref.COMPONENTS``). This module turns those
+records into two on-disk formats:
+
+* :func:`write_jsonl` — one JSON object per line, the grep/pandas-friendly
+  spelling (``pd.read_json(path, lines=True)``).
+* :func:`write_chrome_trace` — the Chrome trace-event JSON format, loadable
+  in ``chrome://tracing`` and Perfetto (https://ui.perfetto.dev). Each
+  sampled request becomes a complete event (``"ph": "X"``) on a *virtual*
+  timeline: the simulator is trace-driven and has no wall clock, so a
+  request's timestamp is its global trace position (1 position = 1 virtual
+  ms) and its duration is its modelled latency. Events are laid out with
+  ``pid`` = serving node and ``tid`` = router (or 0 when routing is off),
+  so Perfetto's track grouping reads as "node → router lane"; the component
+  vector rides in ``args`` where the UI shows it on click.
+
+Both writers are pure-Python/stdlib-json over the already-host-side record
+dicts — nothing here touches jax.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, Mapping
+
+__all__ = [
+    "chrome_trace_events",
+    "write_chrome_trace",
+    "write_jsonl",
+]
+
+# 1 trace position == 1 virtual millisecond == 1000 trace-event µs ticks.
+_US_PER_POSITION = 1000.0
+
+
+def write_jsonl(records: Iterable[Mapping], path: str) -> int:
+    """Write flight records as JSON-lines; returns the record count."""
+    n = 0
+    with open(path, "w") as fh:
+        for rec in records:
+            fh.write(json.dumps(dict(rec)) + "\n")
+            n += 1
+    return n
+
+
+def chrome_trace_events(records: Iterable[Mapping]) -> dict:
+    """Flight records -> a Chrome trace-event JSON document (as a dict).
+
+    Returns ``{"traceEvents": [...], "displayTimeUnit": "ms", ...}`` ready
+    for ``json.dump``. See the module docstring for the virtual-timeline
+    and pid/tid conventions.
+    """
+    events = []
+    nodes = set()
+    for rec in records:
+        node = int(rec["node"])
+        router = int(rec.get("router", -1))
+        nodes.add(node)
+        events.append(
+            {
+                "name": "read" if rec["is_read"] else "write",
+                "cat": "request",
+                "ph": "X",
+                "ts": float(rec["pos"]) * _US_PER_POSITION,
+                "dur": float(rec["total_ms"]) * 1000.0,
+                "pid": node,
+                "tid": max(router, 0),
+                "args": {
+                    "key": int(rec["key"]),
+                    "chunk": int(rec["chunk"]),
+                    "router": router,
+                    **{
+                        name: float(val)
+                        for name, val in rec["components"].items()
+                    },
+                },
+            }
+        )
+    # Metadata events name the node tracks so Perfetto shows "node 0" etc.
+    meta = [
+        {
+            "name": "process_name",
+            "ph": "M",
+            "pid": node,
+            "args": {"name": f"node {node}"},
+        }
+        for node in sorted(nodes)
+    ]
+    return {
+        "traceEvents": meta + events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "source": "repro.kvsim flight recorder",
+            "timeline": "virtual (1 trace position = 1 ms)",
+        },
+    }
+
+
+def write_chrome_trace(records: Iterable[Mapping], path: str) -> int:
+    """Write flight records as a Chrome/Perfetto trace file; returns the
+    number of request events written."""
+    doc = chrome_trace_events(records)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    return sum(1 for e in doc["traceEvents"] if e["ph"] == "X")

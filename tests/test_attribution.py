@@ -1,0 +1,655 @@
+"""Latency-provenance guard rails (cost attribution + flight recorder).
+
+The PR-9 acceptance criteria:
+
+  1. Reconstruction invariant at the oracle: ``chunk_components_ref``'s
+     rows sum to ``chunk_latency_ref`` plus the engine-supplied surcharges,
+     allclose under f32 (the decomposition re-associates the write path's
+     grouping) — fuzzed over random RTT matrices when hypothesis is
+     available.
+  2. The same invariant end-to-end, across {scan, reference} x
+     {jax, pallas} x service/routing on/off: the folded per-chunk component
+     sums reconstruct the engine's total latency, and the per-request
+     reference oracle (``SimTrace.raw_components``) sums row-wise to
+     ``raw_latency_ms``. Attribution histograms are pure-jnp regardless of
+     the replay backend, so they are bit-identical across engines AND
+     backends, not merely close.
+  3. Attribution/flight OFF is a bit-exact structural no-op: same
+     ``SimResult`` and telemetry aggregates as the pre-attribution engine,
+     for both spellings (absent sub-config, ``enabled=False`` sub-config).
+     Attribution ON also never perturbs the aggregates — it only adds ys.
+  4. Per-component quantiles read off the attribution histograms land
+     within ONE relative bin width of ``np.percentile`` over the reference
+     engine's raw per-request component arrays (paying requests only).
+  5. 2-rank key-sharded runs assemble identical provenance: bit-exact
+     component histogram counts and flight records, allclose f32 sums.
+  6. The flight recorder agrees between engines, satisfies the per-record
+     reconstruction invariant, and round-trips through the JSON-lines and
+     Chrome trace-event exporters.
+  7. The leaf-merge taxonomy is exhaustive: every ``TelemetryLeaves`` field
+     declares its kind in ``LEAF_KINDS`` (so a new leaf cannot silently
+     skip the shard fold or the batch merge), and each kind merges as
+     documented (sum / mean / keep-row-0).
+  8. The bench-trend dashboard's flatten/trend/gate logic on synthetic
+     trajectories, plus a live-repo render smoke test.
+"""
+
+import importlib.util
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.chunk_replay.ref import (
+    COMPONENTS,
+    NUM_COMPONENTS,
+    chunk_components_ref,
+    chunk_latency_ref,
+)
+from repro.kvsim import (
+    AttributionConfig,
+    ClusterConfig,
+    FlightRecorderConfig,
+    RedynisPolicy,
+    RoutingConfig,
+    ServiceConfig,
+    SimResult,
+    StaticPolicy,
+    TelemetryConfig,
+    WorkloadConfig,
+    chrome_trace_events,
+    run_scenario,
+    run_scenario_reference,
+    wan5_cluster,
+    wan5_workload,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.kvsim.telemetry import (
+    LEAF_KINDS,
+    TelemetryLeaves,
+    merge_leaves,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# 1. Oracle-level reconstruction: components sum to chunk_latency_ref.
+# ---------------------------------------------------------------------------
+
+
+def _random_case(seed, n, k, b):
+    """Random replica map / chunk / RTT matrix (symmetric, zero diagonal)."""
+    rng = np.random.default_rng(seed)
+    hosts = rng.random((k, n)) < 0.4
+    hosts[rng.integers(0, k), :] = False  # at least one orphan key
+    keys = rng.integers(0, k, size=b).astype(np.int32)
+    nodes = rng.integers(0, n, size=b).astype(np.int32)
+    is_read = rng.random(b) < 0.7
+    rtt = rng.uniform(1.0, 200.0, size=(n, n)).astype(np.float32)
+    rtt = ((rtt + rtt.T) / 2).astype(np.float32)
+    np.fill_diagonal(rtt, 0.0)
+    return (
+        jnp.asarray(hosts), jnp.asarray(keys), jnp.asarray(nodes),
+        jnp.asarray(is_read), jnp.asarray(rtt),
+    )
+
+
+def check_components_reconstruct(seed, n, k, b, read_mode, with_extras):
+    hosts, keys, nodes, is_read, rtt = _random_case(seed, n, k, b)
+    scalars = dict(
+        service_ms=0.5, master=int(seed) % n,
+        xfer_read_ms=2.0, xfer_write_ms=3.0, read_mode=read_mode,
+    )
+    lat, _ = chunk_latency_ref(hosts, keys, nodes, is_read, rtt, **scalars)
+    extras = {}
+    total = np.asarray(lat, np.float64)
+    if with_extras:
+        rng = np.random.default_rng(seed + 1)
+        for name in ("contention_ms", "routing_detour_ms",
+                     "directory_fetch_ms"):
+            e = (rng.uniform(0.0, 5.0, size=b)
+                 * (rng.random(b) < 0.5)).astype(np.float32)
+            extras[name] = jnp.asarray(e)
+            total = total + e
+    comps = np.asarray(
+        chunk_components_ref(hosts, keys, nodes, is_read, rtt,
+                             **scalars, **extras),
+        np.float64,
+    )
+    assert comps.shape == (NUM_COMPONENTS, b)
+    assert (comps >= 0.0).all()
+    np.testing.assert_allclose(
+        comps.sum(axis=0), total, rtol=1e-6, atol=1e-5,
+        err_msg=f"read_mode={read_mode} extras={with_extras}",
+    )
+    # Reads never pay write legs and vice versa.
+    rd = np.asarray(is_read)
+    for row in ("write_relay", "write_broadcast"):
+        assert (comps[COMPONENTS.index(row)][rd] == 0.0).all()
+    assert (comps[COMPONENTS.index("read_rtt")][~rd] == 0.0).all()
+
+
+@pytest.mark.parametrize("read_mode", ["map", "no_local", "ideal"])
+@pytest.mark.parametrize("with_extras", [False, True])
+def test_oracle_components_reconstruct_total(read_mode, with_extras):
+    for seed in range(4):
+        check_components_reconstruct(
+            seed, n=5, k=40, b=64, read_mode=read_mode,
+            with_extras=with_extras,
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.integers(2, 8),
+        b=st.integers(1, 96),
+        read_mode=st.sampled_from(["map", "no_local"]),
+    )
+    def test_oracle_reconstruction_fuzz_rtt(seed, n, b, read_mode):
+        """Hypothesis fuzz over topology size, chunk size and RTT matrices:
+        the additive decomposition must hold for ANY geometry, not just the
+        wan presets."""
+        check_components_reconstruct(
+            seed, n=n, k=16, b=b, read_mode=read_mode, with_extras=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# 2. End-to-end reconstruction across engines x backends x surcharges.
+# ---------------------------------------------------------------------------
+
+ATTR_TELEMETRY = TelemetryConfig(
+    attribution=AttributionConfig(),
+    flight=FlightRecorderConfig(),
+)
+
+
+def _wan5_case(with_service, with_routing, num_requests=3_000):
+    wl = wan5_workload(num_requests=num_requests, num_keys=200, affinity=0.8)
+    cl = wan5_cluster()
+    if with_service:
+        cl = cl._replace(
+            service=ServiceConfig(serve_bytes_per_ms=128.0,
+                                  capacity_factor=2.0)
+        )
+    if with_routing:
+        # Lagged publishes (detours) AND a bounded router cache (misses →
+        # home fetches), so both routing component rows are live.
+        cl = cl._replace(
+            routing=RoutingConfig(publish_lag_chunks=2, cache_entries=64)
+        )
+    return wl, cl
+
+
+@pytest.mark.parametrize("engine", ["scan", "reference"])
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("surcharges", [False, True])
+def test_component_sum_reconstructs_total(engine, backend, surcharges):
+    """The folded per-chunk component sums must reconstruct the engine's
+    total latency — with and without the contention/routing surcharge
+    models (whose waits land in dedicated component rows)."""
+    run = run_scenario if engine == "scan" else run_scenario_reference
+    wl, cl = _wan5_case(with_service=surcharges, with_routing=surcharges)
+    pol = RedynisPolicy(h=0.2, backend=backend)
+    result, trace = run(
+        wl, cl, pol, seed=0, daemon_interval=500, telemetry=ATTR_TELEMETRY,
+    )
+    total_requests = float(trace.requests.sum())
+    assert total_requests == wl.num_requests
+    comp_total = float(trace.attr_chunk_sum_ms.sum())
+    np.testing.assert_allclose(
+        comp_total / total_requests, result.mean_latency_ms, rtol=1e-5,
+    )
+    attr = trace.attribution
+    np.testing.assert_allclose(
+        sum(s["mean_ms"] for s in attr.values()),
+        result.mean_latency_ms, rtol=1e-5,
+    )
+    if surcharges:
+        # The surcharge rows are live (the whole point of the grid).
+        assert attr["contention_wait"]["count"] > 0
+        assert attr["routing_detour"]["count"] > 0
+        assert attr["directory_fetch"]["count"] > 0
+    else:
+        for row in ("contention_wait", "routing_detour", "directory_fetch"):
+            assert attr[row]["count"] == 0.0
+    # Histogram conservation: each component row counts exactly its paying
+    # requests, never more than the run's request count.
+    per_comp = trace.attr_hist_group.sum(axis=(1, 2))
+    assert (per_comp <= total_requests + 1e-6).all()
+    assert per_comp[COMPONENTS.index("service")] == total_requests
+
+
+def test_reference_raw_components_sum_to_raw_latency():
+    """The per-request oracle: the reference engine's raw component matrix
+    sums row-wise to its raw latency vector."""
+    wl, cl = _wan5_case(with_service=True, with_routing=True)
+    _, trace = run_scenario_reference(
+        wl, cl, RedynisPolicy(h=0.2), seed=1, daemon_interval=500,
+        telemetry=ATTR_TELEMETRY,
+    )
+    raw = trace.raw_latency_ms
+    comps = trace.raw_components
+    assert comps.shape == (NUM_COMPONENTS, raw.shape[0])
+    np.testing.assert_allclose(
+        comps.sum(axis=0), raw, rtol=1e-5, atol=1e-4,
+    )
+
+
+def test_attribution_bitexact_across_engines_and_backends():
+    """Attribution histograms are folded by the pure-jnp helper regardless
+    of replay backend, so counts are bit-identical — across the jax and
+    pallas backends AND across the scan and reference engines."""
+    wl, cl = _wan5_case(with_service=True, with_routing=True)
+    kw = dict(seed=2, daemon_interval=500, telemetry=ATTR_TELEMETRY)
+    runs = {
+        "scan/jax": run_scenario(
+            wl, cl, RedynisPolicy(h=0.2, backend="jax"), **kw),
+        "scan/pallas": run_scenario(
+            wl, cl, RedynisPolicy(h=0.2, backend="pallas"), **kw),
+        "ref/jax": run_scenario_reference(
+            wl, cl, RedynisPolicy(h=0.2, backend="jax"), **kw),
+    }
+    base = runs["scan/jax"][1]
+    for label, (_, trace) in runs.items():
+        np.testing.assert_array_equal(
+            base.attr_hist_group, trace.attr_hist_group, err_msg=label,
+        )
+        np.testing.assert_allclose(
+            base.attr_chunk_sum_ms, trace.attr_chunk_sum_ms,
+            rtol=1e-6, err_msg=label,
+        )
+        np.testing.assert_array_equal(
+            base.flight_meta, trace.flight_meta, err_msg=label,
+        )
+        np.testing.assert_allclose(
+            base.flight_vals, trace.flight_vals, rtol=1e-6, atol=1e-5,
+            err_msg=label,
+        )
+
+
+def test_static_fast_path_matches_reference():
+    """The static whole-trace fast path prices attribution over the padded
+    trace in one shot — it must agree with the chunked reference engine."""
+    wl, cl = _wan5_case(with_service=True, with_routing=False)
+    kw = dict(seed=4, daemon_interval=500, telemetry=ATTR_TELEMETRY)
+    pol = StaticPolicy(mode="local")
+    _, fast = run_scenario(wl, cl, pol, **kw)
+    _, ref = run_scenario_reference(wl, cl, pol, **kw)
+    np.testing.assert_array_equal(fast.attr_hist_group, ref.attr_hist_group)
+    np.testing.assert_allclose(
+        fast.attr_chunk_sum_ms, ref.attr_chunk_sum_ms, rtol=1e-6,
+    )
+    np.testing.assert_array_equal(fast.flight_meta, ref.flight_meta)
+    np.testing.assert_allclose(
+        fast.flight_vals, ref.flight_vals, rtol=1e-6, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3. Off = bit-exact structural no-op; on never perturbs the aggregates.
+# ---------------------------------------------------------------------------
+
+
+def assert_results_equal(a: SimResult, b: SimResult, ctx: str):
+    for field, x, y in zip(SimResult._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{ctx} {field}"
+        )
+
+
+@pytest.mark.parametrize("engine", ["scan", "reference"])
+def test_attribution_off_is_bitexact(engine):
+    """PR-8 goldens stay valid: absent and ``enabled=False`` sub-configs
+    are the same program as plain telemetry, and turning attribution ON
+    must not move a single aggregate bit either (it only adds ys)."""
+    run = run_scenario if engine == "scan" else run_scenario_reference
+    wl = WorkloadConfig(
+        num_requests=2_000, num_keys=150, skewed=True, affinity=0.8
+    )
+    cl = ClusterConfig(capacity_bytes=24 * 1024.0)
+    pol = RedynisPolicy(expiry=4, decay=0.5)
+    kw = dict(seed=3, daemon_interval=500)
+    base, base_trace = run(wl, cl, pol, telemetry=TelemetryConfig(), **kw)
+    disabled, disabled_trace = run(
+        wl, cl, pol,
+        telemetry=TelemetryConfig(
+            attribution=AttributionConfig(enabled=False),
+            flight=FlightRecorderConfig(enabled=False),
+        ),
+        **kw,
+    )
+    assert_results_equal(base, disabled, f"{engine} disabled-subconfig")
+    np.testing.assert_array_equal(
+        base_trace.hist_group, disabled_trace.hist_group
+    )
+    assert disabled_trace.attr_hist_group is None
+    assert disabled_trace.flight_meta is None
+    on, on_trace = run(wl, cl, pol, telemetry=ATTR_TELEMETRY, **kw)
+    assert_results_equal(base, on, f"{engine} attribution-on")
+    np.testing.assert_array_equal(base_trace.hist_group, on_trace.hist_group)
+    assert on_trace.attr_hist_group is not None
+
+
+def test_attribution_views_raise_when_off():
+    wl, cl = _wan5_case(False, False, num_requests=1_000)
+    _, trace = run_scenario(
+        wl, cl, RedynisPolicy(), seed=0, daemon_interval=500,
+        telemetry=TelemetryConfig(),
+    )
+    with pytest.raises(ValueError, match="AttributionConfig"):
+        trace.attribution
+    with pytest.raises(ValueError, match="FlightRecorderConfig"):
+        trace.flight_records()
+
+
+def test_config_validation():
+    from repro.kvsim.telemetry import normalize_telemetry
+
+    with pytest.raises(ValueError, match="num_bins"):
+        normalize_telemetry(
+            TelemetryConfig(attribution=AttributionConfig(num_bins=2))
+        )
+    with pytest.raises(ValueError, match="samples_per_chunk"):
+        FlightRecorderConfig(samples_per_chunk=0).validate()
+    with pytest.raises(ValueError, match="sampling mode"):
+        FlightRecorderConfig(mode="systematic").validate()
+    # Disabled sub-configs collapse to None (the bit-exact off spelling) —
+    # invalid-but-disabled must not raise.
+    cfg = normalize_telemetry(TelemetryConfig(
+        attribution=AttributionConfig(enabled=False, num_bins=2),
+        flight=FlightRecorderConfig(enabled=False, samples_per_chunk=0),
+    ))
+    assert cfg.attribution is None and cfg.flight is None
+
+
+# ---------------------------------------------------------------------------
+# 4. Per-component quantiles vs the reference engine's raw oracle.
+# ---------------------------------------------------------------------------
+
+
+def test_component_quantiles_vs_raw_percentiles():
+    """Interpolated per-component quantiles must land within one relative
+    bin width of np.percentile over the PAYING requests' raw component
+    values (the ``component > 0`` weighting the histograms fold)."""
+    wl, cl = _wan5_case(with_service=True, with_routing=True,
+                        num_requests=6_000)
+    _, trace = run_scenario_reference(
+        wl, cl, RedynisPolicy(h=0.2), seed=5, daemon_interval=500,
+        telemetry=ATTR_TELEMETRY,
+    )
+    rho = float(trace.attr_edges[2] / trace.attr_edges[1])
+    checked = 0
+    for i, name in enumerate(COMPONENTS):
+        paying = trace.raw_components[i]
+        paying = paying[paying > 0.0]
+        if paying.size < 200:  # too thin for a stable percentile
+            continue
+        checked += 1
+        assert trace.attribution[name]["count"] == paying.size
+        for q in (0.5, 0.9, 0.99):
+            interp = trace.component_quantile(name, q)
+            exact = float(np.percentile(paying, 100 * q))
+            assert exact / rho <= interp <= exact * rho * (1 + 1e-9), (
+                f"{name} q={q}: interpolated {interp} vs exact {exact} "
+                f"(allowed factor {rho})"
+            )
+    assert checked >= 4  # service, read_rtt, write legs at minimum
+
+
+# ---------------------------------------------------------------------------
+# 5. 2-rank sharded provenance assembly.
+# ---------------------------------------------------------------------------
+
+SHARDED_ATTRIBUTION_SCRIPT = r"""
+import numpy as np
+from repro.kvsim import (run_scenario, wan5_workload, wan5_cluster,
+                         RedynisPolicy, TelemetryConfig, AttributionConfig,
+                         FlightRecorderConfig, ServiceConfig, RoutingConfig)
+
+wl = wan5_workload(num_requests=12000, num_keys=500)
+cl = wan5_cluster()._replace(
+    service=ServiceConfig(enabled=True),
+    routing=RoutingConfig(publish_lag_chunks=2),
+)
+for mode in ('stride', 'reservoir'):
+    tel = TelemetryConfig(attribution=AttributionConfig(),
+                          flight=FlightRecorderConfig(mode=mode))
+    kw = dict(seed=3, daemon_interval=1000, telemetry=tel)
+    r1, t1 = run_scenario(wl, cl, RedynisPolicy(), **kw)
+    r2, t2 = run_scenario(wl, cl, RedynisPolicy(), num_shards=2, **kw)
+    # Integer-count surfaces: bit-exact under psum.
+    np.testing.assert_array_equal(t1.attr_hist_group, t2.attr_hist_group)
+    np.testing.assert_array_equal(t1.flight_meta, t2.flight_meta)
+    # f32 sums re-associate across shards; flight values are assembled by
+    # a one-owner masked psum, so they stay essentially exact.
+    np.testing.assert_allclose(t1.attr_chunk_sum_ms, t2.attr_chunk_sum_ms,
+                               rtol=1e-4)
+    np.testing.assert_allclose(t1.flight_vals, t2.flight_vals,
+                               rtol=1e-5, atol=1e-4)
+    rec1, rec2 = t1.flight_records(), t2.flight_records()
+    assert len(rec1) == len(rec2) > 0
+    assert [r['key'] for r in rec1] == [r['key'] for r in rec2]
+    print('OK', mode)
+print('SHARDED_ATTRIBUTION_OK')
+"""
+
+
+def test_sharded_attribution_two_ranks(run_multi_rank):
+    out = run_multi_rank(SHARDED_ATTRIBUTION_SCRIPT, num_devices=2,
+                         timeout=600)
+    assert "SHARDED_ATTRIBUTION_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# 6. Flight recorder semantics + exporters.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["stride", "reservoir"])
+def test_flight_records_match_across_engines(mode):
+    """Both sampling modes are deterministic functions of the chunk index,
+    so the two engines must sample the SAME requests and report the same
+    records."""
+    wl, cl = _wan5_case(with_service=True, with_routing=True,
+                        num_requests=2_500)
+    tel = TelemetryConfig(
+        attribution=AttributionConfig(),
+        flight=FlightRecorderConfig(samples_per_chunk=4, mode=mode),
+    )
+    kw = dict(seed=6, daemon_interval=500, telemetry=tel)
+    _, scan = run_scenario(wl, cl, RedynisPolicy(h=0.2), **kw)
+    _, ref = run_scenario_reference(wl, cl, RedynisPolicy(h=0.2), **kw)
+    a, b = scan.flight_records(), ref.flight_records()
+    assert len(a) == len(b) > 0
+    for ra, rb in zip(a, b):
+        for field in ("pos", "chunk", "key", "node", "router", "is_read"):
+            assert ra[field] == rb[field], (mode, field, ra, rb)
+        assert ra["total_ms"] == pytest.approx(rb["total_ms"], rel=1e-6)
+    # Per-record reconstruction invariant + routing tier is live so some
+    # sampled requests carry a router id.
+    for r in a:
+        assert r["total_ms"] == pytest.approx(
+            sum(r["components"].values()), rel=1e-5, abs=1e-4,
+        )
+        assert 0 <= r["node"] < cl.num_nodes
+    assert all(r["router"] >= 0 for r in a)
+
+
+def test_flight_router_is_minus_one_without_routing():
+    wl, cl = _wan5_case(with_service=False, with_routing=False,
+                        num_requests=1_000)
+    _, trace = run_scenario(
+        wl, cl, RedynisPolicy(), seed=0, daemon_interval=500,
+        telemetry=ATTR_TELEMETRY,
+    )
+    records = trace.flight_records()
+    assert records and all(r["router"] == -1 for r in records)
+
+
+def test_flight_export_roundtrip(tmp_path):
+    wl, cl = _wan5_case(with_service=True, with_routing=True,
+                        num_requests=2_000)
+    _, trace = run_scenario(
+        wl, cl, RedynisPolicy(h=0.2), seed=7, daemon_interval=500,
+        telemetry=ATTR_TELEMETRY,
+    )
+    records = trace.flight_records()
+    jl = tmp_path / "flight.jsonl"
+    assert write_jsonl(records, str(jl)) == len(records)
+    back = [json.loads(line) for line in jl.read_text().splitlines()]
+    assert back == json.loads(json.dumps(records))
+
+    doc = chrome_trace_events(records)
+    events = doc["traceEvents"]
+    spans = [e for e in events if e["ph"] == "X"]
+    assert len(spans) == len(records)
+    assert doc["displayTimeUnit"] == "ms"
+    for e, r in zip(spans, records):
+        assert e["pid"] == r["node"]
+        assert e["dur"] == pytest.approx(r["total_ms"] * 1000.0)
+        assert set(COMPONENTS) <= set(e["args"])  # breakdown rides in args
+    # Process-name metadata so Perfetto labels the per-node tracks.
+    assert any(e.get("ph") == "M" for e in events)
+    ct = tmp_path / "flight.trace.json"
+    assert write_chrome_trace(records, str(ct)) == len(records)
+    assert json.loads(ct.read_text())["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# 7. Exhaustive leaf-merge taxonomy (the documented merge contract).
+# ---------------------------------------------------------------------------
+
+
+def test_leaf_taxonomy_is_exhaustive():
+    """Every leaf must declare a merge kind — adding a TelemetryLeaves
+    field without classifying it under LEAF_KINDS is a test failure, not a
+    silently-dropped shard fold."""
+    assert set(LEAF_KINDS) == set(TelemetryLeaves._fields)
+    assert set(LEAF_KINDS.values()) == {"sum", "mean", "records"}
+
+
+def test_merge_leaves_honours_kind_contract():
+    """Synthetic 2-row batch: "sum" leaves add, "mean" leaves average,
+    "records" leaves keep row 0, None leaves pass through."""
+    rows = {
+        name: np.array([[1.0], [3.0]]) for name in TelemetryLeaves._fields
+    }
+    merged = merge_leaves(TelemetryLeaves(**rows))
+    for name, kind in LEAF_KINDS.items():
+        got = float(np.asarray(getattr(merged, name)).squeeze())
+        want = {"sum": 4.0, "mean": 2.0, "records": 1.0}[kind]
+        assert got == want, (name, kind, got)
+    # Disabled provenance leaves stay None through the merge.
+    rows.update(attr_hist=None, attr_sum=None,
+                flight_meta=None, flight_vals=None)
+    merged = merge_leaves(TelemetryLeaves(**rows))
+    assert merged.attr_hist is None and merged.flight_vals is None
+
+
+# ---------------------------------------------------------------------------
+# 8. Bench-trend dashboard logic (synthetic trajectories + live smoke).
+# ---------------------------------------------------------------------------
+
+_BT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "benchmarks", "bench_trend.py"
+)
+
+
+@pytest.fixture(scope="module")
+def bench_trend():
+    spec = importlib.util.spec_from_file_location("bench_trend", _BT_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_flatten_metrics_shapes(bench_trend):
+    flat = bench_trend.flatten_metrics({
+        "metrics": {
+            "wall_time_s": 2.5,
+            "checks": {"a_ok": True, "b_ok": False},
+            "label": "dropped-string",
+            "rows": [
+                {"policy": "x", "mean_ms": 10.0, "passed": True},
+                {"policy": "y", "mean_ms": 30.0, "passed": False},
+            ],
+        }
+    })
+    assert flat["wall_time_s"] == 2.5
+    assert flat["checks.a_ok"] == 1.0 and flat["checks.b_ok"] == 0.0
+    assert "label" not in flat
+    assert flat["rows.len"] == 2.0
+    assert flat["rows.mean.mean_ms"] == 20.0
+    assert flat["rows.mean.passed"] == 0.5
+    assert "rows.mean.policy" not in flat
+
+
+def _points(bench_trend, *metric_dicts):
+    return [
+        bench_trend._point(f"rev{i}", {"bench": "attribution",
+                                       "metrics": m})
+        for i, m in enumerate(metric_dicts)
+    ]
+
+
+def test_trend_rows_flags_check_regression(bench_trend):
+    """A checks.* boolean going truthy -> falsy between the last two points
+    is a gated regression; a timing metric doubling is not."""
+    pts = _points(
+        bench_trend,
+        {"checks": {"sum_ok": True}, "wall_time_s": 1.0},
+        {"checks": {"sum_ok": True}, "wall_time_s": 1.5},
+        {"checks": {"sum_ok": False}, "wall_time_s": 3.0},
+    )
+    rows = {r["metric"]: r for r in bench_trend.trend_rows(pts)}
+    assert rows["checks.sum_ok"]["gated"]
+    assert rows["checks.sum_ok"]["regressed"]
+    assert not rows["wall_time_s"]["gated"]
+    assert not rows["wall_time_s"]["regressed"]
+    assert rows["wall_time_s"]["delta_pct"] == pytest.approx(100.0)
+    # Recovery (falsy -> truthy) and steady-state truthy are not flagged.
+    for series in ([False, True], [True, True]):
+        pts = _points(
+            bench_trend, *[{"checks": {"sum_ok": v}} for v in series]
+        )
+        assert not bench_trend.trend_rows(pts)[0]["regressed"]
+
+
+def test_trend_rows_non_increase_gate(bench_trend):
+    pts = _points(bench_trend, {"regressions": 0}, {"regressions": 2})
+    (row,) = bench_trend.trend_rows(pts)
+    assert row["gated"] and row["regressed"]
+    pts = _points(bench_trend, {"regressions": 2}, {"regressions": 1})
+    assert not bench_trend.trend_rows(pts)[0]["regressed"]
+
+
+def test_trend_rows_single_point_never_regresses(bench_trend):
+    pts = _points(bench_trend, {"checks": {"ok": False}, "x": 5.0})
+    for row in bench_trend.trend_rows(pts):
+        assert not row["regressed"]
+        assert row["prev"] is None and row["delta_pct"] is None
+
+
+def test_render_markdown_live_repo_smoke(bench_trend):
+    """Against the real checked-in baselines: renders one table block per
+    BENCH file with the rev span header, and the committed trajectory has
+    no gated regressions (the CI gate this repo ships under)."""
+    if not bench_trend.baseline_files():
+        pytest.skip("no committed baselines")
+    text, regressions = bench_trend.render_markdown()
+    assert "| metric | first | prev | latest |" in text
+    assert "**attribution**" in text or "**engine_throughput**" in text
+    assert regressions == 0, text
