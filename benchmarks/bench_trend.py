@@ -7,7 +7,9 @@ PRs land. The trajectory is therefore the git history of those files: this
 tool walks ``git log`` per baseline, loads every committed revision (plus
 the working-tree copy when it differs), flattens each payload into dotted
 scalar metrics, and renders a per-metric trend table — first / previous /
-latest / Δ% — with regression flags.
+latest / Δ% — with regression flags. Each trajectory point is annotated
+with its blessing commit's subject line (``git log --format=%s``), so the
+dashboard reads as "which PR moved this metric".
 
 Regression gating is deliberately narrow: only *machine-independent* gated
 metrics are flagged (the ``checks.*`` booleans every benchmark emits, and
@@ -64,6 +66,12 @@ HEADLINE_PREFIXES = {
         "rows.mean.p50_ms",
     ),
     "attribution": ("checks.", "rows.mean.", "wall_time_s"),
+    "availability": (
+        "checks.", "wall_time_s", "rows.redynis.availability_min",
+        "rows.redynis.p99_outage_ms", "rows.redynis.recovery_chunks",
+        "rows.redynis.repair_moves", "rows.static:replicated.recovery_chunks",
+        "blast_radius.mean.",
+    ),
 }
 
 
@@ -125,40 +133,47 @@ def baseline_files() -> list[str]:
 def collect_trajectory(relpath: str) -> list[dict]:
     """All committed revisions of one baseline file (oldest first), plus a
     trailing ``worktree`` point when the file on disk differs from HEAD's
-    copy. Each point: ``{"rev", "bench", "schema_version", "git_commit",
-    "unix_time", "metrics": {dotted: float}}``. Unparseable revisions are
-    skipped."""
+    copy. Each point: ``{"rev", "subject", "bench", "schema_version",
+    "git_commit", "unix_time", "metrics": {dotted: float}}`` — ``subject``
+    is the blessing commit's one-line message, so trajectory points read as
+    the PRs that moved them. Unparseable revisions are skipped."""
     try:
-        revs = _git(
-            "log", "--reverse", "--format=%H", "--", relpath
-        ).split()
+        lines = _git(
+            "log", "--reverse", "--format=%H%x09%s", "--", relpath
+        ).splitlines()
     except subprocess.CalledProcessError:
-        revs = []
+        lines = []
     points = []
     last_blob = None
-    for rev in revs:
+    for line in lines:
+        rev, _, subject = line.partition("\t")
+        if not rev:
+            continue
         try:
             blob = _git("show", f"{rev}:{relpath}")
             payload = json.loads(blob)
         except (subprocess.CalledProcessError, json.JSONDecodeError):
             continue
         last_blob = blob
-        points.append(_point(rev[:10], payload))
+        points.append(_point(rev[:10], payload, subject))
     disk = os.path.join(ROOT, relpath)
     if os.path.exists(disk):
         with open(disk) as fh:
             blob = fh.read()
         if blob != last_blob:
             try:
-                points.append(_point("worktree", json.loads(blob)))
+                points.append(
+                    _point("worktree", json.loads(blob), "(uncommitted)")
+                )
             except json.JSONDecodeError:
                 pass
     return points
 
 
-def _point(rev: str, payload: dict) -> dict:
+def _point(rev: str, payload: dict, subject: str = "") -> dict:
     return {
         "rev": rev,
+        "subject": subject,
         "bench": payload.get("bench", "?"),
         "schema_version": payload.get("schema_version"),
         "git_commit": (payload.get("git_commit") or "")[:10] or None,
@@ -217,6 +232,10 @@ def trend_rows(points: list[dict]) -> list[dict]:
     return rows
 
 
+def _truncate(s: str, width: int = 72) -> str:
+    return s if len(s) <= width else s[: width - 1] + "…"
+
+
 def _fmt(v) -> str:
     if v is None:
         return "—"
@@ -228,8 +247,12 @@ def _fmt(v) -> str:
 def _table(rows: list[dict], points: list[dict]) -> list[str]:
     n = len(points)
     span = f"{points[0]['rev']} → {points[-1]['rev']}"
-    lines = [
-        f"{n} point{'s' if n != 1 else ''} ({span})",
+    lines = [f"{n} point{'s' if n != 1 else ''} ({span})"]
+    for p in points:
+        subject = p.get("subject") or ""
+        if subject:
+            lines.append(f"- `{p['rev']}` — {_truncate(subject)}")
+    lines += [
         "",
         "| metric | first | prev | latest | Δ% | flag |",
         "|---|---:|---:|---:|---:|---|",

@@ -120,6 +120,8 @@ ATTRIBUTION_BEGIN = "<!-- ATTRIBUTION_TABLE_BEGIN -->"
 ATTRIBUTION_END = "<!-- ATTRIBUTION_TABLE_END -->"
 BENCH_TREND_BEGIN = "<!-- BENCH_TREND_TABLE_BEGIN -->"
 BENCH_TREND_END = "<!-- BENCH_TREND_TABLE_END -->"
+AVAILABILITY_BEGIN = "<!-- AVAILABILITY_TABLE_BEGIN -->"
+AVAILABILITY_END = "<!-- AVAILABILITY_TABLE_END -->"
 
 
 def find_engine_throughput_json():
@@ -293,6 +295,73 @@ def attribution_table(bench) -> str:
     return "\n".join(lines)
 
 
+def find_availability_json():
+    """BENCH_availability.json from $BENCH_DIR, the repo root, else the
+    checked-in baselines directory."""
+    dirs = [
+        os.environ.get("BENCH_DIR"),
+        ROOT,
+        os.path.join(ROOT, "benchmarks", "baselines"),
+    ]
+    for d in filter(None, dirs):
+        p = os.path.join(d, "BENCH_availability.json")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def availability_table(bench) -> str:
+    """§Failure-injection region-outage drill from the availability rows."""
+    m = bench["metrics"]
+    rows = m.get("rows", {})
+    if not rows:
+        return (
+            "(no policy rows in BENCH_availability.json — re-run "
+            "`benchmarks/availability.py`)"
+        )
+    lines = [
+        "| policy | min avail | outage mean avail | outage P99 ms | unavail reads | failovers | repair moves | recovery (chunks) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for policy, r in rows.items():
+        rec = r["recovery_chunks"]
+        lines.append(
+            f"| `{policy}` | {r['availability_min']:.3f} | "
+            f"{r['availability_outage_mean']:.3f} | "
+            f"{r['p99_outage_ms']:.1f} | {r['unavailable_reads']:.0f} | "
+            f"{r['failovers']:.0f} | {r['repair_moves']:.0f} | "
+            f"{rec if rec >= 0 else 'never'} |"
+        )
+    lines.append("")
+    blast = m.get("blast_radius", [])
+    if blast:
+        lines += [
+            "| failure | mode | window (chunks) | blast radius (unreachable) | blast radius (wiped) |",
+            "|---|---|---|---|---|",
+        ]
+        for r in blast:
+            lines.append(
+                f"| {r['kind']} {r['target']} | {r['mode']} | "
+                f"[{r['start_chunk']}, {r['end_chunk']}) | "
+                f"{100 * r['blast_radius_unreachable']:.1f}% | "
+                f"{100 * r['blast_radius_wiped']:.1f}% |"
+            )
+        lines.append("")
+    o = m.get("outage", {})
+    ok = all(m.get("checks", {}).values()) if m.get("checks") else None
+    lines.append(
+        f"(wan5 region-skewed trace, {bench['num_requests']:,} requests / "
+        f"{bench['num_keys']:,} keys, read fraction "
+        f"{bench['read_fraction']}; crash of {o.get('kind', '?')} "
+        f"{o.get('target', '?')} over chunks [{o.get('start_chunk', '?')}, "
+        f"{o.get('end_chunk', '?')}); recovery = chunks from outage start "
+        f"until effective hit rate regains 95% of its pre-outage median; "
+        f"acceptance checks: "
+        f"{'all pass' if ok else 'FAILING' if ok is not None else '?'}.)"
+    )
+    return "\n".join(lines)
+
+
 def bench_trend_table() -> str:
     """§Observability bench-trend dashboard (delegates to bench_trend.py,
     which walks the git history of benchmarks/baselines/BENCH_*.json)."""
@@ -406,6 +475,16 @@ def main() -> None:
         doc = re.sub(
             re.escape(BENCH_TREND_BEGIN) + r".*?" + re.escape(BENCH_TREND_END),
             f"{BENCH_TREND_BEGIN}\n{bench_trend_table()}\n{BENCH_TREND_END}",
+            doc,
+            flags=re.DOTALL,
+        )
+    avail_json = find_availability_json()
+    if avail_json is not None and AVAILABILITY_BEGIN in doc and AVAILABILITY_END in doc:
+        bench = load(avail_json)
+        doc = re.sub(
+            re.escape(AVAILABILITY_BEGIN) + r".*?" + re.escape(AVAILABILITY_END),
+            f"{AVAILABILITY_BEGIN}\n{availability_table(bench)}\n"
+            f"{AVAILABILITY_END}",
             doc,
             flags=re.DOTALL,
         )

@@ -203,6 +203,40 @@ print(
     f"{rd['directory_fetch']['mean_ms']:.2f} ms directory-fetch cost"
 )
 
+# --- 2f. failure drill: what does replication buy when a region dies? -------
+# faults= schedules a membership timeline (kvsim/faults.py). Crash the
+# hottest region mid-trace: requests from the dead region are refused,
+# reads fall back to the nearest LIVE replica, writes fail over to the
+# first live master, and — the dynamic-placement payoff — the redynis
+# daemon re-seeds crash-wiped keys, while a static map never repairs.
+# Off by default — faults=None replays the bit-exact fault-free program.
+from repro.kvsim import region_outage
+
+wl_f = wan5_workload(
+    num_requests=10_000, num_keys=400, affinity=0.8, read_fraction=0.7
+)
+outage = region_outage(0, 40, 30, mode="crash")  # chunks [40, 70)
+print("\nregion-outage drill (wan5, crash hottest region chunks 40-70):")
+for pol in (RedynisPolicy(), StaticPolicy(mode="replicated")):
+    r, trace = run_scenario(
+        wl_f, wan5_cluster()._replace(faults=outage), pol,
+        daemon_interval=100, telemetry=TelemetryConfig(),
+    )
+    rec = trace.recovery_chunks(40)
+    print(
+        f"  {describe_policy(pol):28s} min avail="
+        f"{float(trace.availability.min()):.2f}  "
+        f"unavail reads={int(r.unavailable_reads):4d}  "
+        f"failovers={int(r.failovers):4d}  "
+        f"repairs={int(r.repair_moves):3d}  "
+        f"recovery={'never' if rec < 0 else f'{rec} chunks'}"
+    )
+print(
+    "  -> both refuse the dead region's own traffic, but only redynis "
+    "re-seeds the wiped keys\n     (static's crashed copies stay lost: "
+    "repairs=0, recovery=never)"
+)
+
 # --- 3. the same algorithm placing MoE experts ------------------------------
 ep = ExpertPlacement(num_layers=2, num_experts=16, num_nodes=4, slots=4, period=5)
 st = ep.init_state()

@@ -126,6 +126,7 @@ def sweep(
     object_bytes: Array | None = None,
     capacity_bytes: Array | None = None,
     backend: str = "jax",
+    avail: Array | None = None,
 ) -> tuple[PlacementPlan, MetadataStore]:
     """One full-cluster analysis pass. Returns the plan and the metadata
     store with the plan already reflected (hosts/live updated, counts of
@@ -141,6 +142,10 @@ def sweep(
             an infinite budget is a bit-exact identity.
     backend: "jax" (pure-XLA) or "pallas" (``kernels.ownership_sweep``; the
             kernel's ``f`` output feeds the projection scoring directly).
+    avail:  ``[N] bool`` node availability under failure injection; ``None``
+            (the default, fault-free) compiles with no membership mask. A
+            present mask keeps the daemon off down nodes and drops the
+            copies they held — capped by the same capacity projection.
     """
     counts, hosts, live = store.access_counts, store.hosts, store.live
     k = store.num_keys
@@ -172,6 +177,11 @@ def sweep(
         raise ValueError(
             f"unknown sweep backend {backend!r}; expected one of {SWEEP_BACKENDS}"
         )
+
+    # Stage 2b (failure injection, compiled away at avail=None): never place
+    # on down nodes; a down node's notional copies drop (rejoin = resync).
+    if avail is not None:
+        owners = owners & avail[None, :]
 
     # Stage 3: capacity projection (per-node replica-byte budgets).
     if capacity_bytes is None:
@@ -239,6 +249,7 @@ def masked_step(
     object_bytes: Array | None = None,
     capacity_bytes: Array | None = None,
     backend: str = "jax",
+    avail: Array | None = None,
 ) -> tuple[SweepStats, MetadataStore]:
     """Scan-compatible daemon step: fixed-shape replacement for the host-side
     ``if daemon.due(tick): daemon.step(...)`` pattern.
@@ -259,6 +270,7 @@ def masked_step(
         object_bytes=object_bytes,
         capacity_bytes=capacity_bytes,
         backend=backend,
+        avail=avail,
     )
     swept = _decay_counts(swept, decay)
     new_store = jax.tree_util.tree_map(
@@ -325,6 +337,7 @@ class PlacementDaemon:
         *,
         object_bytes: Array | None = None,
         capacity_bytes: Array | None = None,
+        avail: Array | None = None,
     ) -> tuple[PlacementPlan, MetadataStore]:
         plan, store = sweep(
             store,
@@ -334,6 +347,7 @@ class PlacementDaemon:
             object_bytes=object_bytes,
             capacity_bytes=capacity_bytes,
             backend=self.backend,
+            avail=avail,
         )
         return plan, _decay_counts(store, self.decay)
 
@@ -345,6 +359,7 @@ class PlacementDaemon:
         *,
         object_bytes: Array | None = None,
         capacity_bytes: Array | None = None,
+        avail: Array | None = None,
     ) -> tuple[SweepStats, MetadataStore]:
         """Scan-compatible `step`: commit only where ``due`` (traced bool)."""
         return masked_step(
@@ -357,4 +372,5 @@ class PlacementDaemon:
             object_bytes=object_bytes,
             capacity_bytes=capacity_bytes,
             backend=self.backend,
+            avail=avail,
         )

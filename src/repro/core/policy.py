@@ -145,12 +145,17 @@ class PolicyContext(NamedTuple):
     params:         dict of this policy's *dynamic* hyperparameters
                     (``DYNAMIC_FIELDS``), traced scalars — or ``[P]``
                     vectors under the batched policy-grid vmap.
+    avail:          ``[N] bool`` node availability this chunk under failure
+                    injection, or ``None`` (the default) for the fault-free
+                    program — the sweep then compiles with no membership
+                    mask at all (the bit-exact golden path).
     """
 
     rtt: Array
     object_bytes: Array
     capacity_bytes: Array | None
     params: dict
+    avail: Array | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -666,6 +671,14 @@ def _policy_sweep(
     else:
         expired = jnp.zeros_like(live)
     owners = owners & live[:, None] & ~expired[:, None]
+
+    # Stage 3b (failure injection, compiled away at ctx.avail=None): the
+    # daemon never places replicas on down nodes, and drops the copies a
+    # down node still notionally holds — a rejoining node resyncs from
+    # scratch, and a *crashed* node's lost copies get re-seeded onto live
+    # nodes here, capped by the same capacity projection as any other move.
+    if ctx.avail is not None:
+        owners = owners & ctx.avail[None, :]
 
     # Stage 4 (uniform): per-node replica-byte budgets. Skipped entirely at
     # infinite budget (ctx.capacity_bytes is None — host-side static).

@@ -40,6 +40,13 @@ VMEM budget per step: the two one-hot planes dominate — ``TR·TKEY`` for
 the gather (512·1024·4B = 2 MB) + ``TR·(N + G + B)`` for the folds
 (≈ 0.6 MB at N ≤ 64, B = 128) + the [TR, N] scratch; comfortably inside
 16 MB with room to double-buffer.
+
+Failure injection (PR 10) required NO kernel change: degraded-mode
+serving arrives entirely through the operands — the engine hands this
+kernel the availability-masked replica map (so the nearest-replica min
+only sees LIVE copies), a ``valid`` mask with refused requests already
+dropped (weight-0 rows), and the write-failover delta pre-folded into
+``extra_ms`` by ``ref.fault_extra_ms_ref``. See ops.py.
 """
 
 from __future__ import annotations

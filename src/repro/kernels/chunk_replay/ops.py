@@ -15,6 +15,16 @@ recompile, and ``read_mode`` / ``master`` / bin count / tile sizes static:
     (weight-0 rows) and the key axis padded to the gather tile.
     ``interpret=None`` auto-selects from the platform (interpret off-TPU),
     matching the ``ownership_sweep`` convention.
+
+Failure injection (``ClusterConfig.faults``) reaches both entry points as
+DATA, never as new kernel math: the engines pass the availability-masked
+replica map (``hosts & avail[None, :]``, so reads natively price on the
+nearest LIVE replica), fold the write-failover delta from
+``ref.fault_extra_ms_ref`` into the composed ``extra_ms`` operand, and
+mask refused (unavailable) requests out of ``valid`` — weight-0 rows the
+kernel already handles. With faults off the operands are bit-identical to
+the pre-fault engine, so these wrappers and the Mosaic kernel needed no
+change for PR 10.
 """
 
 from __future__ import annotations

@@ -56,6 +56,7 @@ __all__ = [
     "contention_extra_ms_ref",
     "routing_extra_ms_ref",
     "routing_extra_split_ref",
+    "fault_extra_ms_ref",
 ]
 
 READ_MODES = ("map", "no_local", "ideal")
@@ -202,6 +203,7 @@ def chunk_components_ref(
     contention_ms: Array | None = None,  # [B] f32 (contention_extra_ms_ref)
     routing_detour_ms: Array | None = None,  # [B] f32 (routing_extra_split_ref)
     directory_fetch_ms: Array | None = None,  # [B] f32 (routing_extra_split_ref)
+    avail: Array | None = None,  # [N] bool (fault failover — see faults.py)
 ) -> Array:
     """Per-request latency decomposed along :data:`COMPONENTS`:
     ``[NUM_COMPONENTS, B] f32``.
@@ -215,6 +217,13 @@ def chunk_components_ref(
     The engine-supplied pre-pass surcharges (contention wait, routing
     detour, directory fetch) drop straight into their rows; ``None`` rows
     are structural zeros.
+
+    With faults on the caller hands the availability-masked map plus this
+    chunk's ``avail`` vector: the write legs are then priced through the
+    same failover master :func:`fault_extra_ms_ref` elects, so the rows
+    absorb the failover delta the engines fold via ``extra_ms`` and the
+    reconstruction invariant holds under outages too (the delta lands in
+    ``write_relay``/``write_broadcast``/``transfer``, not a new row).
     """
     b = keys.shape[0]
     zeros = jnp.zeros((b,), jnp.float32)
@@ -241,10 +250,16 @@ def chunk_components_ref(
         sole_local = hit & (owner_count == 1)
         if read_mode == "no_local":
             sole_local = jnp.zeros_like(sole_local)
-        relay = jnp.where(nodes == master, 0.0, rtt[nodes, master])
-        non_master_owners = replicas & (jnp.arange(n)[None, :] != master)
+        if avail is None:
+            w_master = master
+        else:
+            w_master = jnp.where(
+                avail[master], master, jnp.argmax(avail)
+            ).astype(jnp.int32)
+        relay = jnp.where(nodes == w_master, 0.0, rtt[nodes, w_master])
+        non_master_owners = replicas & (jnp.arange(n)[None, :] != w_master)
         post = jnp.max(
-            jnp.where(non_master_owners, rtt[master][None, :], 0.0), axis=-1
+            jnp.where(non_master_owners, rtt[w_master][None, :], 0.0), axis=-1
         )
         w_xfer = jnp.where(relay + post > 0, xfer_write_ms, 0.0)
         paid = ~sole_local
@@ -501,6 +516,111 @@ def routing_extra_split_ref(
     stale = consult & cached & ~fresh
     mis_routed = consult & ~fresh & mis
     return detour_part, fetch_part, consult, fetches, stale, mis_routed
+
+
+# ---------------------------------------------------------------------------
+# Failure-injection pricing (FaultConfig — see kvsim/faults.py for the
+# schedule model). Degraded-mode serving is priced HERE, once, as a third
+# jnp pre-pass: the engines hand every downstream consumer the
+# availability-masked map ``hosts_eff = hosts & avail[None, :]`` (so reads
+# natively fall back to the nearest LIVE replica and the Pallas kernel needs
+# no new math), and this pass contributes the only piece the masked map
+# cannot express — the write-failover master delta — plus the
+# per-request unavailability verdict that becomes the engines' valid mask.
+# ---------------------------------------------------------------------------
+
+
+def fault_extra_ms_ref(
+    hosts: Array,  # [K, N] bool — authoritative map (crash losses applied)
+    keys: Array,  # [B] i32
+    nodes: Array,  # [B] i32
+    is_read: Array,  # [B] bool
+    valid: Array,  # [B] bool (False masks padded rows)
+    avail: Array,  # [N] bool — this chunk's node availability
+    rtt: Array,  # [N, N] f32
+    *,
+    read_mode: str,
+    master: int,
+    xfer_write_ms,
+    wiped: Array | None = None,  # [K] bool — keys that lost every replica
+) -> tuple[Array, Array, Array]:
+    """The whole failure pre-pass: ``(extra_ms [B] f32, unavailable [B],
+    failover [B])`` (the last two bool).
+
+    Unavailability verdicts (a True row is excluded from every latency /
+    hit / histogram fold by the engines' ``served = valid & ~unavailable``):
+
+      * origin down — the requesting node itself is crashed or partitioned
+        away; its users are offline (reads AND writes), every mode.
+      * dark read — the key has surviving copies *somewhere* in the map but
+        none on a live node (``mode="partition"``: temporarily unreachable),
+        or the key is flagged ``wiped`` (``mode="crash"`` destroyed its last
+        replica and the daemon has not re-seeded it from the backing store
+        yet). A map-empty row that was never wiped keeps the base model's
+        planned-eviction semantics: the worst-RTT backing-store fetch —
+        which is what keeps an all-up schedule bit-exact with faults off.
+
+    Served writes relay through a deterministic failover master when the
+    static master is down: ``m* = master if avail[master] else
+    argmin{n : avail[n]}``. The charge is priced as a *delta* against the
+    static-master legs on the live replica set — exactly the legs
+    :func:`chunk_latency_ref` computes when handed ``hosts_eff`` — so
+    composing ``base + extra`` re-prices the write through ``m*`` while an
+    all-up chunk contributes a bitwise ``+0.0`` (``x - x`` on identical f32
+    operands), keeping the canonical ``lat = lat + extra`` fold bit-exact.
+    """
+    b = keys.shape[0]
+    zeros_f = jnp.zeros((b,), jnp.float32)
+    zeros_b = jnp.zeros((b,), bool)
+    origin_down = ~avail[nodes]
+    if read_mode == "ideal":
+        # Ideal serves locally at pure service cost: no replica set to go
+        # dark and no master relay — only a down origin can fail.
+        return zeros_f, origin_down & valid, zeros_b
+    n = rtt.shape[0]
+    replicas = hosts[keys]  # [B, N]
+    if read_mode == "no_local":
+        vis_base = replicas & (jnp.arange(n)[None, :] != nodes[:, None])
+    else:
+        vis_base = replicas
+    vis_live = vis_base & avail[None, :]
+    read_dark = jnp.any(vis_base, axis=-1) & ~jnp.any(vis_live, axis=-1)
+    if wiped is not None:
+        read_dark = read_dark | wiped[keys]
+    unavailable = (origin_down | (is_read & read_dark)) & valid
+
+    live = replicas & avail[None, :]
+    hit_live = live[jnp.arange(b), nodes]
+    owner_count = jnp.sum(live, axis=-1)
+    sole_local = hit_live & (owner_count == 1)
+    if read_mode == "no_local":
+        sole_local = jnp.zeros_like(sole_local)
+    # Static-master write legs on the live set — bit-identical operands to
+    # what chunk_latency_ref charges when handed hosts_eff.
+    relay = jnp.where(nodes == master, 0.0, rtt[nodes, master])
+    non_master_owners = live & (jnp.arange(n)[None, :] != master)
+    post = jnp.max(
+        jnp.where(non_master_owners, rtt[master][None, :], 0.0), axis=-1
+    )
+    cost = relay + post
+    cost = cost + jnp.where(cost > 0, xfer_write_ms, 0.0)
+    w_base = jnp.where(sole_local, 0.0, cost)
+    # Failover-master legs: first live node by index when the master is down
+    # (argmax over bool = lowest True index — deterministic re-election).
+    m_star = jnp.where(avail[master], master, jnp.argmax(avail)).astype(
+        jnp.int32
+    )
+    relay_d = jnp.where(nodes == m_star, 0.0, rtt[nodes, m_star])
+    nmo_d = live & (jnp.arange(n)[None, :] != m_star)
+    post_d = jnp.max(jnp.where(nmo_d, rtt[m_star][None, :], 0.0), axis=-1)
+    cost_d = relay_d + post_d
+    cost_d = cost_d + jnp.where(cost_d > 0, xfer_write_ms, 0.0)
+    w_deg = jnp.where(sole_local, 0.0, cost_d)
+
+    served_write = ~is_read & ~unavailable & valid
+    extra = jnp.where(served_write, w_deg - w_base, 0.0).astype(jnp.float32)
+    failover = served_write & ~avail[master] & ~sole_local
+    return extra, unavailable, failover
 
 
 def chunk_replay_ref(

@@ -19,8 +19,12 @@ serving-node demand folds. ``telemetry=TelemetryConfig()`` makes
 either engine additionally accumulate log-bin latency histograms and
 per-chunk convergence series *inside* the scan, returned as a ``SimTrace``
 (tail quantiles P50–P99.9, convergence/oscillation diagnostics — see
-``telemetry.py``). The placement policies are re-exported here for
-convenience.
+``telemetry.py``). ``ClusterConfig.faults`` (a ``FaultConfig``) turns on
+failure injection — a declarative membership timeline (node/zone/region
+crashes and partitions at chunk boundaries) with degraded-mode serving,
+write failover, daemon re-replication, and availability/blast-radius
+telemetry (see ``faults.py``). The placement policies are re-exported here
+for convenience.
 """
 
 from repro.core.policy import (
@@ -50,14 +54,24 @@ from repro.kvsim.cluster import (
     WAN5_REGIONS,
     WAN5_RTT_MS,
     ClusterConfig,
+    FaultConfig,
+    FaultEvent,
     Scenario,
     RoutingConfig,
     ServiceConfig,
     flat_rtt,
+    normalize_faults,
     normalize_routing,
     normalize_service,
     wan5_cluster,
     wan5_edge_cluster,
+)
+from repro.kvsim.faults import (
+    FAULT_KINDS,
+    FAULT_MODES,
+    blast_radius_rows,
+    compile_schedule,
+    region_outage,
 )
 from repro.kvsim.simulate import (
     REPLAY_BACKENDS,
@@ -102,6 +116,14 @@ __all__ = [
     "normalize_service",
     "RoutingConfig",
     "normalize_routing",
+    "FaultConfig",
+    "FaultEvent",
+    "normalize_faults",
+    "FAULT_KINDS",
+    "FAULT_MODES",
+    "region_outage",
+    "compile_schedule",
+    "blast_radius_rows",
     "flat_rtt",
     "wan5_cluster",
     "wan5_edge_cluster",

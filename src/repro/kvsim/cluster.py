@@ -51,6 +51,7 @@ from repro.kernels.chunk_replay.ref import (
     read_latency_ref,
     write_latency_ref,
 )
+from repro.kvsim.faults import FaultConfig, FaultEvent, normalize_faults
 from repro.kvsim.routing import RoutingConfig, normalize_routing
 
 __all__ = [
@@ -58,8 +59,11 @@ __all__ = [
     "Scenario",
     "ServiceConfig",
     "RoutingConfig",
+    "FaultConfig",
+    "FaultEvent",
     "normalize_service",
     "normalize_routing",
+    "normalize_faults",
     "read_latency",
     "write_latency",
     "nearest_replica_rtt",
@@ -197,6 +201,17 @@ class ClusterConfig(NamedTuple):
     # cached-directory model; also a nested NamedTuple, so the config stays
     # a valid jit static.
     routing: RoutingConfig | None = None
+    # Crux-style locality hierarchy labelling: zone_of[n] / region_of[n]
+    # give node n's zone / region label. None = the flat hierarchy (each
+    # node its own zone and region). Only consulted to resolve correlated
+    # zone/region fault domains — the RTT matrix stays the latency truth.
+    zone_of: tuple[int, ...] | None = None
+    region_of: tuple[int, ...] | None = None
+    # Failure-injection schedule (None = the fixed all-up membership of the
+    # paper's model and the bit-exact golden path). See repro.kvsim.faults
+    # for the crash/partition timeline; also a nested NamedTuple, so the
+    # config stays a valid jit static.
+    faults: FaultConfig | None = None
 
     def rtt_matrix(self) -> Array:
         """The ``[N, N]`` RTT matrix as a device array."""

@@ -174,11 +174,20 @@ def init_router_state(
     cache_entries: int,
     publish_lag_chunks: int,
     active: bool,
+    force_ring: bool = False,
 ) -> RouterState:
-    """Cold-start router state for one engine run (shard-local shapes)."""
+    """Cold-start router state for one engine run (shard-local shapes).
+
+    ``force_ring`` materialises the publish ring even at
+    ``publish_lag_chunks == 0`` (one slot, written at end-of-chunk and read
+    the next chunk — value-identical to the ringless zero-lag path): the
+    failure-injection layer needs a mutable published view to freeze while
+    the directory home node is down, whatever the lag.
+    """
     local_keys, _ = hosts0.shape
     bounded = cache_entries > 0
     lag = publish_lag_chunks
+    ring = active and (lag > 0 or force_ring)
     return RouterState(
         cached=(
             jnp.zeros((num_routers, local_keys), bool) if bounded else None
@@ -191,11 +200,10 @@ def init_router_state(
         ver=jnp.zeros((local_keys,), jnp.int32) if active else None,
         ring_hosts=(
             jnp.broadcast_to(hosts0, (lag + 1,) + hosts0.shape)
-            if active and lag > 0 else None
+            if ring else None
         ),
         ring_ver=(
-            jnp.zeros((lag + 1, local_keys), jnp.int32)
-            if active and lag > 0 else None
+            jnp.zeros((lag + 1, local_keys), jnp.int32) if ring else None
         ),
     )
 
@@ -211,12 +219,14 @@ def published_view(
     ``(pub_hosts [Kl, N], pub_ver [Kl])`` — the authoritative state
     ``publish_lag_chunks`` chunks ago (clamped to the initial map for the
     first chunks). Inactive policies never publish, so their view is the
-    frozen map at version zero."""
+    frozen map at version zero. The slot count comes from the materialised
+    ring itself (``force_ring`` allocates one slot at zero lag), so the
+    ringless zero-lag fast path only runs when no ring exists."""
     if rstate.ver is None:
         return hosts, jnp.zeros((hosts.shape[0],), jnp.int32)
-    if publish_lag_chunks == 0:
+    if rstate.ring_hosts is None:
         return hosts, rstate.ver
-    slot = chunk % (publish_lag_chunks + 1)
+    slot = chunk % rstate.ring_hosts.shape[0]
     return rstate.ring_hosts[slot], rstate.ring_ver[slot]
 
 
@@ -294,22 +304,37 @@ def publish_commit(
     chunk: Array,  # scalar i32 chunk index
     *,
     publish_lag_chunks: int,
+    daemon_up: Array | None = None,  # scalar bool — directory home is live
 ) -> RouterState:
     """Fold one daemon step's versioned publish into the carry: bump the
     authoritative version of every changed key, and (lagged) overwrite the
     ring slot this chunk just read — it is next read ``publish_lag_chunks +
     1`` chunks from now, which is exactly what makes the published view the
-    authoritative state L chunks ago."""
+    authoritative state L chunks ago.
+
+    ``daemon_up`` (failure injection; ``None`` = the fault-free program)
+    pauses the publish pipeline while the directory home node is down: the
+    authoritative ``ver`` still bumps — placement genuinely changed — but
+    the ring slot is rewritten with the view this chunk already served, so
+    no post-outage map enters the published horizon until the home node
+    recovers and routers go stale against the advancing authoritative
+    version in the meantime."""
     if rstate.ver is None:
         return rstate
     ver = rstate.ver + changed.astype(jnp.int32)
-    if publish_lag_chunks == 0:
+    if rstate.ring_hosts is None:
         return rstate._replace(ver=ver)
-    slot = chunk % (publish_lag_chunks + 1)
+    slot = chunk % rstate.ring_hosts.shape[0]
+    write_hosts, write_ver = new_hosts, ver
+    if daemon_up is not None:
+        write_hosts = jnp.where(
+            daemon_up, new_hosts, rstate.ring_hosts[slot]
+        )
+        write_ver = jnp.where(daemon_up, ver, rstate.ring_ver[slot])
     return rstate._replace(
         ver=ver,
-        ring_hosts=rstate.ring_hosts.at[slot].set(new_hosts),
-        ring_ver=rstate.ring_ver.at[slot].set(ver),
+        ring_hosts=rstate.ring_hosts.at[slot].set(write_hosts),
+        ring_ver=rstate.ring_ver.at[slot].set(write_ver),
     )
 
 

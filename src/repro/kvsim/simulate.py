@@ -124,6 +124,7 @@ from repro.kernels.chunk_replay.ops import (
 from repro.kernels.chunk_replay.ref import (
     chunk_components_ref,
     contention_extra_ms_ref,
+    fault_extra_ms_ref,
     routing_extra_split_ref,
 )
 from repro.kernels.latency_histogram.ref import bin_index
@@ -136,6 +137,7 @@ from repro.core.policy import (
     split_policy,
 )
 from repro.kvsim.cluster import ClusterConfig, Scenario, normalize_service
+from repro.kvsim.faults import compile_schedule, normalize_faults
 from repro.kvsim.routing import (
     STALE_AGE_BINS,
     consult_probe,
@@ -240,6 +242,14 @@ class SimResult(NamedTuple):
     directory_fetches: float = 0.0  # cache misses (home-node round trips)
     mis_routes: float = 0.0  # consults detoured by a stale ownership view
     stale_consults: float = 0.0  # consults that hit a stale cache entry
+    # Failure-injection counters (all zero when ClusterConfig.faults is off
+    # — same strict-prefix convention as the routing block above). With
+    # faults on, hit_rate/mean_latency_ms cover SERVED requests only; the
+    # unavailable_* counts are the excluded remainder.
+    unavailable_reads: float = 0.0  # reads refused (origin down / no live copy)
+    unavailable_writes: float = 0.0  # writes refused (origin node down)
+    failovers: float = 0.0  # writes relayed through a stand-in master
+    repair_moves: float = 0.0  # re-replications of copies lost to failures
 
 
 def _initial_hosts(
@@ -327,6 +337,13 @@ def _check_topology(workload: WorkloadConfig, cluster: ClusterConfig) -> None:
             f"capacity_bytes has {len(cluster.capacity_bytes)} entries for "
             f"num_nodes={cluster.num_nodes}"
         )
+    for name in ("zone_of", "region_of"):
+        labels = getattr(cluster, name)
+        if labels is not None and len(labels) != cluster.num_nodes:
+            raise ValueError(
+                f"{name} labels {len(labels)} nodes but "
+                f"num_nodes={cluster.num_nodes}"
+            )
 
 
 def _seed_store(hosts: Array, num_keys: int, num_nodes: int):
@@ -421,6 +438,30 @@ def _routing_kwargs(cluster: ClusterConfig, num_keys: int) -> dict | None:
         home_node=routing.home_node,
         decay=routing.decay,
     )
+
+
+def _fault_kwargs(cluster: ClusterConfig, num_chunks: int) -> dict | None:
+    """Host-side resolution of the fault schedule: the per-chunk
+    availability/crash timelines as device constants, or ``None`` when the
+    cluster has no enabled :class:`FaultConfig` (the bit-exact no-fault
+    path — the same contract as :func:`_contention_kwargs` /
+    :func:`_routing_kwargs`).
+
+    ``compile_schedule`` validates the declarative events against the
+    cluster's failure-domain labelling (``zone_of``/``region_of``) and
+    rejects any chunk in which every node would be down — the simulator
+    models degraded service, not a total blackout."""
+    faults = normalize_faults(cluster.faults)
+    if faults is None:
+        return None
+    avail, crash = compile_schedule(
+        faults,
+        num_nodes=cluster.num_nodes,
+        num_chunks=num_chunks,
+        zone_of=cluster.zone_of,
+        region_of=cluster.region_of,
+    )
+    return dict(avail=jnp.asarray(avail), crash=jnp.asarray(crash))
 
 
 # ---------------------------------------------------------------------------
@@ -541,6 +582,12 @@ def _simulate(
 
     num_chunks = -(-r // daemon_interval)
     pad = num_chunks * daemon_interval - r
+    # Host-side static: with no enabled FaultConfig the membership timeline,
+    # degraded-mode pricing, and repair bookkeeping are absent from the
+    # compiled program entirely — the exact no-fault bits (goldens pinned by
+    # tests/test_faults.py). The [C, N] schedule constants embed in the
+    # program and each scan iteration dynamic-indexes its own chunk row.
+    fault = _fault_kwargs(cluster, num_chunks)
 
     if trace_mode == "streamed":
         # No materialised trace: the scan consumes only chunk indices and
@@ -599,6 +646,9 @@ def _simulate(
         # A frozen map does NOT freeze the routing tier: router caches and
         # consult counters evolve per chunk, so routing always scans.
         and routing is None
+        # Faults evolve the availability mask (and crashes mutate even a
+        # static policy's map) per chunk, so fault runs always scan too.
+        and fault is None
     )
     if not policy.is_active and replay_backend == "jax" and static_fast:
         # Static fast path: a frozen map makes the ENTIRE request path
@@ -800,10 +850,28 @@ def _simulate(
             cache_entries=routing["cache_entries"],
             publish_lag_chunks=routing["publish_lag_chunks"],
             active=policy.is_active,
+            # Faults can pause the publish pipeline (directory home node
+            # down), which needs a ring slot to freeze even at lag 0. The
+            # forced 1-slot ring is value-identical under full availability.
+            force_ring=fault is not None,
         )
         # RouterState + running consult/fetch/mis-route/stale counters.
         rcarry0 = (
             rstate0,
+            zero,
+            zero,
+            zero,
+            zero,
+        )
+    if fault is None:
+        # None is a legal (empty) pytree carry leaf: with faults off the
+        # scan carry is structurally identical to the pre-fault program.
+        fcarry0 = None
+    else:
+        # wiped-keys mask + running unavailable-read/-write, failover and
+        # repair-move counters.
+        fcarry0 = (
+            jnp.zeros((local_keys,), bool),
             zero,
             zero,
             zero,
@@ -822,13 +890,14 @@ def _simulate(
         zero,  # cap_evic
         occ0,  # peak (seeded by the initial map)
         rcarry0,
+        fcarry0,
     )
     scalars = _replay_scalars(cluster)
 
     def body(carry, x):
         (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
-            cap_evic, peak, rcarry,
+            cap_evic, peak, rcarry, fcarry,
         ) = carry
         if trace_mode == "streamed":
             # In-scan trace generation: this chunk's request window, drawn
@@ -851,6 +920,43 @@ def _simulate(
             mine = (ck // kps) == shard_idx
             ck = jnp.where(mine, ck - shard_base, 0)
             cv = cv & mine
+        # Degraded-mode serving state for this chunk. With faults off these
+        # aliases leave the program byte-identical: served IS cv, hosts_eff
+        # IS the authoritative map — every downstream consumer below uses
+        # the aliases, so the no-fault compile is structurally unchanged.
+        served = cv
+        hosts_eff = store.hosts
+        avail_c = None
+        f_extra = None
+        if fault is not None:
+            with jax.named_scope("fault_prepass"):
+                wiped, f_unav_r, f_unav_w, f_fo, f_rep = fcarry
+                avail_c = fault["avail"][c]
+                crash_c = fault["crash"][c]
+                # One-shot replica wipe at each crash's first chunk: the
+                # crashed nodes' copies leave the authoritative map (data
+                # loss, not just unreachability). Keys whose row emptied
+                # are dark until the daemon re-seeds a live copy —
+                # partitions, by contrast, never touch the map here.
+                pre_hosts = store.hosts
+                post_hosts = pre_hosts & ~crash_c[None, :]
+                wiped = wiped | (
+                    jnp.any(pre_hosts, axis=-1)
+                    & ~jnp.any(post_hosts, axis=-1)
+                )
+                store = store._replace(hosts=post_hosts)
+                # Canonical degraded-mode oracle: per-request unavailability
+                # + the write-failover surcharge (reads reprice natively via
+                # the hosts_eff mask below — see fault_extra_ms_ref).
+                f_extra, unavail, failover = fault_extra_ms_ref(
+                    store.hosts, ck, cn, cr, cv, avail_c, rtt,
+                    read_mode=policy.read_mode,
+                    master=scalars["master"],
+                    xfer_write_ms=scalars["xfer_write_ms"],
+                    wiped=wiped,
+                )
+                served = cv & ~unavail
+                hosts_eff = store.hosts & avail_c[None, :]
         route = detour_part = fetch_part = None
         if routing is not None:
             # Routing pre-pass on the chunk's frozen map: consult the
@@ -871,8 +977,11 @@ def _simulate(
                 (
                     detour_part, fetch_part, consult, fetchb, staleb, misb,
                 ) = routing_extra_split_ref(
-                    store.hosts, pub_hosts, ent_cached, fresh, ck, cn, cr,
-                    cv, rtt, read_mode=policy.read_mode,
+                    # True serving happens on LIVE replicas; the published
+                    # view stays the router's (liveness-blind) metadata.
+                    # Refused requests never reach a router: valid=served.
+                    hosts_eff, pub_hosts, ent_cached, fresh, ck, cn, cr,
+                    served, rtt, read_mode=policy.read_mode,
                     home_node=routing["home_node"],
                 )
                 route = detour_part + fetch_part
@@ -885,8 +994,11 @@ def _simulate(
             # shard folds its own requests' demand and the psum inside
             # load_factor_ref assembles the cluster-wide rho.
             with jax.named_scope("contention_prepass"):
+                # Demand lands on LIVE serving replicas only, and refused
+                # requests contribute no demand (valid=served) — a downed
+                # node queues nothing.
                 cont_extra, rho = contention_extra_ms_ref(
-                    store.hosts, ck, cn, cr, cv, rtt, obj_local,
+                    hosts_eff, ck, cn, cr, served, rtt, obj_local,
                     **contention,
                     axis_name=shard.axis_name if shard.active else None,
                 )
@@ -896,6 +1008,12 @@ def _simulate(
             # every engine and backend folds the same composed surcharge at
             # the same elementwise position, so the bits agree everywhere.
             extra = route if extra is None else route + extra
+        if f_extra is not None:
+            # Fault surcharge composes FIRST (prepended last) — the write
+            # failover delta rides in front of routing + contention. Under
+            # full availability the delta is exactly +0.0 per request, so
+            # an all-up schedule stays bit-exact with faults off.
+            extra = f_extra if extra is None else f_extra + extra
         comps = None
         if acfg is not None or fcfg is not None:
             # Latency provenance: re-price this chunk through the component
@@ -904,14 +1022,15 @@ def _simulate(
             # tests/test_attribution.py). Invalid/foreign rows zero out.
             with jax.named_scope("attribution_components"):
                 comps = chunk_components_ref(
-                    store.hosts, ck, cn, cr, rtt,
+                    hosts_eff, ck, cn, cr, rtt,
                     read_mode=policy.read_mode,
                     contention_ms=cont_extra,
                     routing_detour_ms=detour_part,
                     directory_fetch_ms=fetch_part,
+                    avail=avail_c,
                     **scalars,
                 )
-                comps = jnp.where(cv[None, :], comps, 0.0)
+                comps = jnp.where(served[None, :], comps, 0.0)
         if replay_backend == "pallas":
             # The fused one-pass kernel: gather, latency, hit flags, busy
             # fold — and the telemetry histogram when enabled — in one
@@ -921,7 +1040,11 @@ def _simulate(
                     d_busy, chunk_lat, chunk_hits, chunk_reads, chunk_count,
                     hist,
                 ) = chunk_replay(
-                    store.hosts, ck, cn, cr, cv, rtt,
+                    # Degraded mode reaches the kernel as DATA: the
+                    # avail-masked map + served validity + the composed
+                    # extra_ms (fault failover delta included) — no kernel
+                    # math changes (see kernels/chunk_replay/ops.py).
+                    hosts_eff, ck, cn, cr, served, rtt,
                     read_mode=policy.read_mode,
                     num_bins=0 if telemetry is None else telemetry.num_bins,
                     lo=1.0 if telemetry is None else telemetry.lo_ms,
@@ -936,35 +1059,64 @@ def _simulate(
             # with the seed goldens, including the carry-scatter busy).
             with jax.named_scope("chunk_replay"):
                 lat, read_hits = _chunk_latency(
-                    store.hosts, ck, cn, cr, rtt, cluster, policy.read_mode
+                    hosts_eff, ck, cn, cr, rtt, cluster, policy.read_mode
                 )
                 if extra is not None:
                     # Same elementwise position as chunk_replay_ref: after
                     # the base latency, before the validity mask —
                     # identical bits across engines and backends.
                     lat = lat + extra
-                lat = jnp.where(cv, lat, 0.0)
+                lat = jnp.where(served, lat, 0.0)
             chunk_lat = jnp.sum(lat)
-            chunk_hits = jnp.sum((read_hits & cv).astype(jnp.float32))
-            chunk_reads = jnp.sum((cr & cv).astype(jnp.float32))
-            chunk_count = jnp.sum(cv.astype(jnp.float32))
+            chunk_hits = jnp.sum((read_hits & served).astype(jnp.float32))
+            chunk_reads = jnp.sum((cr & served).astype(jnp.float32))
+            chunk_count = jnp.sum(served.astype(jnp.float32))
             busy = busy.at[cn].add(lat)
             hist = None
         lat_sum = lat_sum + chunk_lat
         hits = hits + chunk_hits
         reads = reads + chunk_reads
+        zero = jnp.float32(0.0)
+        if fault is not None:
+            with jax.named_scope("fault_counters"):
+                fsum_f = lambda m: jnp.sum(m.astype(jnp.float32))
+                d_unav_r = fsum_f(unavail & cr)
+                d_unav_w = fsum_f(unavail & ~cr)
+                d_fo = fsum_f(failover)
+                d_rep = zero  # set by the repair accounting below
+                f_unav_r = f_unav_r + d_unav_r
+                f_unav_w = f_unav_w + d_unav_w
+                f_fo = f_fo + d_fo
+                # Blast-radius point samples on THIS chunk's serving state:
+                # the fraction of the keyspace with no live replica
+                # (partition-dark or crash-wiped) and the wiped subset.
+                # Emitted as already-global fractions — sharded, the key
+                # counts psum at the sample point (LEAF_KINDS kind "mean").
+                unreach = (
+                    jnp.any(store.hosts, axis=-1)
+                    & ~jnp.any(hosts_eff, axis=-1)
+                ) | wiped
+                cnt_u = fsum_f(unreach)
+                cnt_w = fsum_f(wiped)
+                if shard.active:
+                    cnt_u = jax.lax.psum(cnt_u, shard.axis_name)
+                    cnt_w = jax.lax.psum(cnt_w, shard.axis_name)
+                real_keys = jnp.float32(num_keys - shard.pad)
+                d_unreach = cnt_u / real_keys
+                d_wiped = cnt_w / real_keys
         # Occupancy is sampled per chunk for EVERY policy, on the same
         # frozen-at-chunk-start map the requests see (the initial placement
         # seeds the peak); for inactive policies the sample is the hoisted
         # loop constant — numerically identical, O(K·N) cheaper per chunk.
-        if policy.is_active:
+        # Crashes mutate the map even under a static policy, so fault runs
+        # always re-sample.
+        if policy.is_active or fault is not None:
             occ = _node_occupancy(store.hosts, obj_local)
             if shard.active:
                 occ = jax.lax.psum(occ, shard.axis_name)
         else:
             occ = occ0
         peak = jnp.maximum(peak, occ)
-        zero = jnp.float32(0.0)
         if routing is not None:
             # Per-chunk routing diagnostics + decay-LFU cache refresh.
             # Consulted entries re-sync to the PUBLISHED version — a stale
@@ -989,10 +1141,23 @@ def _simulate(
             # (sharded: only the shard's own rows fold into its local
             # store — foreign rows are already masked out of cv).
             with jax.named_scope("policy_step"):
-                store = record_accesses(store, ck, cn, now=c, valid=cv)
+                # Down-origin users are offline: their requests leave no
+                # demand signal. Dark reads from LIVE origins DO record —
+                # that demand is how the daemon learns to repair wiped keys.
+                demand_valid = cv if fault is None else cv & avail_c[cn]
+                store = record_accesses(
+                    store, ck, cn, now=c, valid=demand_valid
+                )
                 prev_hosts = store.hosts
+                # The daemon sweeps against the chunk's availability mask:
+                # down nodes take no new replicas and their held copies are
+                # dropped from the map (rejoin-resync semantics).
+                step_ctx = (
+                    ctx if fault is None else ctx._replace(avail=avail_c)
+                )
                 stats, pstate, store = policy_masked_step(
-                    policy, pstate, store, c, (c % policy.period) == 0, ctx
+                    policy, pstate, store, c, (c % policy.period) == 0,
+                    step_ctx,
                 )
             repl = repl + stats.adds
             drop = drop + stats.drops
@@ -1002,14 +1167,39 @@ def _simulate(
                 stats.adds, stats.drops, stats.expiry_evictions,
                 stats.capacity_evictions,
             )
+            if fault is not None:
+                with jax.named_scope("repair_accounting"):
+                    # Re-replication audit: replicas the sweep just created
+                    # for keys that had lost every live copy (crash-wiped
+                    # or partition-dark at chunk start) count as repairs.
+                    added = store.hosts & ~prev_hosts
+                    lost_live = jnp.any(prev_hosts, axis=-1) & ~jnp.any(
+                        prev_hosts & avail_c[None, :], axis=-1
+                    )
+                    d_rep = jnp.sum(
+                        (added & (wiped | lost_live)[:, None]).astype(
+                            jnp.float32
+                        )
+                    )
+                    f_rep = f_rep + d_rep
+                    # A wiped key heals once any LIVE node holds it again.
+                    wiped = wiped & ~jnp.any(
+                        store.hosts & avail_c[None, :], axis=-1
+                    )
             if routing is not None:
                 # Versioned publish: keys the daemon just moved bump their
                 # directory version and enter the publish queue; routers
-                # see the new owners publish_lag_chunks later.
+                # see the new owners publish_lag_chunks later. With the
+                # directory home node down, versions still bump but the
+                # published ring slot freezes (see routing.publish_commit).
                 rstate = publish_commit(
                     rstate, publish_mask(prev_hosts, store.hosts),
                     store.hosts, c,
                     publish_lag_chunks=routing["publish_lag_chunks"],
+                    daemon_up=(
+                        None if fault is None
+                        else avail_c[routing["home_node"]]
+                    ),
                 )
         if telemetry is None:
             ys = None
@@ -1020,9 +1210,11 @@ def _simulate(
                 # weight 0 — dispatched per TelemetryConfig.backend. The
                 # pallas replay path already folded the histogram inside
                 # the chunk-replay kernel.
+                # Refused (unavailable) requests carry weight 0: latency
+                # histograms cover SERVED requests only.
                 hist = chunk_histogram(
                     lat, cn * 2 + cr.astype(jnp.int32),
-                    cv.astype(jnp.float32), telemetry, n,
+                    served.astype(jnp.float32), telemetry, n,
                 )
             ahist = asum = fmeta = fvals = None
             if acfg is not None:
@@ -1033,7 +1225,7 @@ def _simulate(
                 with jax.named_scope("attribution_fold"):
                     ahist = attribution_chunk_hist(
                         comps, cn * 2 + cr.astype(jnp.int32),
-                        cv.astype(jnp.float32), acfg, n,
+                        served.astype(jnp.float32), acfg, n,
                     )
                     asum = jnp.sum(comps, axis=1)
             if fcfg is not None:
@@ -1045,7 +1237,7 @@ def _simulate(
                 # (LEAF_KINDS kind "records").
                 with jax.named_scope("flight_recorder"):
                     jpos = _flight_positions(fcfg, c, daemon_interval)
-                    own = cv[jpos]
+                    own = served[jpos]
                     gpos = c * daemon_interval + jpos
                     gkey = (
                         ck[jpos] + shard_base if shard.active else ck[jpos]
@@ -1092,6 +1284,12 @@ def _simulate(
                     jnp.zeros((STALE_AGE_BINS,), jnp.float32)
                     if routing is None else d_age
                 ),
+                unavailable_reads=zero if fault is None else d_unav_r,
+                unavailable_writes=zero if fault is None else d_unav_w,
+                failovers=zero if fault is None else d_fo,
+                repair_moves=zero if fault is None else d_rep,
+                unreachable_frac=zero if fault is None else d_unreach,
+                wiped_frac=zero if fault is None else d_wiped,
                 attr_hist=ahist,
                 attr_sum=asum,
                 flight_meta=fmeta,
@@ -1101,17 +1299,22 @@ def _simulate(
             None if routing is None
             else (rstate, r_consults, r_fetches, r_mis, r_stale)
         )
+        fcarry = (
+            None if fault is None
+            else (wiped, f_unav_r, f_unav_w, f_fo, f_rep)
+        )
         return (
             store, pstate, busy, lat_sum, hits, reads, repl, drop, evic,
-            cap_evic, peak, rcarry,
+            cap_evic, peak, rcarry, fcarry,
         ), ys
 
     (
         (_, _, busy, lat_sum, hits, reads, repl, drop, evic, cap_evic, peak,
-         rcarry),
+         rcarry, fcarry),
         ys,
     ) = jax.lax.scan(body, init, xs)
     routing_totals = () if rcarry is None else tuple(rcarry[1:])
+    fault_totals = () if fcarry is None else tuple(fcarry[1:])
     if shard.active:
         # One collective round after the scan assembles the global
         # aggregates from the per-shard partial sums (peak and the
@@ -1119,24 +1322,38 @@ def _simulate(
         # were psum'd at the sample point inside the body).
         agg = (
             busy, lat_sum, hits, reads, repl, drop, evic, cap_evic,
-        ) + routing_totals
+        ) + routing_totals + fault_totals
         agg = jax.lax.psum(agg, shard.axis_name)
         busy, lat_sum, hits, reads, repl, drop, evic, cap_evic = agg[:8]
-        routing_totals = agg[8:]
+        routing_totals = agg[8:8 + len(routing_totals)]
+        fault_totals = agg[8 + len(routing_totals):]
         if ys is not None:
             ys = psum_leaves(ys, shard.axis_name)
     makespan_ms = jnp.max(busy)
+    if fault_totals:
+        # Served-request mean: unavailable requests produced no latency, so
+        # they leave the numerator AND the denominator (throughput keeps
+        # dividing the full attempted count — the cluster's offered load).
+        served_r = r - fault_totals[0] - fault_totals[1]
+        mean_lat = lat_sum / jnp.maximum(served_r, 1.0)
+        if not routing_totals:
+            # SimResult is constructed positionally and the routing
+            # counters are a strict prefix of the fault counters — fill
+            # their slots with (traced) zeros when only faults are on.
+            routing_totals = (zero,) * 4
+    else:
+        mean_lat = lat_sum / r
     return (
         r / (makespan_ms / 1000.0),
         hits / jnp.maximum(reads, 1.0),
-        lat_sum / r,
+        mean_lat,
         busy,
         repl,
         drop,
         evic,
         cap_evic,
         peak,
-    ) + routing_totals, ys
+    ) + routing_totals + fault_totals, ys
 
 
 @lru_cache(maxsize=1)
@@ -1386,9 +1603,10 @@ def run_scenario(
         float(evic),
         float(cap_evic),
         np.asarray(peak, dtype=np.float64),
-        # (router_consults, directory_fetches, mis_routes, stale_consults)
-        # — present only when cluster.routing is enabled; the pre-routing
-        # leaf tuple is a strict prefix, so the defaults fill in otherwise.
+        # Routing counters, then fault counters — each optional block is a
+        # strict prefix extension, and the engine zero-fills the routing
+        # slots whenever the fault block is present, so the positional
+        # tail is always length 0, 4, or 8 and the defaults fill the rest.
         *[float(x) for x in routing_totals],
     )
     if telemetry is None:
@@ -1436,6 +1654,9 @@ def _reference_engine(
     pstate = static.init(store, ctx)
     contention = _contention_kwargs(cluster, static.read_mode, daemon_interval)
     routing = _routing_kwargs(cluster, k)
+    num_chunks = (r + daemon_interval - 1) // daemon_interval
+    fault = _fault_kwargs(cluster, num_chunks)
+    sc = _replay_scalars(cluster)
     rstate = None
     history: list = []
     if routing is not None:
@@ -1445,8 +1666,13 @@ def _reference_engine(
             cache_entries=routing["cache_entries"],
             publish_lag_chunks=routing["publish_lag_chunks"],
             active=static.is_active,
+            force_ring=fault is not None,
         )
     r_consults = r_fetches = r_mis = r_stale = 0.0
+    # Fault-run carry: wiped-keys mask + availability/repair counters
+    # (Python floats — the reference engine is the float64 oracle).
+    wiped = None if fault is None else jnp.zeros((k,), bool)
+    unav_r = unav_w = failover_total = repair_total = 0.0
 
     total_lat = np.zeros((n,), dtype=np.float64)
     hits = 0.0
@@ -1465,15 +1691,40 @@ def _reference_engine(
     acfg = None if telemetry is None else telemetry.attribution
     fcfg = None if telemetry is None else telemetry.flight
 
-    num_chunks = (r + daemon_interval - 1) // daemon_interval
     for c in range(num_chunks):
         lo, hi = c * daemon_interval, min((c + 1) * daemon_interval, r)
         keys = trace.keys[lo:hi]
         nodes = trace.nodes[lo:hi]
         is_read = trace.is_read[lo:hi]
+        cv = jnp.ones(keys.shape, bool)
+
+        # Degraded-mode serving state, mirroring the scan body exactly:
+        # with faults off these aliases ARE the pre-fault operands.
+        served = cv
+        hosts_eff = store.hosts
+        avail_c = None
+        f_extra = None
+        if fault is not None:
+            avail_c = fault["avail"][c]
+            crash_c = fault["crash"][c]
+            pre_hosts = store.hosts
+            post_hosts = pre_hosts & ~crash_c[None, :]
+            wiped = wiped | (
+                jnp.any(pre_hosts, axis=-1) & ~jnp.any(post_hosts, axis=-1)
+            )
+            store = store._replace(hosts=post_hosts)
+            f_extra, unavail, failover = fault_extra_ms_ref(
+                store.hosts, keys, nodes, is_read, cv, avail_c, rtt,
+                read_mode=static.read_mode,
+                master=sc["master"],
+                xfer_write_ms=sc["xfer_write_ms"],
+                wiped=wiped,
+            )
+            served = cv & ~unavail
+            hosts_eff = store.hosts & avail_c[None, :]
 
         lat, read_hits = _chunk_latency(
-            store.hosts, keys, nodes, is_read, rtt, cluster, static.read_mode
+            hosts_eff, keys, nodes, is_read, rtt, cluster, static.read_mode
         )
         route = detour_part = fetch_part = None
         if routing is not None:
@@ -1484,8 +1735,17 @@ def _reference_engine(
             # — exactly what the scan's ring buffer holds.
             lag = routing["publish_lag_chunks"]
             if static.is_active:
-                history.append((store.hosts, rstate.ver))
-                pub_hosts, pub_ver = history[max(c - lag, 0)]
+                if fault is not None:
+                    # Fault runs publish through the REAL ring machinery
+                    # (publish_commit below can freeze it while the home
+                    # node is down); the slot arithmetic reproduces the
+                    # history reconstruction exactly when nothing freezes.
+                    pub_hosts, pub_ver = published_view(
+                        rstate, store.hosts, c, publish_lag_chunks=lag
+                    )
+                else:
+                    history.append((store.hosts, rstate.ver))
+                    pub_hosts, pub_ver = history[max(c - lag, 0)]
             else:
                 pub_hosts = store.hosts
                 pub_ver = jnp.zeros((k,), jnp.int32)
@@ -1494,8 +1754,8 @@ def _reference_engine(
             (
                 detour_part, fetch_part, consult, fetchb, staleb, misb,
             ) = routing_extra_split_ref(
-                store.hosts, pub_hosts, ent_cached, fresh, keys, nodes,
-                is_read, jnp.ones(keys.shape, bool), rtt,
+                hosts_eff, pub_hosts, ent_cached, fresh, keys, nodes,
+                is_read, served, rtt,
                 read_mode=static.read_mode, home_node=routing["home_node"],
             )
             route = detour_part + fetch_part
@@ -1505,35 +1765,58 @@ def _reference_engine(
             # Same pre-pass, same elementwise position as the fused engine
             # (reference chunks carry no padding — every row is valid).
             cont_extra, rho = contention_extra_ms_ref(
-                store.hosts, keys, nodes, is_read,
-                jnp.ones(keys.shape, bool), rtt, obj, **contention,
+                hosts_eff, keys, nodes, is_read,
+                served, rtt, obj, **contention,
             )
         extra = cont_extra
         if route is not None:
             # Canonical composition order (routing first, ONE f32 add).
             extra = route if extra is None else route + extra
+        if f_extra is not None:
+            # Fault surcharge composes FIRST — same order as the scan body.
+            extra = f_extra if extra is None else f_extra + extra
         if extra is not None:
             lat = lat + extra
+        if fault is not None:
+            # The scan body's validity mask: refused requests cost nothing.
+            lat = jnp.where(served, lat, 0.0)
         comps = None
         if acfg is not None or fcfg is not None:
             # Same component oracle as the fused engine, on the same frozen
             # map and pre-pass outputs (reference chunks have no padding).
             comps = chunk_components_ref(
-                store.hosts, keys, nodes, is_read, rtt,
+                hosts_eff, keys, nodes, is_read, rtt,
                 read_mode=static.read_mode,
                 contention_ms=cont_extra,
                 routing_detour_ms=detour_part,
                 directory_fetch_ms=fetch_part,
-                **_replay_scalars(cluster),
+                avail=avail_c,
+                **sc,
             )
+            if fault is not None:
+                comps = jnp.where(served[None, :], comps, 0.0)
         busy = jnp.zeros((n,), jnp.float32).at[nodes].add(lat)
         total_lat += np.asarray(busy, dtype=np.float64)
         chunk_lat = float(jnp.sum(lat))
-        chunk_hits = float(jnp.sum(read_hits))
-        chunk_reads = float(jnp.sum(is_read))
+        chunk_hits = float(jnp.sum(read_hits & served))
+        chunk_reads = float(jnp.sum(is_read & served))
         lat_sum += chunk_lat
         hits += chunk_hits
         reads += chunk_reads
+        c_unav_r = c_unav_w = c_fo = c_rep = 0.0
+        c_unreach = c_wiped = 0.0
+        if fault is not None:
+            c_unav_r = float(jnp.sum(unavail & is_read))
+            c_unav_w = float(jnp.sum(unavail & ~is_read))
+            c_fo = float(jnp.sum(failover))
+            unav_r += c_unav_r
+            unav_w += c_unav_w
+            failover_total += c_fo
+            unreach = (
+                jnp.any(store.hosts, axis=-1) & ~jnp.any(hosts_eff, axis=-1)
+            ) | wiped
+            c_unreach = float(jnp.sum(unreach)) / k
+            c_wiped = float(jnp.sum(wiped)) / k
 
         # Per-chunk occupancy sample on the frozen map, for every policy.
         occ = np.asarray(_node_occupancy(store.hosts, obj), np.float64)
@@ -1559,12 +1842,19 @@ def _reference_engine(
             )
         chunk_moves = (0.0, 0.0, 0.0, 0.0)
         if static.is_active:
-            # Algorithm 1 bookkeeping: log usage heuristics per request.
-            store = record_accesses(store, keys, nodes, now=c)
+            # Algorithm 1 bookkeeping: log usage heuristics per request
+            # (down-origin users are offline and leave no demand signal).
+            store = record_accesses(
+                store, keys, nodes, now=c,
+                valid=None if fault is None else avail_c[nodes],
+            )
             prev_hosts = store.hosts
             if c % static.period == 0:
+                step_ctx = (
+                    ctx if fault is None else ctx._replace(avail=avail_c)
+                )
                 plan, pstate, store = policy_sweep(
-                    static, pstate, store, c, ctx
+                    static, pstate, store, c, step_ctx
                 )
                 chunk_moves = (
                     float(jnp.sum(plan.to_add)),
@@ -1576,16 +1866,40 @@ def _reference_engine(
                 drop_moves += chunk_moves[1]
                 evictions += chunk_moves[2]
                 cap_evictions += chunk_moves[3]
-            if routing is not None:
-                # Versioned publish — same bump the fused engine applies
-                # after its masked policy step (no-op when nothing moved).
-                changed = publish_mask(prev_hosts, store.hosts)
-                rstate = rstate._replace(
-                    ver=rstate.ver + changed.astype(jnp.int32)
+            if fault is not None:
+                # Re-replication audit + wiped-key healing, mirroring the
+                # scan body's repair accounting exactly.
+                added = store.hosts & ~prev_hosts
+                lost_live = jnp.any(prev_hosts, axis=-1) & ~jnp.any(
+                    prev_hosts & avail_c[None, :], axis=-1
                 )
+                c_rep = float(
+                    jnp.sum(added & (wiped | lost_live)[:, None])
+                )
+                repair_total += c_rep
+                wiped = wiped & ~jnp.any(
+                    store.hosts & avail_c[None, :], axis=-1
+                )
+            if routing is not None:
+                changed = publish_mask(prev_hosts, store.hosts)
+                if fault is not None:
+                    # The real publish pipeline: versions always bump, the
+                    # ring slot freezes while the directory home is down.
+                    rstate = publish_commit(
+                        rstate, changed, store.hosts, c,
+                        publish_lag_chunks=routing["publish_lag_chunks"],
+                        daemon_up=avail_c[routing["home_node"]],
+                    )
+                else:
+                    # Versioned publish — same bump the fused engine
+                    # applies after its masked policy step.
+                    rstate = rstate._replace(
+                        ver=rstate.ver + changed.astype(jnp.int32)
+                    )
         if telemetry is not None:
             group = nodes * 2 + is_read.astype(jnp.int32)
-            w = jnp.ones(lat.shape, jnp.float32)
+            # Refused requests carry weight 0 (identical ones when off).
+            w = served.astype(jnp.float32)
             ahist = asum = fmeta = fvals = None
             if acfg is not None:
                 ahist = np.asarray(
@@ -1601,7 +1915,8 @@ def _reference_engine(
                 jpos = np.asarray(
                     _flight_positions(fcfg, c, daemon_interval)
                 )
-                own = jpos < b
+                jc0 = np.minimum(jpos, b - 1)
+                own = (jpos < b) & np.asarray(served)[jc0]
                 jc = np.minimum(jpos, b - 1)
                 mi = lambda v: np.where(own, v, 0).astype(np.int64)
                 router_np = (
@@ -1630,7 +1945,10 @@ def _reference_engine(
                 hits=chunk_hits,
                 reads=chunk_reads,
                 lat_sum=chunk_lat,
-                count=float(lat.shape[0]),
+                count=(
+                    float(lat.shape[0]) if fault is None
+                    else float(jnp.sum(served))
+                ),
                 adds=chunk_moves[0],
                 drops=chunk_moves[1],
                 expiry_evictions=chunk_moves[2],
@@ -1645,6 +1963,12 @@ def _reference_engine(
                 mis_routes=chunk_routing[2],
                 stale_consults=chunk_routing[3],
                 stale_age_hist=age_hist,
+                unavailable_reads=c_unav_r,
+                unavailable_writes=c_unav_w,
+                failovers=c_fo,
+                repair_moves=c_rep,
+                unreachable_frac=c_unreach,
+                wiped_frac=c_wiped,
                 attr_hist=ahist,
                 attr_sum=asum,
                 flight_meta=fmeta,
@@ -1655,10 +1979,11 @@ def _reference_engine(
                 raw_comps.append(np.asarray(comps, np.float64))
 
     makespan_ms = float(total_lat.max())
+    served_r = r if fault is None else max(r - unav_r - unav_w, 1.0)
     result = SimResult(
         throughput_ops_s=r / (makespan_ms / 1000.0),
         hit_rate=hits / max(reads, 1.0),
-        mean_latency_ms=lat_sum / r,
+        mean_latency_ms=lat_sum / served_r,
         node_busy_ms=total_lat,
         replication_moves=repl_moves,
         deletion_moves=drop_moves,
@@ -1669,6 +1994,10 @@ def _reference_engine(
         directory_fetches=r_fetches,
         mis_routes=r_mis,
         stale_consults=r_stale,
+        unavailable_reads=unav_r,
+        unavailable_writes=unav_w,
+        failovers=failover_total,
+        repair_moves=repair_total,
     )
     if telemetry is None:
         return result, None, None, None

@@ -264,6 +264,17 @@ class TelemetryLeaves(NamedTuple):
     mis_routes: Array | float = 0.0  # [C] consults detoured by staleness
     stale_consults: Array | float = 0.0  # [C] consults on stale entries
     stale_age_hist: Array | float = 0.0  # [C, STALE_AGE_BINS] version-gap ages
+    # Failure-injection counters/series (FaultConfig — repro.kvsim.faults);
+    # all zeros when faults are off. The first four are plain additive
+    # counters; the two fractions are *global* point samples (the sharded
+    # engine psums their key counts at the sample point and divides by the
+    # global keyspace before emitting), so they merge by averaging.
+    unavailable_reads: Array | float = 0.0  # [C] reads denied service
+    unavailable_writes: Array | float = 0.0  # [C] writes denied service
+    failovers: Array | float = 0.0  # [C] writes relayed via a failover master
+    repair_moves: Array | float = 0.0  # [C] replicas re-seeded after loss
+    unreachable_frac: Array | float = 0.0  # [C] frac keys w/ no live replica
+    wiped_frac: Array | float = 0.0  # [C] frac keys w/ no replica anywhere
     # Latency-provenance leaves (AttributionConfig / FlightRecorderConfig —
     # None when the sub-layer is off: a None field is an EMPTY pytree node,
     # so the disabled scan emits no extra ys and the compiled program stays
@@ -308,6 +319,12 @@ LEAF_KINDS = {
     "mis_routes": "sum",
     "stale_consults": "sum",
     "stale_age_hist": "sum",
+    "unavailable_reads": "sum",
+    "unavailable_writes": "sum",
+    "failovers": "sum",
+    "repair_moves": "sum",
+    "unreachable_frac": "mean",
+    "wiped_frac": "mean",
     "attr_hist": "sum",
     "attr_sum": "sum",
     "flight_meta": "records",
@@ -601,6 +618,18 @@ class SimTrace(NamedTuple):
     mis_routes: np.ndarray | None = None  # [C]
     stale_consults: np.ndarray | None = None  # [C]
     stale_age_hist: np.ndarray | None = None  # [C, STALE_AGE_BINS]
+    # Failure-injection series (all zeros when the cluster has no enabled
+    # FaultConfig): denied reads/writes, failover-mastered writes, replicas
+    # re-seeded after loss, the fraction of keys with no *live* replica,
+    # the fraction with no surviving replica at all, and the hit rate with
+    # unavailable reads counted as misses (== hit_rate when faults are off).
+    unavailable_reads: np.ndarray | None = None  # [C]
+    unavailable_writes: np.ndarray | None = None  # [C]
+    failovers: np.ndarray | None = None  # [C]
+    repair_moves: np.ndarray | None = None  # [C]
+    unreachable_frac: np.ndarray | None = None  # [C]
+    wiped_frac: np.ndarray | None = None  # [C]
+    effective_hit_rate: np.ndarray | None = None  # [C]
     # Latency-provenance views (populated only with an enabled
     # AttributionConfig / FlightRecorderConfig on the telemetry config).
     attr_edges: np.ndarray | None = None  # [Ba+1] component bin edges (ms)
@@ -765,6 +794,43 @@ class SimTrace(NamedTuple):
         detoured by a stale ownership view (0 where nothing consulted)."""
         return self.mis_routes / np.maximum(self.router_consults, 1.0)
 
+    # -- availability / failure diagnostics ---------------------------------
+
+    @property
+    def availability(self) -> np.ndarray:
+        """``[C]`` fraction of each chunk's *attempted* requests that were
+        served (1.0 where nothing was attempted — and everywhere when
+        faults are off, since the unavailable counters are then zero)."""
+        unav = np.asarray(self.unavailable_reads, np.float64) + np.asarray(
+            self.unavailable_writes, np.float64
+        )
+        attempted = self.requests + unav
+        return np.where(
+            attempted > 0, self.requests / np.maximum(attempted, 1.0), 1.0
+        )
+
+    def recovery_chunks(
+        self, outage_start: int, target_frac: float = 0.95
+    ) -> int:
+        """Chunks from ``outage_start`` until the *effective* hit rate
+        (unavailable reads count as misses) first recovers to
+        ``target_frac`` of its pre-outage steady state —
+        ``convergence_chunk`` re-aimed at the post-recovery frontier, the
+        re-convergence yardstick for membership change. The baseline is
+        the MEDIAN over the pre-outage chunks, not the mean: an adaptive
+        policy's cold-start chunks (hit rate near zero while it digs out
+        of the initial placement) would otherwise drag a mean baseline
+        low enough to make recovery trivially instant. Returns -1 if the
+        trace ends before recovery."""
+        eff = self.effective_hit_rate
+        baseline = (
+            float(np.median(eff[:outage_start])) if outage_start > 0 else 1.0
+        )
+        ok = eff[outage_start:] >= target_frac * baseline
+        if not ok.any():
+            return -1
+        return int(np.argmax(ok))
+
     # -- convergence / oscillation diagnostics ------------------------------
 
     def convergence_chunk(self, eps: float = 0.01) -> int:
@@ -836,4 +902,16 @@ def build_trace(
         mis_routes=np.asarray(leaves.mis_routes, np.float64),
         stale_consults=np.asarray(leaves.stale_consults, np.float64),
         stale_age_hist=np.asarray(leaves.stale_age_hist, np.float64),
+        unavailable_reads=np.asarray(leaves.unavailable_reads, np.float64),
+        unavailable_writes=np.asarray(leaves.unavailable_writes, np.float64),
+        failovers=np.asarray(leaves.failovers, np.float64),
+        repair_moves=np.asarray(leaves.repair_moves, np.float64),
+        unreachable_frac=np.asarray(leaves.unreachable_frac, np.float64),
+        wiped_frac=np.asarray(leaves.wiped_frac, np.float64),
+        effective_hit_rate=(
+            np.asarray(leaves.hits, np.float64)
+            / np.maximum(
+                reads + np.asarray(leaves.unavailable_reads, np.float64), 1.0
+            )
+        ),
     )
